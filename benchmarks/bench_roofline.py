@@ -1,0 +1,53 @@
+"""Roofline table emitter: reads the dry-run JSON artifacts and prints the
+per-cell three-term roofline (EXPERIMENTS.md section source)."""
+import glob
+import json
+import os
+
+RESULTS = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def load_cells(mesh="16x16"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            c = json.load(f)
+        if c.get("mesh") == mesh:
+            cells.append(c)
+    return cells
+
+
+def dominant(terms):
+    return max(terms, key=lambda k: terms[k])
+
+
+def run():
+    rows = []
+    for label, rdir in (("baseline", RESULTS),
+                        ("optimized", RESULTS + "_opt")):
+        cells = []
+        for path in sorted(glob.glob(os.path.join(rdir, "*.json"))):
+            with open(path) as f:
+                c = json.load(f)
+            if c.get("ok") and c.get("mesh") == "16x16":
+                cells.append(c)
+        if not cells:
+            rows.append((f"roofline/{label}/no_artifacts", 0,
+                         "run: python -m repro.launch.dryrun --all "
+                         "--both-meshes"))
+            continue
+        for c in cells:
+            t = {k: v for k, v in c["terms"].items()
+                 if k in ("compute_s", "memory_s", "collective_s")}
+            dom = dominant(t)
+            step_s = max(t.values())
+            rows.append((f"roofline/{label}/{c['arch']}/{c['shape']}", 0,
+                         f"compute={t['compute_s']*1e3:.1f}ms "
+                         f"memory={t['memory_s']*1e3:.1f}ms "
+                         f"collective={t['collective_s']*1e3:.1f}ms "
+                         f"dom={dom.split('_')[0]} "
+                         f"roofline_frac={t['compute_s']/step_s:.3f} "
+                         f"useful_flops_frac="
+                         f"{c['model_flops']/256/max(c['flops'],1):.2f}"
+                         if step_s else f"tiny cell"))
+    return rows

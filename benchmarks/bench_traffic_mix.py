@@ -1,0 +1,18 @@
+"""Fig. 3 — memory-traffic breakdown per workload."""
+import time
+
+from repro.memsim import WorkloadSpec, generate, traffic_breakdown
+
+
+def run():
+    rows = []
+    for wl in ("fork", "fileCopy20", "fileCopy40", "fileCopy60"):
+        t0 = time.perf_counter()
+        reqs = generate(WorkloadSpec(wl, n_requests=1500, seed=0))
+        mix = traffic_breakdown(reqs)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"traffic_mix/{wl}", us,
+                     "inter=%.2f intra=%.2f init=%.2f regular=%.2f" % (
+                         mix["inter_bank_copy"], mix["intra_bank_copy"],
+                         mix["init"], mix["regular"])))
+    return rows

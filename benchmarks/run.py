@@ -1,0 +1,43 @@
+"""Benchmark harness — one module per paper table/figure + the TPU
+adaptation and roofline reports.  Prints ``name,us_per_call,derived`` CSV."""
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_ablations, bench_energy, bench_freq_scaling,
+                        bench_ipc, bench_nom_a2a, bench_roofline,
+                        bench_slot_alloc, bench_traffic_mix,
+                        bench_tsv_conflict)
+
+ALL = [
+    ("traffic_mix(Fig3)", bench_traffic_mix),
+    ("ipc(Fig4)", bench_ipc),
+    ("freq_scaling", bench_freq_scaling),
+    ("tsv_conflict", bench_tsv_conflict),
+    ("energy", bench_energy),
+    ("slot_alloc", bench_slot_alloc),
+    ("nom_a2a", bench_nom_a2a),
+    ("ablations", bench_ablations),
+    ("roofline", bench_roofline),
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    t_start = time.time()
+    for label, mod in ALL:
+        if only and only not in label:
+            continue
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:  # keep the harness going
+            traceback.print_exc()
+            print(f"{label},0,ERROR {type(e).__name__}: {e}")
+        sys.stdout.flush()
+    print(f"# total {time.time() - t_start:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

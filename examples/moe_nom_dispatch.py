@@ -1,0 +1,45 @@
+"""The paper's technique end-to-end: MoE expert-parallel token dispatch via
+NOM-scheduled ppermute rounds vs the opaque XLA all_to_all, on 8 fake
+devices (this example MUST set XLA_FLAGS before importing jax).
+
+Run:  PYTHONPATH=src python examples/moe_nom_dispatch.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np          # noqa: E402
+import jax                  # noqa: E402
+import jax.numpy as jnp     # noqa: E402
+
+from repro.core.nom_collectives import a2a_link_chunks  # noqa: E402
+from repro.models.moe import MoE, MoEConfig             # noqa: E402
+
+
+def main():
+    mesh = jax.make_mesh((1, 8), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    jax.sharding.set_mesh(mesh)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 64, 128), jnp.float32)
+
+    outs = {}
+    for dispatch in ("nom", "xla", "einsum"):
+        cfg = MoEConfig(d_model=128, d_ff=256, n_experts=16, top_k=2,
+                        dispatch=dispatch, capacity_factor=4.0)
+        moe = MoE(cfg)
+        params = moe.init(key)
+        y, aux = jax.jit(moe.apply)(params, x)
+        outs[dispatch] = np.asarray(y)
+        print(f"dispatch={dispatch:7s} |y|={np.abs(outs[dispatch]).mean():.4f} "
+              f"aux={float(aux):.4f}")
+    print("nom == xla:", np.allclose(outs["nom"], outs["xla"], atol=1e-5))
+    print("nom ~= einsum:", np.allclose(outs["nom"], outs["einsum"],
+                                        atol=1e-4))
+    c = a2a_link_chunks(8)
+    print(f"\nper-link chunks for an 8-ring all-to-all: "
+          f"NOM schedule {c['nom_right']:.0f}/dir vs bus-serialized "
+          f"{c['bus_serialized']:.0f} — the paper's Fig. 4 gap, on ICI")
+
+
+if __name__ == "__main__":
+    main()

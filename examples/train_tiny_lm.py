@@ -1,0 +1,65 @@
+"""End-to-end training driver: data pipeline -> sharded train step ->
+fault-tolerant loop with checkpoints.
+
+Presets:
+  tiny  (default) — ~3M params, 60 steps: finishes in ~a minute on CPU.
+  100m            — ~100M-param qwen-style decoder, few hundred steps:
+                    the assignment's end-to-end shape (CPU: hours; the
+                    production path is the same code under a real mesh).
+
+Run:  PYTHONPATH=src python examples/train_tiny_lm.py [--preset 100m]
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import ArchConfig, LayerKind
+from repro.data import DataConfig
+from repro.models import count_params, make_model
+from repro.optim.adamw import AdamWConfig
+from repro.train import LoopConfig, TrainState, make_train_step, train_loop
+
+
+def preset_cfg(name: str) -> tuple[ArchConfig, int, int, int]:
+    if name == "100m":
+        cfg = ArchConfig(
+            name="repro-100m", family="dense", n_layers=12, d_model=768,
+            n_heads=12, n_kv=12, d_ff=3072, vocab=32_000,
+            pattern=(LayerKind("attn"),), tie_embeddings=True,
+            max_seq=1024, sub_quadratic=False)
+        return cfg, 300, 8, 512       # steps, batch, seq
+    cfg = get_config("qwen1.5-4b", smoke=True)
+    return cfg, 60, 8, 64
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "100m"])
+    ap.add_argument("--ckpt", default="/tmp/repro_example_ckpt")
+    args = ap.parse_args()
+
+    mesh = jax.make_mesh((len(jax.devices()), 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    jax.sharding.set_mesh(mesh)
+
+    cfg, steps, batch, seq = preset_cfg(args.preset)
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"arch={cfg.name} params={count_params(params):,}")
+    state = TrainState.create(params)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=steps)
+    step = jax.jit(make_train_step(model, cfg, opt, cast_bf16_gather=True),
+                   donate_argnums=(0,))
+    data = DataConfig(vocab=cfg.vocab, batch=batch, seq=seq, seed=0)
+    loop = LoopConfig(total_steps=steps, ckpt_every=max(steps // 3, 10),
+                      ckpt_dir=args.ckpt, log_every=10)
+    state, hist = train_loop(step, state, data, loop)
+    print(f"final loss {hist[-1]['loss']:.4f} "
+          f"(first {hist[0]['loss']:.4f}); "
+          f"stragglers flagged: {sum(h['straggler'] for h in hist)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from .checkpoint import latest_step, prune, restore, save
+from .reshard import reshard_plan
+
+__all__ = ["latest_step", "prune", "restore", "save", "reshard_plan"]

@@ -1,0 +1,71 @@
+"""Slot-bitvector math for TDM circuit switching.
+
+The paper's PE-matrix accelerator propagates an n-bit *busy* vector along
+all shortest paths: bit j == 1 means "a circuit using slot j at this router
+is infeasible".  The two primitive operations are:
+
+* ``rotate_right`` by one (a circuit using slot j upstream uses slot j+1 at
+  the current router, so upstream-indexed bits shift right to stay aligned
+  with the current router's slot index), and
+* bitwise OR with a port's occupancy row (mark busy slots).
+
+Vectors are packed into uint32 (windows up to 32 slots; the paper uses 16).
+Both jnp (trace-safe) and numpy variants are provided: the search runs in
+JAX (the "hardware accelerator"), the CCU's trace-back runs host-side.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+UINT = jnp.uint32
+MAX_SLOTS = 32
+
+
+def full_mask(n_slots: int) -> int:
+    """All-busy mask for an n-slot window."""
+    if not (0 < n_slots <= MAX_SLOTS):
+        raise ValueError(f"n_slots must be in (0, {MAX_SLOTS}], got {n_slots}")
+    return (1 << n_slots) - 1
+
+
+def rotr(v, n_slots: int):
+    """Rotate an n-slot busy-vector right by one (jnp, element-wise).
+
+    Slot j at the upstream router corresponds to slot (j+1) mod n at the
+    current router; a right rotation re-indexes upstream bits to the current
+    router's slot numbering.
+    """
+    v = jnp.asarray(v, UINT)
+    mask = jnp.asarray(full_mask(n_slots), UINT)
+    one = jnp.asarray(1, UINT)
+    hi = jnp.asarray(n_slots - 1, UINT)
+    return ((v << one) | (v >> hi)) & mask
+
+
+def rotr_np(v, n_slots: int):
+    """numpy twin of :func:`rotr` (host-side trace-back)."""
+    v = np.asarray(v, np.uint32)
+    mask = np.uint32(full_mask(n_slots))
+    return ((v << np.uint32(1)) | (v >> np.uint32(n_slots - 1))) & mask
+
+
+def rotl_np(v, n_slots: int):
+    """Rotate left by one — inverse of :func:`rotr_np`."""
+    v = np.asarray(v, np.uint32)
+    mask = np.uint32(full_mask(n_slots))
+    return ((v >> np.uint32(1)) | (v << np.uint32(n_slots - 1))) & mask
+
+
+def bit_is_free(vec: int, slot: int) -> bool:
+    """True iff `slot` is available (bit clear) in busy-vector `vec`."""
+    return (int(vec) >> int(slot)) & 1 == 0
+
+
+def free_slots(vec: int, n_slots: int) -> list[int]:
+    """All available slot indices in a busy-vector."""
+    return [s for s in range(n_slots) if bit_is_free(vec, s)]
+
+
+def set_bit(vec: int, slot: int) -> int:
+    return int(vec) | (1 << int(slot))

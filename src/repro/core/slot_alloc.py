@@ -1,0 +1,403 @@
+"""TDM slot allocation — the paper's core algorithm (Section 2.1).
+
+The CCU services copy requests by finding a *circuit*: a sequence of
+increasingly-numbered TDM slots along a shortest path, so data advances one
+hop per cycle with no buffering/arbitration.  The paper implements the
+search with a matrix of PEs (one per router) that propagate an n-bit busy
+vector along all shortest paths: at each PE the vector is OR-ed with the
+output-port occupancy and rotated right (slot j upstream -> slot j+1 here);
+zero bits surviving at the destination are feasible circuits.
+
+Implementation layout (mirrors the hardware split):
+
+* :func:`wavefront_search` — the PE-matrix accelerator, vectorized JAX
+  (``vmap``-able over a batch of requests; the Pallas TPU kernel in
+  ``repro.kernels.slot_alloc`` implements the same contract).
+* :class:`SlotTable` — the CCU's occupancy bookkeeping (host-side numpy):
+  per (router, port, slot) reservation expiry in TDM-window units.
+* :func:`traceback` — walks the converged vectors backwards to extract the
+  hop list, as the paper's "tracing back the path towards the source PE".
+
+Slot/cycle accounting (paper Fig. 2): a circuit of distance D injected at
+source slot ``s`` uses slot ``s+i (mod n)`` at the i-th router on the path
+and ejects through the destination's LOCAL port at slot ``s+D (mod n)`` —
+e.g. 5 routers / slots 3..7 for the A->B example.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bitvec import UINT, bit_is_free, full_mask, rotr, rotr_np
+from .topology import Mesh3D, N_PORTS, PORT_LOCAL, port_for
+
+_STRIDES = ("X", "XY")  # doc only
+
+
+# ---------------------------------------------------------------------------
+# The PE-matrix search (pure JAX; jit + vmap friendly)
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("mesh", "n_slots"))
+def wavefront_search(occ: jax.Array, src: jax.Array, dst: jax.Array,
+                     init_vec: jax.Array, *, mesh: Mesh3D,
+                     n_slots: int) -> jax.Array:
+    """Propagate busy-vectors from ``src`` to every node of the shortest-path
+    lattice toward ``dst``.
+
+    Args:
+      occ: (n_nodes, N_PORTS) uint32 — busy mask per output port.
+      src, dst: scalar int32 node ids (traced; may come from a vmapped batch).
+      init_vec: uint32 scalar — initial busy vector at the source (0 for a
+        fresh search; non-zero when composing multi-phase NoM-Light routes).
+
+    Returns:
+      (n_nodes,) uint32: converged busy vector per node, indexed by the slot
+      at which that node's *output* crossbar would be used.  Out-of-lattice
+      nodes hold the all-busy mask.  ``vec[dst] | occ[dst, LOCAL]`` is the
+      availability vector of arrival slots.
+    """
+    n = mesh.n_nodes
+    fm = jnp.asarray(full_mask(n_slots), UINT)
+    coords = jnp.asarray(mesh.coord_array)          # (n, 3)
+    src_c = coords[src]                             # (3,)
+    dst_c = coords[dst]
+    sign = jnp.sign(dst_c - src_c)                  # (3,) in {-1,0,1}
+    lo = jnp.minimum(src_c, dst_c)
+    hi = jnp.maximum(src_c, dst_c)
+    in_box = jnp.all((coords >= lo) & (coords <= hi), axis=1)  # (n,)
+
+    strides = jnp.asarray([1, mesh.X, mesh.X * mesh.Y], jnp.int32)
+    node_ids = jnp.arange(n, dtype=jnp.int32)
+
+    # Per-dimension upstream node id and validity.
+    # upstream_d(v) = v - sign_d * stride_d ; valid iff we have moved >=1 step
+    # in dimension d away from the source and d is a travel dimension.
+    ups = node_ids[None, :] - sign[:, None] * strides[:, None]      # (3, n)
+    moved = coords.T != src_c[:, None]                              # (3, n)
+    valid = in_box[None, :] & moved & (sign[:, None] != 0)          # (3, n)
+    ups = jnp.clip(ups, 0, n - 1)
+
+    # Output port used at the upstream node for a hop along dim d, dir sign_d.
+    ports = jnp.where(sign < 0, 2 * jnp.arange(3) + 1, 2 * jnp.arange(3))
+
+    vec0 = jnp.full((n,), fm, UINT).at[src].set(jnp.asarray(init_vec, UINT))
+    is_src = node_ids == src
+
+    def body(_, vec):
+        def cand(d):
+            up = ups[d]
+            v = vec[up] | occ[up, ports[d]]
+            v = rotr(v, n_slots)
+            return jnp.where(valid[d], v, fm)
+        new = cand(0) & cand(1) & cand(2)
+        # Source keeps its injected vector; out-of-lattice nodes stay busy.
+        return jnp.where(in_box & ~is_src, new, vec0)
+
+    # The lattice is a DAG of depth <= max_dist, so max_dist sweeps converge.
+    vec = jax.lax.fori_loop(0, mesh.max_dist, body, vec0)
+    return vec
+
+
+def wavefront_search_batch(occ, srcs, dsts, init_vecs, *, mesh, n_slots):
+    """vmap over a batch of (src, dst) requests sharing one occupancy state.
+
+    This is the paper's "explore all possible paths ... in parallel" taken one
+    step further: concurrent request *searches* also run in parallel (the CCU
+    still reserves sequentially, in FIFO order).
+    """
+    fn = partial(wavefront_search, mesh=mesh, n_slots=n_slots)
+    return jax.vmap(lambda s, d, iv: fn(occ, s, d, iv))(srcs, dsts, init_vecs)
+
+
+# ---------------------------------------------------------------------------
+# Host-side CCU bookkeeping
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Circuit:
+    """A reserved circuit: ``hops[i] = (node, out_port, slot)`` in forward
+    order; the last hop is (dst, PORT_LOCAL, arrival_slot)."""
+    src: int
+    dst: int
+    start_cycle: int          # absolute cycle of source injection
+    n_windows: int            # TDM windows the reservation persists
+    hops: list[tuple[int, int, int]]
+    slots_per_window: int = 1
+    uses_bus: bool = False    # NoM-Light vertical bus hop present
+    bus_column: int = -1      # (x, y) column whose TSV the bus hop rides
+    distance: int = 0         # hops traversed by one beat (src -> dst)
+
+    @property
+    def arrival_cycle(self) -> int:
+        return self.start_cycle + self.distance
+
+    @property
+    def end_cycle(self) -> int:
+        """Cycle at which the last beat has arrived at the destination."""
+        return self.arrival_cycle + (self.n_windows - 1) * self._n_slots_hint
+
+    _n_slots_hint: int = 16
+
+
+class SlotTable:
+    """Occupancy state of every router port (and NoM-Light vertical buses).
+
+    ``expiry[node, port, slot]`` is the TDM-window index until which the slot
+    is reserved (exclusive).  A slot is busy for a search anchored at window
+    ``w`` iff ``expiry > w`` — conservative for circuits that would start
+    after an existing reservation expires, which matches the paper's CCU (it
+    services requests in FIFO order against current state).
+    """
+
+    def __init__(self, mesh: Mesh3D, n_slots: int = 16):
+        self.mesh = mesh
+        self.n_slots = n_slots
+        self.expiry = np.zeros((mesh.n_nodes, N_PORTS, n_slots), np.int64)
+        # One vertical bus resource per (x, y) column (NoM-Light).
+        self.bus_expiry = np.zeros((mesh.X * mesh.Y, n_slots), np.int64)
+
+    # -- masks ---------------------------------------------------------------
+    def busy_masks(self, window: int) -> np.ndarray:
+        """(n_nodes, N_PORTS) uint32 busy masks as of TDM window `window`."""
+        busy = self.expiry > window
+        weights = (np.uint32(1) << np.arange(self.n_slots, dtype=np.uint32))
+        return (busy * weights).sum(axis=2).astype(np.uint32)
+
+    def bus_busy_masks(self, window: int) -> np.ndarray:
+        busy = self.bus_expiry > window
+        weights = (np.uint32(1) << np.arange(self.n_slots, dtype=np.uint32))
+        return (busy * weights).sum(axis=1).astype(np.uint32)
+
+    # -- reservation ----------------------------------------------------------
+    def reserve(self, circuit: Circuit, window: int) -> None:
+        until = window + circuit.n_windows
+        for node, port, slot in circuit.hops:
+            assert self.expiry[node, port, slot] <= window, "double booking"
+            self.expiry[node, port, slot] = until
+
+    def reserve_bus(self, column: int, slot: int, window: int,
+                    n_windows: int) -> None:
+        assert self.bus_expiry[column, slot] <= window, "bus double booking"
+        self.bus_expiry[column, slot] = window + n_windows
+
+    def utilization(self, window: int) -> float:
+        return float((self.expiry > window).mean())
+
+
+# ---------------------------------------------------------------------------
+# Trace-back (paper: "reserved by tracing back the path towards the source")
+# ---------------------------------------------------------------------------
+def traceback(vec: np.ndarray, occ: np.ndarray, mesh: Mesh3D, n_slots: int,
+              src: int, dst: int, arrival_slot: int) -> list[tuple[int, int, int]]:
+    """Extract one feasible hop list ending at ``dst`` on ``arrival_slot``.
+
+    ``vec`` is the converged busy-vector array from :func:`wavefront_search`
+    (numpy), ``occ`` the (n_nodes, N_PORTS) busy masks used for the search.
+    """
+    coords = mesh.coord_array
+    sx, sy, sz = coords[src]
+    hops: list[tuple[int, int, int]] = [(dst, PORT_LOCAL, arrival_slot)]
+    v, j = int(dst), int(arrival_slot)
+    strides = (1, mesh.X, mesh.X * mesh.Y)
+    sign = np.sign(coords[dst] - coords[src])
+    guard = 0
+    while v != src:
+        guard += 1
+        if guard > mesh.max_dist + 2:
+            raise RuntimeError("traceback failed to reach source")
+        jp = (j - 1) % n_slots
+        placed = False
+        for d in range(3):
+            if sign[d] == 0 or coords[v][d] == coords[src][d]:
+                continue
+            u = v - int(sign[d]) * strides[d]
+            p = port_for(d, int(sign[d]))
+            if bit_is_free(int(vec[u]) | int(occ[u, p]), jp):
+                hops.append((u, p, jp))
+                v, j = u, jp
+                placed = True
+                break
+        if not placed:
+            raise RuntimeError(
+                f"no free upstream at node {v} slot {j} (inconsistent search)")
+    hops.reverse()
+    return hops
+
+
+# ---------------------------------------------------------------------------
+# Full allocation: search + slot choice + trace-back + reserve
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class AllocResult:
+    circuit: Circuit | None
+    searched_cycle: int
+
+
+class TdmAllocator:
+    """The CCU's allocation pipeline for the *full 3D mesh* NoM.
+
+    ``allocate`` implements the paper's 3-cycle setup: the request picked at
+    cycle t searches at t (1 cycle), programs slot tables (1 cycle), issues
+    the read (1 cycle), so the earliest injection is t+3.
+    """
+
+    def __init__(self, mesh: Mesh3D, n_slots: int = 16,
+                 link_bytes: int = 8, use_pallas: bool = False):
+        self.mesh = mesh
+        self.n_slots = n_slots
+        self.link_bytes = link_bytes  # 64-bit links => 8 bytes/slot-cycle
+        self.table = SlotTable(mesh, n_slots)
+        self._search = partial(wavefront_search, mesh=mesh, n_slots=n_slots)
+        if use_pallas:  # pragma: no cover - exercised in kernel tests
+            from repro.kernels.slot_alloc import ops as _ops
+            self._search = partial(_ops.wavefront_search_pallas, mesh=mesh,
+                                   n_slots=n_slots)
+
+    def n_windows_for(self, nbytes: int, slots: int = 1) -> int:
+        per_window = self.link_bytes * slots
+        return max(1, -(-nbytes // per_window))
+
+    def allocate(self, src: int, dst: int, nbytes: int, cycle: int,
+                 max_extra_slots: int = 0) -> AllocResult:
+        """Find + reserve the earliest circuit for a copy of ``nbytes``.
+
+        Returns AllocResult with circuit=None if the lattice is fully busy
+        (caller retries next cycle, as the CCU would)."""
+        t_ready = cycle + 3                       # paper's 3-cycle setup
+        window = t_ready // self.n_slots
+        occ = self.table.busy_masks(window)
+        vec = np.asarray(self._search(jnp.asarray(occ), jnp.int32(src),
+                                      jnp.int32(dst), jnp.uint32(0)))
+        avail = int(vec[dst]) | int(occ[dst, PORT_LOCAL])
+        dist = self.mesh.manhattan(src, dst)
+        best = None  # (start_cycle, arrival_slot)
+        for a in range(self.n_slots):
+            if not bit_is_free(avail, a):
+                continue
+            s = (a - dist) % self.n_slots
+            # earliest injection cycle >= t_ready with cycle % n == s
+            c = t_ready + ((s - t_ready) % self.n_slots)
+            if best is None or c < best[0]:
+                best = (c, a)
+        if best is None:
+            return AllocResult(None, cycle)
+        start_cycle, a = best
+        hops = traceback(vec, occ, self.mesh, self.n_slots, src, dst, a)
+        # Optionally accelerate with extra free slots (paper Section 2.1).
+        extra = 0
+        if max_extra_slots:
+            for a2 in range(self.n_slots):
+                if extra >= max_extra_slots:
+                    break
+                if a2 != a and bit_is_free(avail, a2):
+                    try:
+                        hops2 = traceback(vec, occ, self.mesh, self.n_slots,
+                                          src, dst, a2)
+                    except RuntimeError:
+                        continue
+                    hops = hops + hops2
+                    extra += 1
+        n_win = self.n_windows_for(nbytes, slots=1 + extra)
+        circ = Circuit(src=src, dst=dst, start_cycle=start_cycle,
+                       n_windows=n_win, hops=hops, slots_per_window=1 + extra,
+                       distance=dist, _n_slots_hint=self.n_slots)
+        self.table.reserve(circ, window)
+        return AllocResult(circ, cycle)
+
+
+class TdmAllocatorLight(TdmAllocator):
+    """NoM-Light: no dedicated Z links; vertical movement rides the existing
+    per-vault TSV bus — single-cycle multi-hop, but one transfer per column
+    per slot (Section 2.3).
+
+    Routes are XY-monotone on one layer plus at most one bus hop.  We search
+    both phase orders (XY-then-bus, bus-then-XY) and keep the earlier.
+    """
+
+    def allocate(self, src: int, dst: int, nbytes: int, cycle: int,
+                 max_extra_slots: int = 0) -> AllocResult:
+        mesh, n = self.mesh, self.n_slots
+        sx, sy, sz = mesh.coords(src)
+        dx, dy, dz = mesh.coords(dst)
+        t_ready = cycle + 3
+        window = t_ready // n
+        occ = self.table.busy_masks(window)
+        bus = self.table.bus_busy_masks(window)
+        if sz == dz:
+            return super().allocate(src, dst, nbytes, cycle, max_extra_slots)
+
+        dist_xy = abs(sx - dx) + abs(sy - dy)
+        cands = []  # (start_cycle, order, arrival_slot, vec, anchor nodes)
+
+        # Order A: XY on the source layer, then bus down/up to dst.
+        w = mesh.node_id(dx, dy, sz)
+        vecA = np.asarray(self._search(jnp.asarray(occ), jnp.int32(src),
+                                       jnp.int32(w), jnp.uint32(0)))
+        availA = rotr_np(np.uint32(int(vecA[w]) | int(bus[mesh.column_of(w)])),
+                         n)
+        availA = int(availA) | int(occ[dst, PORT_LOCAL])
+        # Order B: bus first, then XY on the destination layer.
+        w2 = mesh.node_id(sx, sy, dz)
+        init = rotr_np(np.uint32(int(bus[mesh.column_of(src)])), n)
+        vecB = np.asarray(self._search(jnp.asarray(occ), jnp.int32(w2),
+                                       jnp.int32(dst), jnp.asarray(init, np.uint32)))
+        availB = int(vecB[dst]) | int(occ[dst, PORT_LOCAL])
+
+        total_hops = dist_xy + 1  # bus counts as one slot regardless of layers
+        best = None  # (start_cycle, arrival_slot, order)
+        for order, avail in (("A", availA), ("B", availB)):
+            for a in range(n):
+                if not bit_is_free(avail, a):
+                    continue
+                s = (a - total_hops) % n
+                c = t_ready + ((s - t_ready) % n)
+                if best is None or c < best[0]:
+                    best = (c, a, order)
+        if best is None:
+            return AllocResult(None, cycle)
+        start_cycle, a0, order = best
+
+        def hops_for(order: str, a: int):
+            """Hop list + bus (column, slot) for an arrival slot, or None."""
+            if order == "A":
+                bus_slot = (a - 1) % n
+                try:
+                    hops_xy = (traceback(vecA, occ, mesh, n, src, w, bus_slot)
+                               [:-1] if dist_xy else [])
+                except RuntimeError:
+                    return None
+                return (hops_xy + [(dst, PORT_LOCAL, a)],
+                        (mesh.column_of(w), bus_slot))
+            s = (a - total_hops) % n              # injection slot = bus slot
+            try:
+                hops_xy = (traceback(vecB, occ, mesh, n, w2, dst, a)
+                           if dist_xy else [(dst, PORT_LOCAL, a)])
+            except RuntimeError:
+                return None
+            return hops_xy, (mesh.column_of(src), s)
+
+        # Bundle extra free slots to accelerate the transfer (Section 2.1).
+        picked = []
+        avail = availA if order == "A" else availB
+        for a in [a0] + [x for x in range(n) if x != a0]:
+            if len(picked) >= 1 + max_extra_slots:
+                break
+            if not bit_is_free(avail, a):
+                continue
+            got = hops_for(order, a)
+            if got is not None:
+                picked.append(got)
+        hops = [h for hs, _bus in picked for h in hs]
+        n_win = self.n_windows_for(nbytes, slots=len(picked))
+        circ = Circuit(src=src, dst=dst, start_cycle=start_cycle,
+                       n_windows=n_win, hops=hops,
+                       slots_per_window=len(picked), uses_bus=True,
+                       bus_column=picked[0][1][0], distance=total_hops,
+                       _n_slots_hint=n)
+        self.table.reserve(circ, window)
+        for col, bslot in (bus for _h, bus in picked):
+            self.table.reserve_bus(col, bslot, window, n_win)
+        return AllocResult(circ, cycle)

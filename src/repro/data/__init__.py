@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, Prefetcher, batch_at
+
+__all__ = ["DataConfig", "Prefetcher", "batch_at"]

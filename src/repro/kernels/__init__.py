@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot-spots, each with ops.py (jit'd
+wrapper) and ref.py (pure-jnp oracle), validated in interpret mode:
+
+* slot_alloc       — the paper's PE-matrix TDM slot-search accelerator
+* flash_attention  — causal/sliding-window GQA flash attention (fwd)
+* ssd_scan         — Mamba-2 SSD chunked scan
+* rglru_scan       — RecurrentGemma RG-LRU linear recurrence
+
+The model layers route to jnp reference paths on CPU backends (dry-run)
+and to these kernels on TPU (`interpret=False`)."""

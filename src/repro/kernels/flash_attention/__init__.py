@@ -1,0 +1,4 @@
+from . import ops, ref
+from .flash_attention import flash_attention_fwd
+
+__all__ = ["ops", "ref", "flash_attention_fwd"]

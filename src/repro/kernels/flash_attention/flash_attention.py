@@ -1,0 +1,106 @@
+"""Flash attention (fwd) Pallas TPU kernel: causal / sliding-window GQA.
+
+Standard online-softmax tiling for the MXU/VMEM hierarchy:
+* grid (batch, q_heads, q_blocks, kv_blocks), kv minor and "arbitrary"
+  (sequential) so VMEM scratch (m, l, acc) accumulates across kv steps;
+* q tile (block_q, head_dim) stays resident; k/v tiles (block_k, head_dim)
+  stream through VMEM; all matmul dims padded to MXU-friendly multiples
+  by ops.py;
+* GQA without materializing repeated KV: the k/v BlockSpec index_map sends
+  q-head h to kv-head h // group_size;
+* causal + sliding-window masks from global block offsets (iota), so no
+  (S, S) mask tensor ever exists;
+* out-of-range kv blocks are masked (structural skipping is a documented
+  §Perf follow-up; the dry-run path uses the XLA scan variant anyway).
+
+Validated in interpret mode against ref.py over shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            block_q: int, block_k: int, seq_k: int, causal: bool,
+            window: int | None, scale: float, n_kv_blocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0] * scale                       # (bq, d)
+    k = k_ref[0, 0]                               # (bk, d)
+    v = v_ref[0, 0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+    ok = kpos < seq_k                              # padding
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= (qpos - kpos) < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]                            # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                         # (bq, bk)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+    m_scr[...] = m_new
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _flush():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True,
+                        window: int | None = None, scale: float,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: bool = True):
+    """q: (B, Hq, Sq, D); k/v: (B, Hkv, Sk, D) — already padded so
+    Sq % block_q == Sk % block_k == 0.  Returns (B, Hq, Sq, D)."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    g = hq // hkv
+    nq, nk = sq // block_q, sk // block_k
+    kernel = functools.partial(
+        _kernel, block_q=block_q, block_k=block_k, seq_k=sk, causal=causal,
+        window=window, scale=scale, n_kv_blocks=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, i, j: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, i, j: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,33 @@
+"""jit'd public wrapper: model-layout in, padding + layout handled here."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .flash_attention import flash_attention_fwd
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True):
+    """Model layout: q (B, Sq, Hq, D), k/v (B, Sk, Hkv, D).
+    Pads sequences to block multiples (padding keys are masked inside the
+    kernel; padded query rows are sliced off)."""
+    b, sq, hq, d = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / np.sqrt(d)
+    pq = (-sq) % block_q
+    pk = (-sk) % block_k
+    qt = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    kt = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    vt = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    o = flash_attention_fwd(qt, kt, vt, causal=causal, window=window,
+                            scale=scale, block_q=block_q, block_k=block_k,
+                            interpret=interpret)
+    return o.transpose(0, 2, 1, 3)[:, :sq]

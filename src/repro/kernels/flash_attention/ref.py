@@ -1,0 +1,28 @@
+"""Pure-jnp oracle: dense GQA attention with causal/window masks."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """q: (B, Hq, Sq, D); k/v: (B, Hkv, Sk, D). fp32 softmax."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    qg = q.reshape(b, hkv, g, sq, d)
+    s = jnp.einsum("bkgqd,bktd->bkgqt", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= (qpos - kpos) < window
+    s = jnp.where(ok, s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bkgqt,bktd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, sq, d).astype(q.dtype)

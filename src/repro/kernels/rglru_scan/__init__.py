@@ -1,0 +1,4 @@
+from . import ops, ref
+from .rglru_scan import rglru_scan_fwd
+
+__all__ = ["ops", "ref", "rglru_scan_fwd"]

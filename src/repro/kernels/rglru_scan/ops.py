@@ -1,0 +1,22 @@
+"""jit'd wrapper (+ the gate computation helper mirroring models.rglru)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .rglru_scan import rglru_scan_fwd
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rglru_scan(a, b, *, chunk: int = 128, interpret: bool = True):
+    """a, b: (B, S, W); pads S to the chunk multiple and slices back."""
+    import jax.numpy as jnp
+    bsz, s, w = a.shape
+    pad = (-s) % chunk
+    if pad:
+        # padded steps: a=1, b=0 leaves the state untouched
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+    y = rglru_scan_fwd(a, b, chunk=chunk, interpret=interpret)
+    return y[:, :s]

@@ -1,0 +1,19 @@
+"""Oracle: associative-scan linear recurrence (same combine as the model)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(a, b):
+    """a, b: (B, S, W) -> h trajectory via lax.associative_scan."""
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+
+    def combine(l, r):
+        a1, b1 = l
+        a2, b2 = r
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (af, bf), axis=1)
+    return h.astype(a.dtype)

@@ -1,0 +1,60 @@
+"""RG-LRU gated-linear-recurrence Pallas TPU kernel (RecurrentGemma).
+
+h_t = a_t * h_{t-1} + b_t, with gates a/b precomputed (pointwise) outside.
+Tiling: grid (batch, n_chunks) with the chunk axis sequential; the (1, W)
+state is VMEM scratch.  Inside a chunk the recurrence is a time-step fori
+over width-vectorized VPU ops — the same structure as the reference
+RecurrentGemma TPU kernel: the op is bandwidth-bound, each step touching
+3W floats, so the MXU has nothing to contribute and the win is keeping
+h resident in VMEM across the whole sequence.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, y_ref, h_scr, *, chunk: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[0].astype(jnp.float32)    # (q, w)
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(t, carry):
+        h, y = carry
+        h = a[t] * h + b[t]
+        y = jax.lax.dynamic_update_index_in_dim(y, h, t, axis=0)
+        return h, y
+
+    h0 = h_scr[0]                        # (w,)
+    y0 = jnp.zeros_like(a)
+    h, y = jax.lax.fori_loop(0, chunk, step, (h0, y0))
+    h_scr[0] = h
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def rglru_scan_fwd(a, b, *, chunk: int = 128, interpret: bool = True):
+    """a, b: (B, S, W) with S % chunk == 0 -> h-trajectory (B, S, W)."""
+    bsz, s, w = a.shape
+    nc = s // chunk
+    kernel = functools.partial(_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, w), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, w), lambda i, c: (i, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, w), lambda i, c: (i, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, w), a.dtype),
+        scratch_shapes=[pltpu.VMEM((1, w), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,4 @@
+from . import ops, ref
+from .slot_alloc import wavefront_search_planes
+
+__all__ = ["ops", "ref", "wavefront_search_planes"]

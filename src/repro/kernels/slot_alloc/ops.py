@@ -1,0 +1,83 @@
+"""jit'd wrapper matching the core allocator contract: packed-uint32 in,
+packed-uint32 out; the kernel works on int32 bit-planes internally."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitvec import full_mask
+from repro.core.topology import Mesh3D
+
+from .slot_alloc import LANES, wavefront_search_planes
+
+
+def unpack_bits(packed: jax.Array, n_slots: int) -> jax.Array:
+    """uint32 (..., ) -> int32 (..., LANES) 0/1 planes (pad lanes busy)."""
+    shifts = jnp.arange(LANES, dtype=jnp.uint32)
+    bits = (packed[..., None] >> shifts) & jnp.uint32(1)
+    bits = bits.astype(jnp.int32)
+    pad_busy = (jnp.arange(LANES) >= n_slots).astype(jnp.int32)
+    return jnp.maximum(bits, pad_busy)
+
+
+def pack_bits(planes: jax.Array, n_slots: int) -> jax.Array:
+    """int32 (..., LANES) 0/1 -> uint32 packed over the first n_slots."""
+    weights = jnp.where(jnp.arange(LANES) < n_slots,
+                        jnp.uint32(1) << jnp.arange(LANES, dtype=jnp.uint32),
+                        jnp.uint32(0))
+    return (planes.astype(jnp.uint32) * weights).sum(axis=-1,
+                                                     dtype=jnp.uint32)
+
+
+def _geometry(mesh: Mesh3D, srcs: np.ndarray, dsts: np.ndarray):
+    """Host-side per-request masks: sign (B,3), valid (B,3,n)."""
+    coords = mesh.coord_array                      # (n, 3)
+    sc = coords[srcs]                              # (B, 3)
+    dc = coords[dsts]
+    sign = np.sign(dc - sc).astype(np.int32)       # (B, 3)
+    lo = np.minimum(sc, dc)[:, None, :]            # (B, 1, 3)
+    hi = np.maximum(sc, dc)[:, None, :]
+    in_box = ((coords[None] >= lo) & (coords[None] <= hi)).all(-1)  # (B, n)
+    moved = coords[None, :, :] != sc[:, None, :]   # (B, n, 3)
+    valid = (in_box[:, :, None] & moved
+             & (sign[:, None, :] != 0)).transpose(0, 2, 1)          # (B,3,n)
+    return sign, valid.astype(np.int32), in_box
+
+
+def wavefront_search_pallas_batch(occ_packed, srcs, dsts, init_vecs, *,
+                                  mesh: Mesh3D, n_slots: int,
+                                  interpret: bool = True):
+    """Batch contract of ``repro.core.slot_alloc.wavefront_search_batch``.
+
+    occ_packed: (n, N_PORTS) uint32; srcs/dsts: (B,) int node ids;
+    init_vecs: (B,) uint32.  Returns (B, n) packed busy vectors.
+    """
+    srcs = np.asarray(srcs)
+    dsts = np.asarray(dsts)
+    n = mesh.n_nodes
+    B = srcs.shape[0]
+    sign, valid, _ = _geometry(mesh, srcs, dsts)
+    occ_planes = unpack_bits(jnp.asarray(occ_packed).T[:6], n_slots)
+    fm = np.uint32(full_mask(n_slots))
+    init_packed = np.full((B, n), fm, np.uint32)
+    init_packed[np.arange(B), srcs] = np.asarray(init_vecs, np.uint32)
+    init_planes = unpack_bits(jnp.asarray(init_packed), n_slots)
+    out = wavefront_search_planes(
+        jnp.asarray(sign), jnp.asarray(valid), init_planes, occ_planes,
+        mesh_shape=(mesh.X, mesh.Y, mesh.Z), n_slots=n_slots,
+        interpret=interpret)
+    return pack_bits(out, n_slots)
+
+
+def wavefront_search_pallas(occ, src, dst, init_vec, *, mesh: Mesh3D,
+                            n_slots: int, interpret: bool = True):
+    """Single-request contract of ``core.slot_alloc.wavefront_search``
+    (drop-in for TdmAllocator(use_pallas=True))."""
+    out = wavefront_search_pallas_batch(
+        occ, np.asarray([int(src)]), np.asarray([int(dst)]),
+        np.asarray([int(init_vec)], np.uint32), mesh=mesh, n_slots=n_slots,
+        interpret=interpret)
+    return out[0]

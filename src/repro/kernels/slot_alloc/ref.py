@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the slot-allocator kernel: the packed-uint32
+wavefront search from the core library (the paper-faithful implementation)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.slot_alloc import wavefront_search
+from repro.core.topology import Mesh3D
+
+
+def wavefront_search_ref_batch(occ_packed, srcs, dsts, init_vecs, *,
+                               mesh: Mesh3D, n_slots: int):
+    outs = []
+    for s, d, iv in zip(np.asarray(srcs), np.asarray(dsts),
+                        np.asarray(init_vecs)):
+        outs.append(np.asarray(wavefront_search(
+            jnp.asarray(occ_packed), jnp.int32(int(s)), jnp.int32(int(d)),
+            jnp.uint32(int(iv)), mesh=mesh, n_slots=n_slots)))
+    return np.stack(outs)

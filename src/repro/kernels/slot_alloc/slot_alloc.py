@@ -1,0 +1,99 @@
+"""Pallas TPU kernel for the paper's PE-matrix TDM slot allocator.
+
+Hardware adaptation (DESIGN.md): the paper's accelerator is a mesh of
+bit-serial PEs that rotate-and-OR n-bit busy vectors along all shortest
+paths.  On TPU the layout is re-thought for the VPU/VMEM:
+
+* busy vectors are int32 0/1 *bit-planes*: a (n_nodes, 128) tile with the
+  slot index on the lane axis (n_slots <= 128; unused lanes held busy);
+* "fetch from the upstream neighbour in dim d" is a *static roll* of the
+  node axis by the linearized stride (sign-selected) — no gathers;
+* the TDM rotate-right is a lane-axis roll restricted to the first
+  n_slots lanes;
+* per-dim output-port occupancy is a sign-selected static slice of the
+  (6, n_nodes, 128) occupancy planes;
+* OR = max, AND(converging paths) = min, on 0/1 ints;
+* one program instance per request (grid over the batch): the CCU
+  searches a whole batch of pending copy requests in one shot.
+
+The fixed-point sweep runs ``max_dist`` times (the monotone lattice is a
+DAG of that depth).  Oracle: ``ref.py`` (the packed-uint32 jnp search from
+``repro.core.slot_alloc``).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _rotr_lanes(v: jax.Array, n_slots: int) -> jax.Array:
+    """Rotate the first n_slots lanes right by one (TDM slot re-index)."""
+    return jnp.concatenate(
+        [v[:, n_slots - 1:n_slots], v[:, :n_slots - 1], v[:, n_slots:]],
+        axis=1)
+
+
+def _kernel(sign_ref, valid_ref, init_ref, occ_ref, out_ref,
+            *, mesh_shape: tuple[int, int, int], n_slots: int):
+    X, Y, Z = mesh_shape
+    strides = (1, X, X * Y)
+    occ = occ_ref[...]             # (6, n, LANES) int32 0/1
+    sign = sign_ref[...]           # (1, 3)
+    valid = valid_ref[0]           # (3, n) — upstream-exists mask per dim
+    vec0 = init_ref[0]             # (n, LANES); src row = init bits, else 1
+    ones = jnp.ones_like(vec0)
+    # src rows keep their injected vector through every sweep (they are the
+    # only rows with any free lane at init).
+    src_row = vec0.min(axis=1, keepdims=True) == 0
+
+    def body(_, vec):
+        cand = ones
+        for d in range(3):
+            s = sign[0, d]
+            occ_d = jnp.where(s < 0, occ[2 * d + 1], occ[2 * d])
+            merged = jnp.maximum(vec, occ_d)          # OR busy bits
+            up_p = jnp.roll(merged, strides[d], axis=0)
+            up_m = jnp.roll(merged, -strides[d], axis=0)
+            up = jnp.where(s > 0, up_p, jnp.where(s < 0, up_m, ones))
+            c_d = _rotr_lanes(up, n_slots)
+            c_d = jnp.maximum(c_d, 1 - valid[d][:, None])  # invalid: busy
+            cand = jnp.minimum(cand, c_d)             # AND converging paths
+        return jnp.where(src_row, vec0, cand)
+
+    out = jax.lax.fori_loop(0, X + Y + Z - 3, body, vec0)
+    out_ref[0] = out
+
+
+@partial(jax.jit, static_argnames=("mesh_shape", "n_slots", "interpret"))
+def wavefront_search_planes(sign: jax.Array, valid: jax.Array,
+                            init: jax.Array, occ_planes: jax.Array,
+                            *, mesh_shape: tuple[int, int, int],
+                            n_slots: int,
+                            interpret: bool = True) -> jax.Array:
+    """Batched PE-matrix search on bit-planes.
+
+    sign: (B, 3) int32; valid: (B, 3, n) int32 (upstream-exists per dim);
+    init: (B, n, LANES) int32 (all-ones except the source row);
+    occ_planes: (6, n, LANES) int32.  Returns (B, n, LANES) busy planes.
+    """
+    B, _, n = valid.shape
+    kernel = partial(_kernel, mesh_shape=mesh_shape, n_slots=n_slots)
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, 3), lambda b: (b, 0)),
+            pl.BlockSpec((1, 3, n), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, n, LANES), lambda b: (b, 0, 0)),
+            pl.BlockSpec((6, n, LANES), lambda b: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n, LANES), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, n, LANES), jnp.int32),
+        interpret=interpret,
+    )(sign, valid, init, occ_planes)

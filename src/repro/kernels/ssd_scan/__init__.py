@@ -1,0 +1,4 @@
+from . import ops, ref
+from .ssd_scan import ssd_scan_fwd
+
+__all__ = ["ops", "ref", "ssd_scan_fwd"]

@@ -1,0 +1,24 @@
+"""jit'd wrapper: model layout (B, S, H, hd) + per-head A, shared B/C."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .ssd_scan import ssd_scan_fwd
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, B, C, A, *, chunk: int = 128, interpret: bool = True):
+    """x: (B, S, H, hd); dt: (B, S, H); B/C: (B, S, n) (ngroups=1, shared
+    across heads); A: (H,).  Returns (B, S, H, hd)."""
+    b, s, h, hd = x.shape
+    n = B.shape[-1]
+    xr = x.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    dtr = dt.transpose(0, 2, 1).reshape(b * h, s, 1)
+    Br = jnp.broadcast_to(B[:, None], (b, h, s, n)).reshape(b * h, s, n)
+    Cr = jnp.broadcast_to(C[:, None], (b, h, s, n)).reshape(b * h, s, n)
+    Ar = jnp.broadcast_to(A[None, :], (b, h)).reshape(b * h, 1)
+    y = ssd_scan_fwd(xr, dtr, Br, Cr, Ar, chunk=chunk, interpret=interpret)
+    return y.reshape(b, h, s, hd).transpose(0, 2, 1, 3)

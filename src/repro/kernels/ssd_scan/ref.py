@@ -1,0 +1,30 @@
+"""Sequential-scan oracle for SSD: h_t = exp(dt_t A) h_{t-1} +
+dt_t * (B_t outer x_t);  y_t = C_t . h_t  — exact, O(S) jnp scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, B, C, A):
+    """x: (BH, S, hd); dt: (BH, S, 1); B/C: (BH, S, n); A: (BH, 1)."""
+    xf = x.astype(jnp.float32)
+    dtf = dt[..., 0].astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    Af = A[:, 0].astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                     # (bh,hd),(bh,),(bh,n),(bh,n)
+        decay = jnp.exp(dtt * Af)                 # (bh,)
+        h = h * decay[:, None, None] + \
+            (xt * dtt[:, None])[:, :, None] * bt[:, None, :]
+        y = jnp.einsum("bn,bpn->bp", ct, h)
+        return h, y
+
+    bh, s, hd = x.shape
+    n = B.shape[-1]
+    h0 = jnp.zeros((bh, hd, n), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (xf.swapaxes(0, 1), dtf.swapaxes(0, 1),
+                                    Bf.swapaxes(0, 1), Cf.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).astype(x.dtype)

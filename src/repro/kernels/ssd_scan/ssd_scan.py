@@ -1,0 +1,80 @@
+"""Mamba-2 SSD chunked-scan Pallas TPU kernel.
+
+Tiling: grid (batch*heads, n_chunks), chunk axis "arbitrary" (sequential)
+so the (head_dim, d_state) recurrent state lives in VMEM scratch across
+chunk steps.  Within a chunk the dual quadratic form runs on the MXU:
+three (q x q)/(q x n)/(q x hd) matmuls per chunk — this is the paper's
+"attention-like" intra-chunk path; the inter-chunk path is the O(1) state
+recurrence.  All math in fp32 (decays are exponentials of cumulative sums;
+bf16 would lose the tail).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, state_scr, *,
+            chunk: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)        # (q, hd)
+    dt = dt_ref[0].astype(jnp.float32)      # (q, 1)
+    B = b_ref[0].astype(jnp.float32)        # (q, n)
+    C = c_ref[0].astype(jnp.float32)        # (q, n)
+    A = a_ref[0, 0]                         # scalar (negative)
+
+    dA = dt[:, 0] * A                       # (q,)
+    cum = jnp.cumsum(dA)                    # (q,)
+    seg = cum[:, None] - cum[None, :]       # (q, q)
+    tri = jax.lax.broadcasted_iota(jnp.int32, seg.shape, 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, seg.shape, 1)
+    L = jnp.where(tri, jnp.exp(seg), 0.0)
+    scores = jnp.dot(C, B.T, preferred_element_type=jnp.float32)
+    M = scores * L * dt[:, 0][None, :]
+    y = jnp.dot(M, x, preferred_element_type=jnp.float32)
+    # inter-chunk: contribution of the carried state
+    state = state_scr[...]                  # (hd, n)
+    y += jnp.exp(cum)[:, None] * jnp.dot(C, state.T,
+                                         preferred_element_type=jnp.float32)
+    # state update: decay to end-of-chunk + new outer products
+    w = dt[:, 0] * jnp.exp(cum[-1] - cum)   # (q,)
+    new_state = state * jnp.exp(cum[-1]) + jnp.dot(
+        (x * w[:, None]).T, B, preferred_element_type=jnp.float32)
+    state_scr[...] = new_state
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan_fwd(x, dt, B, C, A, *, chunk: int = 128,
+                 interpret: bool = True):
+    """x: (BH, S, hd); dt: (BH, S, 1); B/C: (BH, S, n); A: (BH, 1).
+    S % chunk == 0.  Returns y (BH, S, hd)."""
+    bh, s, hd = x.shape
+    n = B.shape[-1]
+    nc = s // chunk
+    kernel = functools.partial(_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1), lambda b, c: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), x.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, B, C, A)

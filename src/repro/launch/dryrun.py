@@ -1,0 +1,439 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production mesh and extract the roofline terms.
+
+MUST be run as its own process (``python -m repro.launch.dryrun``): the
+XLA_FLAGS line above executes before any jax import so the 512 placeholder
+devices exist; smoke tests and benches run in normal processes and see 1
+device.
+
+Per cell this prints/records:
+  * compiled.memory_analysis()  — proves the state fits per device,
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for the roofline,
+  * collective bytes parsed from the optimized HLO (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute),
+  * the three roofline terms for TPU v5e constants.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, cells, get_config
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.optim.adamw import AdamWConfig
+from repro.parallel.sharding import default_rules
+from repro.train.state import (TrainState, make_prefill_step,
+                               make_serve_step, make_train_step)
+
+# --- TPU v5e roofline constants (per chip) ---------------------------------
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+                "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device link-bytes by collective kind.
+
+    Weights: all-reduce 2x operand (bidirectional ring), others 1x
+    result/operand.  CPU-backend correction: XLA promotes bf16 all-reduce
+    accumulation to f32 on host backends (``to_apply=%add..._promoted``) —
+    on a real TPU those reductions move bf16, so promoted all-reduces are
+    counted at half their f32 size (documented in EXPERIMENTS.md)."""
+    out = {"all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0, "total": 0}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        w = 2.0 if kind == "all-reduce" else 1.0
+        if kind == "all-reduce" and "promoted" in line:
+            w *= 0.5
+        out[kind] += int(w * b)
+        out["total"] += int(w * b)
+    return out
+
+
+def _cost(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
+def _memory(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    keys = ["generated_code_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "temp_size_in_bytes",
+            "alias_size_in_bytes", "peak_memory_in_bytes"]
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool
+    seconds: float
+    error: str = ""
+    flops: float = 0.0
+    hlo_bytes: float = 0.0
+    collectives: dict = dataclasses.field(default_factory=dict)
+    memory: dict = dataclasses.field(default_factory=dict)
+    terms: dict = dataclasses.field(default_factory=dict)
+    model_flops: float = 0.0
+
+
+def roofline_terms(flops, hbm_bytes, coll_bytes, score_bytes=0.0):
+    t = {"compute_s": flops / PEAK_FLOPS,
+         "memory_s": hbm_bytes / HBM_BW,
+         "collective_s": coll_bytes / ICI_BW}
+    # Kernel-adjusted memory: the validated Pallas flash kernel holds
+    # attention score tiles in VMEM; the XLA twin (used for CPU lowering)
+    # streams them through HBM.  score_bytes is the analytic estimate of
+    # that double-counted traffic (EXPERIMENTS.md §Perf H8).
+    t["memory_s_kernel_adj"] = max(hbm_bytes - score_bytes, 0.0) / HBM_BW
+    return t
+
+
+def attention_score_bytes(cfg, shape, mesh) -> float:
+    """Per-device HBM bytes the XLA-scan attention spends on score
+    tensors (fwd + remat fwd + bwd ~ 4 passes), which the Pallas kernel
+    keeps in VMEM.  Causal full attention halves the visited area."""
+    if shape["kind"] == "decode" or not cfg.n_heads:
+        return 0.0
+    b_loc = max(shape["batch"] // (mesh.shape.get("data", 1)
+                                   * mesh.shape.get("pod", 1)), 1)
+    s = shape["seq"]
+    passes = 4 if shape["kind"] == "train" else 1
+    total = 0.0
+    for k in cfg.pattern:
+        if k.mixer != "attn":
+            continue
+        s_eff = min(s, (k.window + 512)) if k.window else s * 0.5
+        # f32 logits + compute-dtype probs ~ 6 bytes per score element
+        total += b_loc * cfg.n_heads * s * s_eff * 6 * passes
+    total *= cfg.n_layers / len(cfg.pattern)
+    if cfg.arch_type == "encdec":
+        total += (b_loc * cfg.n_heads * cfg.enc_seq * cfg.enc_seq * 6
+                  * passes * cfg.enc_layers)
+    return total
+
+
+def lower_group_cost(cfg, shape_name: str, mesh, rules, kind: str,
+                     cast_bf16: bool = False):
+    """HLO-measure ONE scan-group body (XLA cost_analysis counts while-loop
+    bodies once, so per-cell totals are composed as
+    full + (n_groups - 1) * group_body; see EXPERIMENTS.md §Dry-run)."""
+    from repro.models.blocks import LayerStack
+    from repro.models.common import COMPUTE_DTYPE
+    sh = SHAPES[shape_name]
+    b, s = sh["batch"], sh["seq"]
+    stack = LayerStack(cfg, len(cfg.pattern),
+                       with_cross=cfg.arch_type == "encdec")
+    gp_shapes = jax.eval_shape(stack.init, jax.random.PRNGKey(0))
+    gp_sh = jax.tree.map(lambda _: None, gp_shapes)
+    from repro.parallel.sharding import tree_param_shardings
+    gp_sh = tree_param_shardings(mesh, rules, stack.axes(), gp_shapes)
+    dp = S._dp_for(b, mesh, rules)
+    if kind == "decode":
+        x_sds = SDSX((b, 1, cfg.d_model), COMPUTE_DTYPE,
+                     NamedSharding(mesh, P(dp, None, None)))
+        c_shapes = jax.eval_shape(lambda: stack.init_caches(b, s))
+        from repro.parallel.sharding import tree_cache_shardings
+        c_sh = tree_cache_shardings(mesh, rules, stack.cache_axes(),
+                                    c_shapes)
+        pos = SDSX((), jnp.int32, NamedSharding(mesh, P()))
+        mem_args, mem_sh = (), ()
+        if cfg.arch_type == "encdec":
+            mem_args = (SDSX((b, cfg.enc_seq, cfg.d_model), COMPUTE_DTYPE,
+                             NamedSharding(mesh, P(dp, None, None))),)
+            mem_sh = (mem_args[0].sharding,)
+
+        def fn(p, x, c, pos, *mem):
+            return stack.decode(p, x, c, pos,
+                                memory=mem[0] if mem else None)
+        jitted = jax.jit(fn, in_shardings=(gp_sh, x_sds.sharding, c_sh,
+                                           pos.sharding, *mem_sh),
+                         donate_argnums=(2,))
+        lowered = jitted.lower(gp_shapes, x_sds, c_shapes, pos, *mem_args)
+    else:
+        seq = cfg.enc_seq if False else s
+        x_sds = SDSX((b, s, cfg.d_model), COMPUTE_DTYPE,
+                     NamedSharding(mesh, P(dp, None, None)))
+        mem_args, mem_sh = (), ()
+        if cfg.arch_type == "encdec":
+            mem_args = (SDSX((b, cfg.enc_seq, cfg.d_model), COMPUTE_DTYPE,
+                             NamedSharding(mesh, P(dp, None, None))),)
+            mem_sh = (mem_args[0].sharding,)
+
+        def group_apply(p, x, *mem):
+            if cast_bf16:
+                p = jax.tree.map(
+                    lambda v: v.astype(COMPUTE_DTYPE)
+                    if v.dtype == jnp.float32 else v, p)
+            y, aux = stack.apply(p, x, memory=mem[0] if mem else None,
+                                 remat=True)
+            return y, aux
+
+        if kind == "train":
+            def fn(p, x, *mem):
+                def loss(p):
+                    y, aux = group_apply(p, x, *mem)
+                    return jnp.sum(y.astype(jnp.float32)) * 0 + \
+                        jnp.mean(jnp.square(y.astype(jnp.float32))) + aux
+                return jax.grad(loss)(p)
+        else:
+            fn = group_apply
+        jitted = jax.jit(fn, in_shardings=(gp_sh, x_sds.sharding, *mem_sh))
+        lowered = jitted.lower(gp_shapes, x_sds, *mem_args)
+    comp = lowered.compile()
+    ca = _cost(comp)
+    coll = collective_bytes(comp.as_text())
+    return (float(ca.get("flops", 0.0)),
+            float(ca.get("bytes accessed", 0.0)), coll)
+
+
+def SDSX(shape, dtype, sharding):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               dispatch: str | None = None, fsdp: bool | None = None,
+               remat: bool = True, microbatches: int = 1,
+               compose_groups: bool = True,
+               cast_bf16: bool = False) -> CellResult:
+    t0 = time.time()
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    try:
+        cfg = get_config(arch)
+        if dispatch is not None and cfg.n_experts:
+            cfg = dataclasses.replace(cfg, moe_dispatch=dispatch)
+        sh = SHAPES[shape_name]
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        kv_seq_axis = None
+        if shape_name == "long_500k":
+            kv_seq_axis = "data"
+        elif sh["kind"] == "decode" and cfg.n_kv \
+                and cfg.n_kv % mesh.shape["model"] != 0:
+            kv_seq_axis = "model"
+        use_fsdp = cfg.fsdp if fsdp is None else fsdp
+        rules = default_rules(mesh, fsdp=use_fsdp, kv_seq_axis=kv_seq_axis)
+        jax.sharding.set_mesh(mesh)   # ambient mesh for shard_map(MoE)
+        from repro.parallel.context import set_ctx
+        tp_size = mesh.shape["model"]
+        set_ctx(mesh=mesh,
+                dp=tuple(a for a in ("pod", "data") if a in mesh.axis_names),
+                tp="model",
+                cp_attention=bool(cfg.n_heads and cfg.n_heads % tp_size),
+                seq_parallel=bool(int(os.environ.get("REPRO_SP", "0"))))
+        kind = sh["kind"]
+        if kind == "train":
+            model, st_sds, st_sh = S.model_state_specs(cfg, mesh, rules)
+            state_sds = TrainState(params=st_sds["params"],
+                                   opt_state=st_sds["opt_state"],
+                                   step=st_sds["step"])
+            state_sh = TrainState(params=st_sh["params"],
+                                  opt_state=st_sh["opt_state"],
+                                  step=st_sh["step"])
+            binp = S.batch_specs(cfg, shape_name, mesh, rules)
+            b_sh = jax.tree.map(lambda s: s.sharding, binp)
+            step_fn = make_train_step(
+                model, cfg, AdamWConfig(), microbatches=microbatches,
+                cast_bf16_gather=cast_bf16,
+                param_shardings=st_sh["params"] if cast_bf16 else None)
+            rep = NamedSharding(mesh, P())
+            metrics_sh = {"loss": rep, "grad_norm": rep, "lr": rep,
+                          "finite": rep}
+            jitted = jax.jit(step_fn,
+                             in_shardings=(state_sh, b_sh),
+                             out_shardings=(state_sh, metrics_sh),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_sds, binp)
+        elif kind == "prefill":
+            model, p_sds, p_sh = S.model_state_specs(cfg, mesh, rules,
+                                                     with_opt=False)
+            binp = S.batch_specs(cfg, shape_name, mesh, rules)
+            step_fn = make_prefill_step(model, cfg)
+            args = [binp["tokens"]]
+            arg_sh = [binp["tokens"].sharding]
+            if cfg.arch_type == "encdec":
+                args.append(binp["enc_emb"])
+                arg_sh.append(binp["enc_emb"].sharding)
+            elif cfg.arch_type == "vlm":
+                args.append(binp["prefix_emb"])
+                arg_sh.append(binp["prefix_emb"].sharding)
+            dp = S._dp_for(sh["batch"], mesh, rules)
+            out_sh = NamedSharding(mesh, P(dp, None, "model"))
+            jitted = jax.jit(step_fn, in_shardings=(p_sh, *arg_sh),
+                             out_shardings=out_sh)
+            lowered = jitted.lower(p_sds, *args)
+        else:  # decode
+            model, p_sds, p_sh = S.model_state_specs(cfg, mesh, rules,
+                                                     with_opt=False)
+            c_sds, c_sh = S.cache_specs(cfg, shape_name, mesh, rules)
+            tok, pos, extras = S.serve_input_specs(cfg, shape_name, mesh,
+                                                   rules)
+            step_fn = make_serve_step(model, cfg)
+            dp = S._dp_for(sh["batch"], mesh, rules)
+            logits_sh = NamedSharding(mesh, P(dp, None, "model"))
+            in_sh = [p_sh, tok.sharding, c_sh, pos.sharding]
+            args = [p_sds, tok, c_sds, pos]
+            if cfg.arch_type == "encdec":
+                in_sh.append(extras["memory"].sharding)
+                args.append(extras["memory"])
+            jitted = jax.jit(step_fn, in_shardings=tuple(in_sh),
+                             out_shardings=(logits_sh, c_sh),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(*args)
+
+        compiled = lowered.compile()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        ca = _cost(compiled)
+        flops = float(ca.get("flops", 0.0))
+        byts = float(ca.get("bytes accessed", 0.0))
+        mem = _memory(compiled)
+        # Compose scan-body costs: XLA counts while-loop bodies once.
+        n_groups = cfg.n_layers // len(cfg.pattern)
+        extra_reps = max(0, n_groups - 1)
+        if cfg.arch_type == "encdec" and kind != "decode":
+            extra_reps += max(0, cfg.enc_layers // len(cfg.pattern) - 1)
+        if compose_groups and extra_reps:
+            gf, gb, gc = lower_group_cost(cfg, shape_name, mesh, rules,
+                                          kind, cast_bf16=cast_bf16)
+            flops += extra_reps * gf
+            byts += extra_reps * gb
+            for k in coll:
+                coll[k] += extra_reps * gc.get(k, 0)
+        terms = roofline_terms(flops, byts, coll["total"],
+                               attention_score_bytes(cfg, sh, mesh))
+        # MODEL_FLOPS: 6*N_active*D (D = tokens for train; batch for decode)
+        n_act = cfg.active_param_count_estimate()
+        d_tokens = (sh["batch"] * sh["seq"] if kind != "decode"
+                    else sh["batch"])
+        model_flops = (6 if kind == "train" else 2) * n_act * d_tokens
+        return CellResult(arch=arch, shape=shape_name, mesh=mesh_tag,
+                          ok=True, seconds=time.time() - t0, flops=flops,
+                          hlo_bytes=byts, collectives=coll, memory=mem,
+                          terms=terms, model_flops=model_flops)
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        return CellResult(arch=arch, shape=shape_name, mesh=mesh_tag,
+                          ok=False, seconds=time.time() - t0,
+                          error=f"{type(e).__name__}: {e}\n"
+                          + traceback.format_exc()[-2000:])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--dispatch", default=None,
+                    choices=[None, "nom", "xla", "einsum"])
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--cast-bf16", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    todo = []
+    if args.all:
+        for arch, shape, skip in cells():
+            todo.append((arch, shape))
+    else:
+        todo.append((args.arch, args.shape))
+    meshes = [True, False] if args.both_meshes else [args.multipod]
+
+    for arch, shape in todo:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+            if args.dispatch:
+                tag += f"__{args.dispatch}"
+            if args.cast_bf16:
+                tag += "__bf16g"
+            if args.tag:
+                tag += f"__{args.tag}"
+            path = os.path.join(args.out, tag + ".json")
+            if args.resume and os.path.exists(path):
+                print(f"[skip] {tag}")
+                continue
+            print(f"[lower+compile] {tag} ...", flush=True)
+            res = lower_cell(arch, shape, mp, dispatch=args.dispatch,
+                             fsdp=None if not args.no_fsdp else False,
+                             microbatches=args.microbatches,
+                             cast_bf16=args.cast_bf16)
+            with open(path, "w") as f:
+                json.dump(dataclasses.asdict(res), f, indent=1)
+            if res.ok:
+                t = res.terms
+                print(f"  OK {res.seconds:.0f}s flops={res.flops:.3e} "
+                      f"bytes={res.hlo_bytes:.3e} "
+                      f"coll={res.collectives['total']:.3e} | "
+                      f"compute={t['compute_s']*1e3:.2f}ms "
+                      f"memory={t['memory_s']*1e3:.2f}ms "
+                      f"collective={t['collective_s']*1e3:.2f}ms",
+                      flush=True)
+                if res.memory:
+                    print(f"  memory_analysis: {res.memory}", flush=True)
+            else:
+                print(f"  FAIL {res.seconds:.0f}s {res.error.splitlines()[0] if res.error else ''}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

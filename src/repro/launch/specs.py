@@ -1,0 +1,108 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+No device allocation — the dry-run lowers against these (the
+shannon/kernels pattern): weak-type-correct, shardable specs for tokens,
+stub-frontend embeddings, KV/recurrent caches, and the train state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ArchConfig
+from repro.models.common import COMPUTE_DTYPE
+from repro.models.lm import make_model
+from repro.optim import adamw
+from repro.parallel.sharding import (ShardingRules, default_rules,
+                                     spec_for_cache, tree_cache_shardings,
+                                     tree_param_shardings)
+
+SDS = jax.ShapeDtypeStruct
+
+
+def dp_size(mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def _dp_for(batch: int, mesh, rules: ShardingRules):
+    """Batch mesh axes, dropped when the batch doesn't divide (e.g. the
+    batch=1 long-context decode leaves the data axis to the KV sequence)."""
+    dp = rules.act_axis("batch")
+    if dp is None:
+        return None
+    axes = (dp,) if isinstance(dp, str) else tuple(dp)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    return dp if total and batch % total == 0 else None
+
+
+def batch_specs(cfg: ArchConfig, shape_name: str, mesh,
+                rules: ShardingRules):
+    """Token/frontend input specs for train/prefill."""
+    sh = SHAPES[shape_name]
+    b, s = sh["batch"], sh["seq"]
+    dp = _dp_for(b, mesh, rules)
+    tok = SDS((b, s), jnp.int32, sharding=NamedSharding(mesh, P(dp, None)))
+    out = {"tokens": tok}
+    if cfg.arch_type == "encdec":
+        out["enc_emb"] = SDS((b, cfg.enc_seq, cfg.d_model), COMPUTE_DTYPE,
+                             sharding=NamedSharding(mesh, P(dp, None, None)))
+    if cfg.arch_type == "vlm":
+        out["prefix_emb"] = SDS((b, cfg.enc_seq, cfg.d_model), COMPUTE_DTYPE,
+                                sharding=NamedSharding(mesh,
+                                                       P(dp, None, None)))
+    return out
+
+
+def model_state_specs(cfg: ArchConfig, mesh, rules: ShardingRules,
+                      with_opt: bool = True):
+    """(state_sds, state_shardings) via eval_shape — zero allocation."""
+    model = make_model(cfg)
+    p_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    axes = model.axes()
+    p_sh = tree_param_shardings(mesh, rules, axes, p_shapes)
+    if not with_opt:
+        return model, p_shapes, p_sh
+    opt_shapes = {"m": p_shapes, "v": p_shapes,
+                  "count": SDS((), jnp.int32)}
+    opt_sh = {"m": p_sh, "v": p_sh,
+              "count": NamedSharding(mesh, P())}
+    return model, {"params": p_shapes, "opt_state": opt_shapes,
+                   "step": SDS((), jnp.int32)}, \
+        {"params": p_sh, "opt_state": opt_sh,
+         "step": NamedSharding(mesh, P())}
+
+
+def cache_specs(cfg: ArchConfig, shape_name: str, mesh,
+                rules: ShardingRules):
+    """(cache_sds, cache_shardings) for decode shapes."""
+    sh = SHAPES[shape_name]
+    b, s = sh["batch"], sh["seq"]
+    model = make_model(cfg)
+    c_shapes = jax.eval_shape(lambda: model.init_caches(b, s))
+    c_axes = model.cache_axes()
+    c_sh = tree_cache_shardings(mesh, rules, c_axes, c_shapes)
+    return c_shapes, c_sh
+
+
+def serve_input_specs(cfg: ArchConfig, shape_name: str, mesh,
+                      rules: ShardingRules):
+    sh = SHAPES[shape_name]
+    b = sh["batch"]
+    dp = _dp_for(b, mesh, rules)
+    tok = SDS((b, 1), jnp.int32, sharding=NamedSharding(mesh, P(dp, None)))
+    pos = SDS((), jnp.int32, sharding=NamedSharding(mesh, P()))
+    extras = {}
+    if cfg.arch_type == "encdec":
+        extras["memory"] = SDS((b, cfg.enc_seq, cfg.d_model), COMPUTE_DTYPE,
+                               sharding=NamedSharding(mesh,
+                                                      P(dp, None, None)))
+    return tok, pos, extras

@@ -1,0 +1,77 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+On this CPU container use ``--smoke`` (reduced config); on a real pod the
+same driver runs the full config under ``make_production_mesh()``.
+"""
+import argparse
+
+import jax
+
+from repro.configs import ARCHS, get_config
+from repro.data import DataConfig
+from repro.models import count_params, make_model
+from repro.optim.adamw import AdamWConfig
+from repro.parallel.context import set_ctx
+from repro.train import LoopConfig, TrainState, make_train_step, train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--model-axis", type=int, default=1)
+    args = ap.parse_args()
+
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev // args.model_axis, args.model_axis),
+                         ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    jax.sharding.set_mesh(mesh)
+    cfg = get_config(args.arch, smoke=args.smoke)
+    set_ctx(mesh=mesh, dp=("data",), tp="model",
+            cp_attention=bool(cfg.n_heads
+                              and cfg.n_heads % args.model_axis))
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"[train] arch={cfg.name} params={count_params(params):,} "
+          f"mesh={dict(mesh.shape)}")
+    state = TrainState.create(params)
+    opt = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 5),
+                      total_steps=args.steps)
+    step = jax.jit(make_train_step(model, cfg, opt,
+                                   microbatches=args.microbatches,
+                                   cast_bf16_gather=True),
+                   donate_argnums=(0,))
+    data = DataConfig(vocab=cfg.vocab, batch=args.batch, seq=args.seq)
+
+    def extra(step_i):
+        import jax.numpy as jnp
+        out = {}
+        if cfg.arch_type == "encdec":
+            out["enc_emb"] = jax.random.normal(
+                jax.random.PRNGKey(step_i), (args.batch, cfg.enc_seq,
+                                             cfg.d_model), jnp.bfloat16)
+        if cfg.arch_type == "vlm":
+            out["prefix_emb"] = jax.random.normal(
+                jax.random.PRNGKey(step_i), (args.batch, cfg.enc_seq,
+                                             cfg.d_model), jnp.bfloat16)
+        return out
+
+    loop = LoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                      ckpt_dir=args.ckpt_dir)
+    state, hist = train_loop(step, state, data, loop,
+                             extra_batch_fn=extra
+                             if cfg.arch_type != "decoder" else None)
+    print(f"[train] done: loss {hist[0]['loss']:.4f} -> "
+          f"{hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

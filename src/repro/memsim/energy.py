@@ -1,0 +1,43 @@
+"""DRAMPower-style energy model (paper Section 3, "Energy analysis").
+
+Per-event energies follow the Micron DDR3 power-calculator structure the
+paper cites: activate/precharge + read/write column energy per access, I/O
+energy per bit for on-chip interconnect, and a large off-chip (SerDes +
+board trace) cost per bit for data that leaves the stack.  Values are in pJ
+and chosen from the public Micron TN-41-01 / HMC literature ballpark — the
+*ratios* (NoM vs DDR3 baseline vs RowClone) are what the paper reports.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .simulator import SimResult
+from .workloads import LINE
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyParams:
+    e_act_pre: float = 909.0        # activate+precharge per row op (pJ)
+    e_rd_wr: float = 467.0          # column read/write per 64B (pJ)
+    e_offchip_bit: float = 10.0     # SerDes + trace per bit (pJ)
+    e_tsv_bit: float = 0.05         # TSV per bit
+    e_hop_bit: float = 0.10         # NoM link+crossbar per bit per hop
+    e_bus_bit: float = 0.60         # long global shared-bus wire per bit
+    e_router_static_per_cycle: float = 0.002  # per router (NoM overhead)
+    n_routers: int = 256
+
+
+def energy_pj(res: SimResult, params: EnergyParams = EnergyParams()) -> dict:
+    """Decompose total energy for a finished simulation."""
+    p = params
+    accesses = res.copy_bytes // LINE + max(res.reqs, 1)
+    dram = accesses * (p.e_act_pre * 0.3 + p.e_rd_wr)
+    offchip = res.offchip_bytes * 8 * p.e_offchip_bit
+    nom = res.nom_hop_beats * 64 * p.e_hop_bit
+    bus = res.bus_busy_cycles * 64 * p.e_bus_bit
+    static = (res.cycles * p.e_router_static_per_cycle * p.n_routers
+              if res.config.startswith("nom") else 0.0)
+    total = dram + offchip + nom + bus + static
+    return {"dram": dram, "offchip": offchip, "nom_links": nom,
+            "shared_bus": bus, "router_static": static, "total": total,
+            "per_access": total / max(1, accesses)}

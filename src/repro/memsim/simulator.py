@@ -1,0 +1,275 @@
+"""Event/timestamp simulator for the four evaluated memory configurations.
+
+Configurations (paper Section 3):
+
+* ``conventional`` — copies/initialization go through the processor: every
+  64 B line is read over the vault TSV + off-chip link and written back.
+* ``rowclone``     — RowClone FPM for same-subarray copies, LISA for other
+  intra-bank copies, RowClone PSM over the *shared internal bus* for
+  inter-bank copies (bus reserved for the whole copy).
+* ``nom``          — inter-bank copies ride the TDM circuit-switched 3D mesh
+  (full NoM); intra-bank copies still use RowClone/LISA, as the paper
+  integrates them.
+* ``nom_light``    — NoM with the shared-TSV vertical bus instead of
+  dedicated Z links.
+
+The processor is a closed-loop core with a fixed-size window of outstanding
+memory operations (memory-level parallelism) — performance is reported as
+effective IPC over a common per-workload instruction count, so IPC ratios
+equal runtime speedups, matching how Fig. 4 compares configurations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+from repro.core.slot_alloc import TdmAllocator, TdmAllocatorLight
+from repro.core.topology import Mesh3D
+
+from .dram import OffChipLink, SharedInternalBus, Timing, VaultController
+from .workloads import LINE, Op, Request
+
+CONFIGS = ("conventional", "rowclone", "nom", "nom_light")
+
+
+@dataclasses.dataclass
+class SimParams:
+    config: str = "nom"
+    mesh: Mesh3D = dataclasses.field(default_factory=lambda: Mesh3D(8, 8, 4))
+    n_slots: int = 16
+    timing: Timing = dataclasses.field(default_factory=Timing)
+    window: int = 32                 # outstanding memory ops (MLP window)
+    line_window: int = 8             # in-flight lines inside a processor copy
+    compute_gap: int = 2             # compute cycles between memory issues
+    nom_link_ratio: float = 1.0      # NoM link freq / logic freq (<=1)
+    nom_extra_slots: int = 7         # extra TDM slots the CCU may bundle
+    instr_per_line: int = 2          # conventional copy: LD+ST per line
+
+
+@dataclasses.dataclass
+class SimResult:
+    name: str
+    config: str
+    cycles: int
+    instructions: int
+    ipc: float
+    reqs: int
+    copy_bytes: int
+    offchip_bytes: int
+    nom_hop_beats: int
+    bus_busy_cycles: int
+    tsv_busy_frac: float
+    tsv_conflict_frac: float
+    row_hit_rate: float
+    extra: dict = dataclasses.field(default_factory=dict)
+
+
+class MemorySystem:
+    """Shared geometry + per-config data paths."""
+
+    def __init__(self, p: SimParams):
+        self.p = p
+        self.mesh = p.mesh
+        t = p.timing
+        n_vaults = self.mesh.n_vaults
+        banks_per_vault = len(self.mesh.banks_of_vault(0))
+        self.vaults = [VaultController(t, banks_per_vault)
+                       for _ in range(n_vaults)]
+        self.offchip = OffChipLink(t)
+        self.shared_bus = SharedInternalBus()
+        self.alloc: TdmAllocator | None = None
+        if p.config == "nom":
+            self.alloc = TdmAllocator(self.mesh, p.n_slots)
+        elif p.config == "nom_light":
+            self.alloc = TdmAllocatorLight(self.mesh, p.n_slots)
+        self.nom_hop_beats = 0
+        self.ccu_free_at = 0
+        # stats for the TSV dual-use analysis (NoM-Light motivation)
+        self.nom_vertical_cycles = 0
+
+    # -- helpers -------------------------------------------------------------
+    def _vault_bank(self, bank: int) -> tuple[VaultController, int]:
+        v = self.mesh.vault_of(bank)
+        local = self.mesh.banks_of_vault(v).index(bank)
+        return self.vaults[v], local
+
+    def line_access(self, at: int, bank: int, row: int, is_write: bool,
+                    priority: bool = False, offchip: bool = True) -> int:
+        vc, b = self._vault_bank(bank)
+        done = vc.access_line(at, b, row, is_write, priority=priority)
+        if offchip:
+            done = self.offchip.transfer(done, LINE)
+        return done
+
+    # -- copy paths ------------------------------------------------------------
+    def copy_conventional(self, at: int, r: Request,
+                          write_only: bool = False) -> int:
+        """Processor-mediated copy/initialize: each 64B line is read over the
+        vault TSV + off-chip link into the core and written back.
+
+        The core sustains at most ``line_window`` line-transfers in flight
+        (load/store-queue MLP), so a page copy is load-use-latency bound —
+        the inefficiency RowClone/NoM eliminate."""
+        lines = r.nbytes // LINE
+        w = self.p.line_window
+        vc, b = self._vault_bank(r.dst_bank)
+        done = at
+        # The memory controller batches reads then writes per MLP window so
+        # same-bank copies don't ping-pong row activations line by line.
+        for g in range(0, lines, w):
+            batch = min(w, lines - g)
+            ready = []
+            for _ in range(batch):
+                if write_only:
+                    ready.append(self.offchip.transfer(at, LINE, down=True))
+                else:
+                    rd = self.line_access(at, r.src_bank, r.src_row, False)
+                    ready.append(self.offchip.transfer(rd, LINE, down=True))
+                at += 1
+            for rd in ready:
+                done = max(done, vc.access_line(rd, b, r.dst_row, True))
+            # Next batch's reads overlap this batch's writes (prefetch-style
+            # streaming); resource occupancy carries the contention.
+            at = max(at, ready[-1] - self.p.timing.offchip_latency)
+        return done
+
+    def copy_in_dram_local(self, at: int, r: Request) -> int:
+        """RowClone-FPM / LISA intra-bank copy (also used for INIT)."""
+        t = self.p.timing
+        vc, b = self._vault_bank(r.src_bank)
+        rows = max(1, r.nbytes // t.row_bytes)
+        if r.same_subarray or r.op == Op.INIT:
+            per_row = t.rowclone_fpm
+        else:
+            hops = 4  # average subarray distance for LISA RBM
+            per_row = t.rowclone_fpm + hops * t.lisa_hop
+        done = at
+        for _ in range(rows):
+            done = vc.bank_row_op(done, b, per_row)
+        return done
+
+    def copy_rowclone_psm(self, at: int, r: Request) -> int:
+        """Inter-bank copy over the shared internal bus (bus reserved)."""
+        t = self.p.timing
+        lines = r.nbytes // LINE
+        # src activate + per-line (read beat + write beat on the bus) + dst
+        # restore; the row stays open so lines pipeline at burst occupancy.
+        per_line = 2 * t.tBURST
+        dur = t.tRCD + t.tCL + lines * per_line + t.tWR
+        svc, sb = self._vault_bank(r.src_bank)
+        dvc, db = self._vault_bank(r.dst_bank)
+        ready = max(svc.banks[sb].s.free_at, dvc.banks[db].s.free_at, at)
+        start, end = self.shared_bus.reserve(ready, dur)
+        svc.banks[sb].s.free_at = end
+        dvc.banks[db].s.free_at = end
+        # The bus transfer also occupies both vaults' TSVs line by line.
+        svc._tsv(start, lines * t.tBURST)
+        dvc._tsv(start, lines * t.tBURST)
+        return end
+
+    def copy_nom(self, at: int, r: Request) -> int:
+        """Inter-bank copy over the TDM circuit-switched mesh."""
+        p, t = self.p, self.p.timing
+        # 1) CCU picks up the request (FIFO, one setup per 3 cycles).
+        pick = max(at, self.ccu_free_at)
+        self.ccu_free_at = pick + 3
+        # 2) source read (row-granularity into the bank's CS buffer) via the
+        #    high-priority copy queue.
+        svc, sb = self._vault_bank(r.src_bank)
+        ready = svc.bank_row_op(pick + 3, sb, t.tRCD + t.tCL)
+        # 3) circuit allocation anchored so injection starts when data is
+        #    ready (the CCU knows timings deterministically).
+        res = self.alloc.allocate(r.src_bank, r.dst_bank, r.nbytes,
+                                  cycle=max(ready - 3, pick),
+                                  max_extra_slots=p.nom_extra_slots)
+        tries = 0
+        while res.circuit is None and tries < 64:
+            tries += 1
+            res = self.alloc.allocate(r.src_bank, r.dst_bank, r.nbytes,
+                                      cycle=max(ready - 3, pick) +
+                                      tries * p.n_slots,
+                                      max_extra_slots=p.nom_extra_slots)
+        c = res.circuit
+        assert c is not None, "NoM mesh persistently saturated"
+        dist = max(c.distance, 1)
+        # transfer duration in NoM-link cycles, scaled by link frequency.
+        link_cycles = dist + (c.n_windows - 1) * p.n_slots
+        xfer_done = c.start_cycle + int(np.ceil(link_cycles / p.nom_link_ratio))
+        beats = (r.nbytes // 8) * dist
+        self.nom_hop_beats += beats
+        if self.p.config == "nom":
+            # dedicated-Z-link vertical beats (for the TSV dual-use stat)
+            sz = self.mesh.coords(r.src_bank)[2]
+            dz = self.mesh.coords(r.dst_bank)[2]
+            self.nom_vertical_cycles += abs(sz - dz) * (r.nbytes // 8)
+        elif c.uses_bus and c.bus_column >= 0:
+            # NoM-Light: the vertical hop rides the existing TSV of that
+            # column's vault, stealing bandwidth from regular accesses —
+            # the bandwidth cost behind the paper's 5-20% gap.
+            col_bank = c.bus_column  # a z=0 bank id shares the column index
+            vc, _b = self._vault_bank(col_bank)
+            vc._tsv(c.start_cycle, r.nbytes // 8)
+        # 4) destination write via the copy queue.
+        dvc, db = self._vault_bank(r.dst_bank)
+        done = dvc.bank_row_op(xfer_done, db, t.tRCD + t.tWR)
+        return done
+
+
+def simulate(reqs: list[Request], p: SimParams, name: str = "") -> SimResult:
+    """Run the closed-loop core over the request stream."""
+    sys = MemorySystem(p)
+    t = p.timing
+    outstanding: list[int] = []   # completion-time min-heap
+    core_time = 0
+    total_instr = 0               # config-independent instruction count
+    copy_bytes = 0
+
+    for r in reqs:
+        # Respect the MLP window.
+        while len(outstanding) >= p.window:
+            core_time = max(core_time, heapq.heappop(outstanding))
+        issue = core_time = core_time + p.compute_gap
+        total_instr += p.compute_gap
+
+        if r.op in (Op.READ, Op.WRITE):
+            total_instr += 1
+            done = sys.line_access(issue, r.src_bank, r.src_row,
+                                   r.op == Op.WRITE)
+        elif r.op == Op.INIT:
+            total_instr += r.nbytes // LINE * 1  # conventional stores
+            if p.config == "conventional":
+                done = sys.copy_conventional(issue, r, write_only=True)
+            else:
+                done = sys.copy_in_dram_local(issue, r)
+            copy_bytes += r.nbytes
+        else:  # COPY
+            total_instr += r.nbytes // LINE * p.instr_per_line
+            copy_bytes += r.nbytes
+            if p.config == "conventional":
+                done = sys.copy_conventional(issue, r)
+            elif r.intra_bank:
+                done = sys.copy_in_dram_local(issue, r)
+            elif p.config == "rowclone":
+                done = sys.copy_rowclone_psm(issue, r)
+            else:
+                done = sys.copy_nom(issue, r)
+        heapq.heappush(outstanding, done)
+
+    while outstanding:
+        core_time = max(core_time, heapq.heappop(outstanding))
+    cycles = max(1, core_time)
+
+    tsv_busy = sum(v.tsv_busy_cycles for v in sys.vaults)
+    tsv_frac = tsv_busy / (cycles * len(sys.vaults))
+    # Probability that a dedicated-Z NoM beat coincides with TSV activity —
+    # the observation motivating NoM-Light (Section 2.3).
+    conflict = (sys.nom_vertical_cycles / max(cycles, 1)) * tsv_frac
+    hit = float(np.mean([v.row_hit_rate for v in sys.vaults]))
+    return SimResult(
+        name=name, config=p.config, cycles=cycles, instructions=total_instr,
+        ipc=total_instr / cycles, reqs=len(reqs), copy_bytes=copy_bytes,
+        offchip_bytes=sys.offchip.bytes_moved, nom_hop_beats=sys.nom_hop_beats,
+        bus_busy_cycles=sys.shared_bus.busy_cycles, tsv_busy_frac=tsv_frac,
+        tsv_conflict_frac=conflict, row_hit_rate=hit)

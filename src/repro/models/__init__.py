@@ -1,0 +1,14 @@
+from .attention import Attention, AttentionConfig
+from .blocks import DecoderLayer, LayerStack
+from .common import COMPUTE_DTYPE, Embed, LayerNorm, RMSNorm, count_params
+from .lm import CausalLM, EncDecLM, lm_loss, make_model
+from .mlp import MLP, MLPConfig
+from .moe import MoE, MoEConfig, bucket_by
+from .rglru import RGLRU, RecurrentBlock, RGLRUConfig
+from .ssm import Mamba2, SSMConfig
+
+__all__ = ["Attention", "AttentionConfig", "DecoderLayer", "LayerStack",
+           "COMPUTE_DTYPE", "Embed", "LayerNorm", "RMSNorm", "count_params",
+           "CausalLM", "EncDecLM", "lm_loss", "make_model", "MLP",
+           "MLPConfig", "MoE", "MoEConfig", "bucket_by", "RGLRU",
+           "RecurrentBlock", "RGLRUConfig", "Mamba2", "SSMConfig"]

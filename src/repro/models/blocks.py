@@ -1,0 +1,328 @@
+"""Layer composition: decoder layers (attn/SSM/RG-LRU mixers x MLP/MoE
+ffns), sandwich norms, and the scanned layer stack.
+
+Stacks are ``lax.scan``-over-groups: the repeating layer pattern (e.g.
+gemma3's 5 local + 1 global, recurrentgemma's 2 recurrent + 1 local-attn)
+forms one *group*; parameters are stacked along a leading "layers" axis and
+the group body is remat-ed — one HLO body regardless of depth, which keeps
+512-device dry-run compiles tractable and is the standard production trick
+(MaxText does the same).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerKind
+
+from .attention import Attention, AttentionConfig
+from .common import (AxesTree, LayerNorm, Params, RMSNorm, prepend_layer_axis,
+                     stack_layers)
+from .mlp import MLP, MLPConfig
+from .moe import MoE, MoEConfig
+from .rglru import RecurrentBlock, RGLRUConfig
+from .ssm import Mamba2, SSMConfig
+
+
+def _prepend_none(axes):
+    return jax.tree.map(lambda t: (None,) + tuple(t), axes,
+                        is_leaf=lambda t: isinstance(t, tuple))
+
+
+def _norm(cfg: ArchConfig):
+    if cfg.norm_type == "layer":
+        return LayerNorm(cfg.d_model)
+    return RMSNorm(cfg.d_model, zero_centered=cfg.zero_centered_norm)
+
+
+def make_mixer(cfg: ArchConfig, kind: LayerKind, causal: bool = True,
+               cross: bool = False):
+    if kind.mixer == "attn":
+        return Attention(AttentionConfig(
+            d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+            head_dim=cfg.resolved_head_dim,
+            rope_theta=kind.rope_theta or cfg.rope_theta,
+            use_rope=cfg.use_rope, qkv_bias=cfg.qkv_bias,
+            qk_norm=cfg.qk_norm, logit_softcap=cfg.logit_softcap,
+            window=kind.window, causal=causal, cross=cross))
+    if kind.mixer == "ssm":
+        return Mamba2(SSMConfig(d_model=cfg.d_model, d_state=cfg.ssm_state,
+                                head_dim=cfg.ssm_head_dim,
+                                chunk=cfg.ssm_chunk))
+    if kind.mixer == "rglru":
+        return RecurrentBlock(RGLRUConfig(d_model=cfg.d_model,
+                                          lru_width=cfg.lru_width))
+    raise ValueError(kind.mixer)
+
+
+def make_ffn(cfg: ArchConfig, kind: LayerKind):
+    if kind.ffn == "mlp":
+        return MLP(MLPConfig(cfg.d_model, cfg.d_ff, activation=cfg.act,
+                             gated=cfg.gated_mlp, use_bias=cfg.mlp_bias))
+    if kind.ffn == "moe":
+        return MoE(MoEConfig(cfg.d_model, cfg.moe_dff, cfg.n_experts,
+                             cfg.top_k, norm_topk=cfg.norm_topk,
+                             dispatch=cfg.moe_dispatch))
+    return None
+
+
+@dataclasses.dataclass(frozen=True)
+class DecoderLayer:
+    cfg: ArchConfig
+    kind: LayerKind
+    causal: bool = True
+    with_cross: bool = False     # enc-dec decoder layers
+
+    def _mods(self):
+        mixer = make_mixer(self.cfg, self.kind, causal=self.causal)
+        ffn = make_ffn(self.cfg, self.kind)
+        cross = (make_mixer(self.cfg, LayerKind("attn"), cross=True)
+                 if self.with_cross else None)
+        return mixer, ffn, cross
+
+    def init(self, key) -> Params:
+        mixer, ffn, cross = self._mods()
+        keys = jax.random.split(key, 8)
+        n = _norm(self.cfg)
+        p = {"ln1": n.init(keys[0]), "mixer": mixer.init(keys[1])}
+        if cross is not None:
+            p["ln_cross"] = n.init(keys[2])
+            p["cross"] = cross.init(keys[3])
+        if ffn is not None:
+            p["ln2"] = n.init(keys[4])
+            p["ffn"] = ffn.init(keys[5])
+        if self.cfg.post_norms:
+            p["ln1_post"] = n.init(keys[6])
+            if ffn is not None:
+                p["ln2_post"] = n.init(keys[7])
+        return p
+
+    def axes(self) -> AxesTree:
+        mixer, ffn, cross = self._mods()
+        n = _norm(self.cfg)
+        a = {"ln1": n.axes(), "mixer": mixer.axes()}
+        if cross is not None:
+            a["ln_cross"] = n.axes()
+            a["cross"] = cross.axes()
+        if ffn is not None:
+            a["ln2"] = n.axes()
+            a["ffn"] = ffn.axes()
+        if self.cfg.post_norms:
+            a["ln1_post"] = n.axes()
+            if ffn is not None:
+                a["ln2_post"] = n.axes()
+        return a
+
+    # -- full-sequence (train / prefill) -------------------------------------
+    def apply(self, p: Params, x, *, positions=None, memory=None,
+              prefix_len=None):
+        from repro.parallel.context import constrain, get_ctx
+        ctx = get_ctx()
+        tp_size = ctx.mesh.shape[ctx.tp] if ctx.mesh is not None else 1
+        sp = (ctx.seq_parallel and x.shape[1] % max(tp_size, 1) == 0
+              and x.shape[1] > 1)
+
+        def _sp(t):
+            # Megatron-SP (§Perf H4): the residual stream lives
+            # sequence-sharded over the TP axis, so norms/residual adds
+            # touch 1/tp of the tokens and GSPMD lowers the TP psum into
+            # reduce-scatter + later all-gather at the next matmul.
+            return constrain(t, ctx.dp, ctx.tp, None) if sp else t
+
+        n = _norm(self.cfg)
+        aux = jnp.zeros((), jnp.float32)
+        x = _sp(x)
+        mixer, ffn, cross = self._mods()
+        h = n.apply(p["ln1"], x)
+        if isinstance(mixer, Attention):
+            h = mixer.apply(p["mixer"], h, positions=positions,
+                            prefix_len=prefix_len)
+        else:
+            h = mixer.apply(p["mixer"], h)
+        if self.cfg.post_norms:
+            h = _sp(n.apply(p["ln1_post"], h))
+        x = x + _sp(h)
+        if self.with_cross:
+            h = n.apply(p["ln_cross"], x)
+            h = cross.apply(p["cross"], h, kv_x=memory)
+            x = x + _sp(h)
+        if ffn is not None:
+            h = n.apply(p["ln2"], x)
+            if isinstance(ffn, MoE):
+                h, aux = ffn.apply(p["ffn"], h)
+            else:
+                h = ffn.apply(p["ffn"], h)
+            if self.cfg.post_norms:
+                h = _sp(n.apply(p["ln2_post"], h))
+            x = x + _sp(h)
+        return x, aux
+
+    # -- decode ----------------------------------------------------------------
+    def decode(self, p: Params, x, cache, pos, *, memory=None):
+        n = _norm(self.cfg)
+        mixer, ffn, cross = self._mods()
+        h = n.apply(p["ln1"], x)
+        if isinstance(mixer, Attention):
+            h, cache = mixer.decode(p["mixer"], h, cache, pos)
+        else:
+            h, cache = mixer.decode(p["mixer"], h, cache)
+        if self.cfg.post_norms:
+            h = n.apply(p["ln1_post"], h)
+        x = x + h
+        if self.with_cross:
+            h = n.apply(p["ln_cross"], x)
+            h, _ = cross.decode(p["cross"], h, {}, pos, kv_memory=memory)
+            x = x + h
+        if ffn is not None:
+            h = n.apply(p["ln2"], x)
+            if isinstance(ffn, MoE):
+                h, _ = ffn.apply(p["ffn"], h)
+            else:
+                h = ffn.apply(p["ffn"], h)
+            if self.cfg.post_norms:
+                h = n.apply(p["ln2_post"], h)
+            x = x + h
+        return x, cache
+
+    def init_cache(self, batch: int, max_len: int):
+        mixer = self._mods()[0]
+        if isinstance(mixer, Attention):
+            return mixer.init_cache(batch, max_len)
+        return mixer.init_cache(batch)
+
+    def cache_axes(self):
+        return self._mods()[0].cache_axes()
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerStack:
+    """n_layers arranged as scan-groups of the repeating pattern + tail."""
+    cfg: ArchConfig
+    n_layers: int
+    causal: bool = True
+    with_cross: bool = False
+
+    @property
+    def group_size(self) -> int:
+        return len(self.cfg.pattern)
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // self.group_size
+
+    @property
+    def n_tail(self) -> int:
+        return self.n_layers % self.group_size
+
+    def _layers(self) -> list[DecoderLayer]:
+        return [DecoderLayer(self.cfg, k, causal=self.causal,
+                             with_cross=self.with_cross)
+                for k in self.cfg.pattern]
+
+    # -- params ------------------------------------------------------------------
+    def init(self, key) -> Params:
+        layers = self._layers()
+        gkeys = jax.random.split(key, self.n_groups + 1)
+        groups = []
+        for g in range(self.n_groups):
+            lkeys = jax.random.split(gkeys[g], self.group_size)
+            groups.append({f"l{i}": layers[i].init(lkeys[i])
+                           for i in range(self.group_size)})
+        p = {"groups": stack_layers(groups) if groups else {}}
+        tkeys = jax.random.split(gkeys[-1], max(self.n_tail, 1))
+        p["tail"] = {f"l{i}": layers[i].init(tkeys[i])
+                     for i in range(self.n_tail)}
+        return p
+
+    def axes(self) -> AxesTree:
+        layers = self._layers()
+        group = {f"l{i}": layers[i].axes() for i in range(self.group_size)}
+        return {"groups": prepend_layer_axis(group) if self.n_groups else {},
+                "tail": {f"l{i}": layers[i].axes()
+                         for i in range(self.n_tail)}}
+
+    # -- forward -------------------------------------------------------------------
+    def apply(self, p: Params, x, *, positions=None, memory=None,
+              prefix_len=None, remat: bool = True):
+        layers = self._layers()
+
+        def group_fn(x, gp):
+            aux = jnp.zeros((), jnp.float32)
+            for i, layer in enumerate(layers):
+                x, a = layer.apply(gp[f"l{i}"], x, positions=positions,
+                                   memory=memory, prefix_len=prefix_len)
+                aux = aux + a
+            return x, aux
+
+        body = jax.checkpoint(group_fn) if remat else group_fn
+
+        if self.n_groups:
+            def scan_fn(carry, gp):
+                x, aux = carry
+                x, a = body(x, gp)
+                return (x, aux + a), None
+            (x, aux), _ = jax.lax.scan(scan_fn,
+                                       (x, jnp.zeros((), jnp.float32)),
+                                       p["groups"])
+        else:
+            aux = jnp.zeros((), jnp.float32)
+        for i in range(self.n_tail):
+            x, a = layers[i].apply(p["tail"][f"l{i}"], x,
+                                   positions=positions, memory=memory,
+                                   prefix_len=prefix_len)
+            aux = aux + a
+        return x, aux
+
+    # -- decode ----------------------------------------------------------------------
+    def decode(self, p: Params, x, caches, pos, *, memory=None):
+        layers = self._layers()
+
+        def group_fn(x, gp, gc):
+            new_c = {}
+            for i, layer in enumerate(layers):
+                x, c = layer.decode(gp[f"l{i}"], x, gc[f"l{i}"], pos,
+                                    memory=memory)
+                new_c[f"l{i}"] = c
+            return x, new_c
+
+        if self.n_groups:
+            def scan_fn(x, inp):
+                gp, gc = inp
+                x, nc = group_fn(x, gp, gc)
+                return x, nc
+            x, new_groups = jax.lax.scan(scan_fn, x,
+                                         (p["groups"], caches["groups"]))
+        else:
+            new_groups = caches["groups"]
+        new_tail = {}
+        for i in range(self.n_tail):
+            x, c = layers[i].decode(p["tail"][f"l{i}"], x,
+                                    caches["tail"][f"l{i}"], pos,
+                                    memory=memory)
+            new_tail[f"l{i}"] = c
+        return x, {"groups": new_groups, "tail": new_tail}
+
+    def init_caches(self, batch: int, max_len: int):
+        layers = self._layers()
+        group_c = {f"l{i}": layers[i].init_cache(batch, max_len)
+                   for i in range(self.group_size)}
+        if self.n_groups:
+            groups = jax.tree.map(
+                lambda v: jnp.broadcast_to(v, (self.n_groups,) + v.shape),
+                group_c)
+        else:
+            groups = {}
+        tail = {f"l{i}": layers[i].init_cache(batch, max_len)
+                for i in range(self.n_tail)}
+        return {"groups": groups, "tail": tail}
+
+    def cache_axes(self):
+        layers = self._layers()
+        group_a = {f"l{i}": layers[i].cache_axes()
+                   for i in range(self.group_size)}
+        groups = (prepend_layer_axis(group_a) if self.n_groups else {})
+        tail = {f"l{i}": layers[i].cache_axes() for i in range(self.n_tail)}
+        return {"groups": groups, "tail": tail}

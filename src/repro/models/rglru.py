@@ -1,0 +1,149 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrence: a_t = exp(-c * softplus(Lambda) * sigmoid(W_a x_t)),
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (sigmoid(W_x x_t) * x_t).
+
+Training/prefill uses ``lax.associative_scan`` over (a, b) pairs; decode is
+the O(1) per-token update.  The full recurrent block wraps the LRU with the
+RecurrentGemma structure: dual linear branches, short causal conv on the
+recurrent branch, GeLU gating on the other.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import AxesTree, Params, dense_init
+
+_C = 8.0   # the paper's fixed scalar
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    lru_width: int | None = None
+    conv_width: int = 4
+    n_heads: int = 1   # block-diagonal input gates (per-head), paper uses heads
+
+    @property
+    def width(self) -> int:
+        return self.lru_width or self.d_model
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRU:
+    """The bare RG-LRU layer over pre-projected inputs (B, S, W)."""
+    cfg: RGLRUConfig
+
+    def init(self, key) -> Params:
+        c = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        # Lambda init so that a^c in [0.9, 0.999] (paper appendix).
+        u = jax.random.uniform(k3, (c.width,), minval=0.9 ** 2,
+                               maxval=0.999 ** 2)
+        a_param = jnp.log(jnp.expm1(-(1.0 / _C) * jnp.log(u)))  # softplus^-1
+        return {"w_a": dense_init(k1, (c.width, c.width)),
+                "b_a": jnp.zeros((c.width,)),
+                "w_x": dense_init(k2, (c.width, c.width)),
+                "b_x": jnp.zeros((c.width,)),
+                "a_param": a_param}
+
+    def axes(self) -> AxesTree:
+        return {"w_a": ("mlp", "mlp_out"), "b_a": ("mlp_out",),
+                "w_x": ("mlp", "mlp_out"), "b_x": ("mlp_out",),
+                "a_param": ("mlp_out",)}
+
+    def _gates(self, p: Params, x: jax.Array):
+        r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", x,
+                                      p["w_a"].astype(x.dtype))
+                           + p["b_a"].astype(x.dtype))
+        i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", x,
+                                      p["w_x"].astype(x.dtype))
+                           + p["b_x"].astype(x.dtype))
+        log_a = (-_C * jax.nn.softplus(p["a_param"].astype(jnp.float32))
+                 * r.astype(jnp.float32))
+        a = jnp.exp(log_a)
+        mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+        b = mult * (i.astype(jnp.float32) * x.astype(jnp.float32))
+        return a, b
+
+    def apply(self, p: Params, x: jax.Array, h0=None) -> jax.Array:
+        """x: (B, S, W) -> (y, h_last)."""
+        a, b = self._gates(p, x)
+        if h0 is not None:
+            b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+        def combine(lhs, rhs):
+            a1, b1 = lhs
+            a2, b2 = rhs
+            return a1 * a2, a2 * b1 + b2
+
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        return h.astype(x.dtype), h[:, -1]
+
+    def step(self, p: Params, x: jax.Array, h: jax.Array):
+        """x: (B, 1, W), h: (B, W) -> (y (B,1,W), h_new)."""
+        a, b = self._gates(p, x)
+        h_new = a[:, 0] * h.astype(jnp.float32) + b[:, 0]
+        return h_new[:, None].astype(x.dtype), h_new
+
+
+@dataclasses.dataclass(frozen=True)
+class RecurrentBlock:
+    """RecurrentGemma mixer: x/y branches, conv1d + RG-LRU on x, GeLU(y) gate."""
+    cfg: RGLRUConfig
+
+    def init(self, key) -> Params:
+        c = self.cfg
+        k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+        return {
+            "proj_x": dense_init(k1, (c.d_model, c.width)),
+            "proj_y": dense_init(k2, (c.d_model, c.width)),
+            "conv_w": dense_init(k3, (c.conv_width, c.width)),
+            "lru": RGLRU(c).init(k4),
+            "proj_out": dense_init(k5, (c.width, c.d_model)),
+        }
+
+    def axes(self) -> AxesTree:
+        return {"proj_x": ("embed", "mlp"), "proj_y": ("embed", "mlp"),
+                "conv_w": (None, "mlp"), "lru": RGLRU(self.cfg).axes(),
+                "proj_out": ("mlp", "embed")}
+
+    def _conv(self, p, x, conv_state=None):
+        c = self.cfg
+        w = p["conv_w"].astype(x.dtype)
+        pad = (jnp.zeros((x.shape[0], c.conv_width - 1, x.shape[2]), x.dtype)
+               if conv_state is None else conv_state.astype(x.dtype))
+        xp = jnp.concatenate([pad, x], axis=1)
+        out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(c.conv_width))
+        return out, xp[:, -(c.conv_width - 1):]
+
+    def apply(self, p: Params, u: jax.Array) -> jax.Array:
+        x = jnp.einsum("bsd,dw->bsw", u, p["proj_x"].astype(u.dtype))
+        y = jnp.einsum("bsd,dw->bsw", u, p["proj_y"].astype(u.dtype))
+        x, _ = self._conv(p, x)
+        x, _ = RGLRU(self.cfg).apply(p["lru"], x)
+        out = x * jax.nn.gelu(y)
+        return jnp.einsum("bsw,wd->bsd", out, p["proj_out"].astype(u.dtype))
+
+    def init_cache(self, batch: int, dtype=None) -> dict:
+        from .common import COMPUTE_DTYPE
+        c = self.cfg
+        return {"conv": jnp.zeros((batch, c.conv_width - 1, c.width),
+                                  dtype or COMPUTE_DTYPE),
+                "h": jnp.zeros((batch, c.width), jnp.float32)}
+
+    def cache_axes(self) -> dict:
+        return {"conv": ("batch", None, "mlp"), "h": ("batch", "mlp")}
+
+    def decode(self, p: Params, u: jax.Array, cache: dict):
+        x = jnp.einsum("bsd,dw->bsw", u, p["proj_x"].astype(u.dtype))
+        y = jnp.einsum("bsd,dw->bsw", u, p["proj_y"].astype(u.dtype))
+        x, conv_state = self._conv(p, x, cache["conv"])
+        x, h = RGLRU(self.cfg).step(p["lru"], x, cache["h"])
+        out = x * jax.nn.gelu(y)
+        out = jnp.einsum("bsw,wd->bsd", out, p["proj_out"].astype(u.dtype))
+        return out, {"conv": conv_state, "h": h}

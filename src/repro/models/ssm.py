@@ -1,0 +1,201 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) mixer.
+
+Chunked SSD: within a chunk the recurrence is computed in its quadratic
+"attention-like" dual form; across chunks a compact (heads, head_dim,
+d_state) state is carried — this is the structure the Pallas ``ssd_scan``
+kernel tiles for VMEM; this module is the jnp implementation used for
+training/dry-run lowering, plus the O(1) single-token decode step.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import AxesTree, Params, RMSNorm, dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 256
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def segsum(x: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{k in (j, i]} x[..., k]
+    for j < i else -inf (lower-triangular cumulative decay)."""
+    t = x.shape[-1]
+    xc = jnp.cumsum(x, axis=-1)
+    diff = xc[..., :, None] - xc[..., None, :]
+    mask = np.tril(np.ones((t, t), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2:
+    cfg: SSMConfig
+
+    def init(self, key) -> Params:
+        c = self.cfg
+        k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+        d_in_proj = 2 * c.d_inner + 2 * c.d_state + c.n_heads
+        dt = np.exp(np.random.RandomState(0).uniform(
+            np.log(c.dt_min), np.log(c.dt_max), c.n_heads)).astype(np.float32)
+        dt_bias = dt + np.log(-np.expm1(-dt))   # inv softplus
+        return {
+            "in_proj": dense_init(k1, (c.d_model, d_in_proj)),
+            "conv_w": dense_init(k2, (c.conv_width,
+                                      c.d_inner + 2 * c.d_state)),
+            "A_log": jnp.log(jnp.arange(1, c.n_heads + 1, dtype=jnp.float32)),
+            "D": jnp.ones((c.n_heads,), jnp.float32),
+            "dt_bias": jnp.asarray(dt_bias),
+            "norm": RMSNorm(c.d_inner).init(k4),
+            "out_proj": dense_init(k5, (c.d_inner, c.d_model)),
+        }
+
+    def axes(self) -> AxesTree:
+        return {"in_proj": ("embed", "mlp"),
+                "conv_w": (None, "mlp"),
+                "A_log": ("heads_unsharded",),
+                "D": ("heads_unsharded",),
+                "dt_bias": ("heads_unsharded",),
+                "norm": {"scale": (None,)},
+                "out_proj": ("mlp", "embed")}
+
+    # -- projections shared by scan and step --------------------------------------
+    def _project(self, p: Params, u: jax.Array):
+        c = self.cfg
+        zxbcdt = jnp.einsum("bsd,de->bse", u, p["in_proj"].astype(u.dtype))
+        z, xbc, dt = jnp.split(
+            zxbcdt, [c.d_inner, 2 * c.d_inner + 2 * c.d_state], axis=-1)
+        dt = jax.nn.softplus(dt.astype(jnp.float32)
+                             + p["dt_bias"].astype(jnp.float32))
+        return z, xbc, dt
+
+    def _conv(self, p: Params, xbc: jax.Array, conv_state=None):
+        """Causal depthwise conv; returns (out, new_conv_state)."""
+        c = self.cfg
+        w = p["conv_w"].astype(xbc.dtype)                    # (W, ch)
+        if conv_state is None:
+            pad = jnp.zeros((xbc.shape[0], c.conv_width - 1, xbc.shape[2]),
+                            xbc.dtype)
+        else:
+            pad = conv_state.astype(xbc.dtype)
+        xp = jnp.concatenate([pad, xbc], axis=1)
+        out = sum(xp[:, i:i + xbc.shape[1]] * w[i] for i in range(c.conv_width))
+        new_state = xp[:, -(c.conv_width - 1):]
+        return jax.nn.silu(out), new_state
+
+    # -- chunked SSD over a full sequence ------------------------------------------
+    def _ssd(self, x, dt, B, C, A):
+        """x:(b,s,h,p) dt:(b,s,h) B,C:(b,s,n) A:(h,) -> y, final_state."""
+        c = self.cfg
+        b, s, h, pdim = x.shape
+        q = c.chunk
+        nc = s // q
+        xb = x.reshape(b, nc, q, h, pdim)
+        dtb = dt.reshape(b, nc, q, h)
+        Bb = B.reshape(b, nc, q, -1)
+        Cb = C.reshape(b, nc, q, -1)
+        dA = dtb * A.astype(jnp.float32)                      # (b,nc,q,h) <0
+        dAc = jnp.cumsum(dA, axis=2)
+        # Intra-chunk (dual quadratic form).
+        L = jnp.exp(segsum(dA.transpose(0, 1, 3, 2)))          # (b,nc,h,q,q)
+        scores = jnp.einsum("bcqn,bckn->bcqk", Cb, Bb)         # (b,nc,q,q)
+        M = scores[:, :, None] * L                             # (b,nc,h,q,q)
+        y_intra = jnp.einsum("bchqk,bckh,bckhp->bcqhp", M, dtb,
+                             xb.astype(jnp.float32))
+        # Chunk states: decay-weighted outer products.
+        decay_to_end = jnp.exp(dAc[:, :, -1:, :] - dAc)        # (b,nc,q,h)
+        states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn",
+                            Bb, dtb * decay_to_end,
+                            xb.astype(jnp.float32))            # (b,nc,h,p,n)
+        # Inter-chunk recurrence over nc (sequential scan, nc is small).
+        chunk_decay = jnp.exp(dAc[:, :, -1, :])                # (b,nc,h)
+
+        def step(carry, inp):
+            st, = (carry,)
+            s_c, dec = inp
+            new = st * dec[..., None, None] + s_c
+            return new, st                                     # emit prior state
+
+        init = jnp.zeros((b, h, pdim, Bb.shape[-1]), jnp.float32)
+        final, prior = jax.lax.scan(
+            step, init, (states.transpose(1, 0, 2, 3, 4),
+                         chunk_decay.transpose(1, 0, 2)))
+        prior = prior.transpose(1, 0, 2, 3, 4)                 # (b,nc,h,p,n)
+        y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                             Cb, jnp.exp(dAc), prior)
+        y = (y_intra + y_inter).reshape(b, s, h, pdim)
+        return y, final
+
+    def apply(self, p: Params, u: jax.Array) -> jax.Array:
+        """Training / prefill: u (B, S, D); S is padded to the chunk
+        multiple internally (trailing pad — causal, so outputs for real
+        positions are unaffected)."""
+        c = self.cfg
+        s0 = u.shape[1]
+        pad = (-s0) % c.chunk
+        if pad:
+            u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        z, xbc, dt = self._project(p, u)
+        xbc, _ = self._conv(p, xbc)
+        x, B, C = jnp.split(xbc, [c.d_inner, c.d_inner + c.d_state], axis=-1)
+        x = x.reshape(*x.shape[:2], c.n_heads, c.head_dim)
+        y, _ = self._ssd(x, dt, B, C, -jnp.exp(p["A_log"]))
+        y = y.astype(u.dtype) + x * p["D"].astype(u.dtype)[:, None]
+        y = y.reshape(*u.shape[:2], c.d_inner)
+        y = RMSNorm(c.d_inner).apply(p["norm"], y * jax.nn.silu(z))
+        out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(u.dtype))
+        return out[:, :s0] if pad else out
+
+    # -- O(1) decode ------------------------------------------------------------
+    def init_cache(self, batch: int, dtype=None) -> dict:
+        from .common import COMPUTE_DTYPE
+        c = self.cfg
+        return {
+            "conv": jnp.zeros((batch, c.conv_width - 1,
+                               c.d_inner + 2 * c.d_state),
+                              dtype or COMPUTE_DTYPE),
+            "ssm": jnp.zeros((batch, c.n_heads, c.head_dim, c.d_state),
+                             jnp.float32),
+        }
+
+    def cache_axes(self) -> dict:
+        return {"conv": ("batch", None, "mlp"),
+                "ssm": ("batch", None, None, None)}
+
+    def decode(self, p: Params, u: jax.Array, cache: dict):
+        """u: (B, 1, D) -> (y, new_cache)."""
+        c = self.cfg
+        z, xbc, dt = self._project(p, u)
+        xbc, conv_state = self._conv(p, xbc, cache["conv"])
+        x, B, C = jnp.split(xbc, [c.d_inner, c.d_inner + c.d_state], axis=-1)
+        x = x.reshape(-1, 1, c.n_heads, c.head_dim)
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        dA = jnp.exp(dt[:, 0] * A)                              # (B,h)
+        dBx = jnp.einsum("bn,bh,bhp->bhpn", B[:, 0].astype(jnp.float32),
+                         dt[:, 0], x[:, 0].astype(jnp.float32))
+        h = cache["ssm"] * dA[..., None, None] + dBx
+        y = jnp.einsum("bn,bhpn->bhp", C[:, 0].astype(jnp.float32), h)
+        y = y[:, None].astype(u.dtype) + x * p["D"].astype(u.dtype)[:, None]
+        y = y.reshape(-1, 1, c.d_inner)
+        y = RMSNorm(c.d_inner).apply(p["norm"], y * jax.nn.silu(z))
+        out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(u.dtype))
+        return out, {"conv": conv_state, "ssm": h}

@@ -1,0 +1,4 @@
+from . import adamw, compression
+from .adamw import AdamWConfig, global_norm, schedule
+
+__all__ = ["adamw", "compression", "AdamWConfig", "global_norm", "schedule"]

@@ -1,0 +1,75 @@
+"""AdamW with global-norm clipping and warmup-cosine schedule (no optax
+dependency — the optimizer is part of the substrate)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(np.pi * prog))
+    return cfg.lr * jnp.minimum(warm, cos)
+
+
+def init(params) -> dict:
+    zeros = lambda: jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros(), "v": zeros(), "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def update(cfg: AdamWConfig, grads, opt_state, params):
+    """Returns (new_params, new_opt_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+    count = opt_state["count"] + 1
+    lr = schedule(cfg, count)
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m_new / b1c
+        vh = v_new / b2c
+        step = lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                     + cfg.weight_decay * p.astype(jnp.float32))
+        return (p.astype(jnp.float32) - step).astype(p.dtype), m_new, v_new
+
+    out = jax.tree.map(upd, grads, opt_state["m"], opt_state["v"], params)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "count": count}, \
+        {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,7 @@
+from .sharding import (ShardingRules, batch_sharding, default_rules,
+                       shapes_of, spec_for_cache, spec_for_param,
+                       tree_cache_shardings, tree_param_shardings)
+
+__all__ = ["ShardingRules", "batch_sharding", "default_rules", "shapes_of",
+           "spec_for_cache", "spec_for_param", "tree_cache_shardings",
+           "tree_param_shardings"]

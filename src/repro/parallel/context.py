@@ -1,0 +1,51 @@
+"""Ambient parallelization context for activation sharding hints.
+
+Model code stays mesh-agnostic; the launcher installs a ParallelCtx and
+modules consult it for with_sharding_constraint hints that GSPMD cannot
+infer — chiefly context-parallel (sequence-sharded) attention for archs
+whose head count does not divide the model axis (whisper 12H, qwen1.5 20H,
+qwen2.5 40H, paligemma 8H on a 16-way axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class ParallelCtx:
+    mesh: object | None = None
+    dp: tuple | str | None = None     # data axes for the batch dim
+    tp: str | None = None             # model/tensor axis
+    cp_attention: bool = False        # shard attention over query-seq
+    seq_parallel: bool = False        # Megatron-SP residual stream
+
+
+_CTX = ParallelCtx()
+
+
+def set_ctx(**kw) -> ParallelCtx:
+    global _CTX
+    _CTX = ParallelCtx(**kw)
+    return _CTX
+
+
+def get_ctx() -> ParallelCtx:
+    return _CTX
+
+
+def reset_ctx():
+    global _CTX
+    _CTX = ParallelCtx()
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint against the ambient ctx mesh (no-op when
+    no ctx mesh installed, e.g. single-device smoke tests)."""
+    ctx = get_ctx()
+    if ctx.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*spec)))

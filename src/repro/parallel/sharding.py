@@ -1,0 +1,133 @@
+"""Logical-axis -> mesh sharding rules.
+
+Each parameter carries a tuple of *logical* axis names (see model modules'
+``axes()``).  A :class:`ShardingRules` maps every mesh axis to a priority
+list of logical names; for each tensor, each mesh axis is assigned to the
+first logical axis in its list that (a) appears in the tensor, (b) has a
+divisible dimension, and (c) hasn't been claimed by another mesh axis.
+This gives Megatron-style TP with graceful fallbacks (e.g. qwen2.5's 40
+heads don't divide a 16-way model axis, so the model axis lands on
+head_dim instead) and ZeRO-3-style FSDP by listing "embed" under the data
+axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """mesh axis -> ordered logical-axis preferences (params)."""
+    param_rules: tuple[tuple[str, tuple[str, ...]], ...]
+    # activation logical axes -> mesh axes (exact, no fallback)
+    act_rules: tuple[tuple[str, tuple[str, ...] | str | None], ...]
+
+    def act_axis(self, name: str):
+        for k, v in self.act_rules:
+            if k == name:
+                return v
+        return None
+
+
+def default_rules(mesh: Mesh, *, fsdp: bool = True,
+                  kv_seq_axis: str | None = None) -> ShardingRules:
+    """Production rules. data axes: batch; model axis: TP/EP.
+    ``kv_seq_axis``: shard decode KV caches along the sequence dim — "data"
+    for long_500k (batch=1 frees the data axis), "model" when an arch's
+    kv_heads don't divide the model axis (GSPMD then flash-decodes with a
+    psum softmax merge)."""
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    # No head_dim fallback: archs whose head count doesn't divide the model
+    # axis use context-parallel attention (see parallel.context) instead of
+    # sharding inside heads, which would psum full attention logits.
+    param = [
+        ("model", ("vocab", "experts", "heads", "kv_heads", "mlp")),
+    ]
+    if fsdp:
+        param.append(("data", ("embed",)))
+    act = [
+        ("batch", dp_axes),
+        ("kv_seq", kv_seq_axis),
+        ("vocab", "model"),
+        ("kv_heads", "model"),
+        ("mlp", "model"),
+    ]
+    return ShardingRules(param_rules=tuple(param), act_rules=tuple(act))
+
+
+def spec_for_param(axes: tuple, shape: tuple, rules: ShardingRules,
+                   mesh: Mesh) -> P:
+    assert len(axes) == len(shape), (axes, shape)
+    assigned: dict[int, str] = {}
+    for mesh_axis, prefs in rules.param_rules:
+        if mesh_axis not in mesh.axis_names:
+            continue
+        size = mesh.shape[mesh_axis]
+        for logical in prefs:
+            hit = None
+            for d, name in enumerate(axes):
+                if name == logical and d not in assigned \
+                        and shape[d] % size == 0 and shape[d] >= size:
+                    hit = d
+                    break
+            if hit is not None:
+                assigned[hit] = mesh_axis
+                break
+    return P(*[assigned.get(d) for d in range(len(shape))])
+
+
+def spec_for_cache(axes: tuple, shape: tuple, rules: ShardingRules,
+                   mesh: Mesh) -> P:
+    """Caches/activations: exact logical->mesh mapping with divisibility
+    guard (drop when not divisible)."""
+    out = []
+    used: set[str] = set()
+    for d, name in enumerate(axes):
+        m = rules.act_axis(name) if name else None
+        if m is None:
+            out.append(None)
+            continue
+        ms = (m,) if isinstance(m, str) else tuple(m)
+        ms = tuple(a for a in ms if a in mesh.axis_names and a not in used)
+        total = int(np.prod([mesh.shape[a] for a in ms])) if ms else 1
+        if ms and shape[d] % total == 0 and shape[d] >= total:
+            out.append(ms if len(ms) > 1 else ms[0])
+            used.update(ms)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def tree_param_shardings(mesh: Mesh, rules: ShardingRules, axes_tree,
+                         shape_tree):
+    """axes_tree / shape_tree: matching pytrees (axes leaves are tuples)."""
+    is_axes = lambda t: isinstance(t, tuple) and all(
+        isinstance(x, (str, type(None))) for x in t)
+    return jax.tree.map(
+        lambda a, s: NamedSharding(mesh, spec_for_param(a, s.shape, rules,
+                                                        mesh)),
+        axes_tree, shape_tree, is_leaf=is_axes)
+
+
+def tree_cache_shardings(mesh: Mesh, rules: ShardingRules, axes_tree,
+                         shape_tree):
+    is_axes = lambda t: isinstance(t, tuple) and all(
+        isinstance(x, (str, type(None))) for x in t)
+    return jax.tree.map(
+        lambda a, s: NamedSharding(mesh, spec_for_cache(a, s.shape, rules,
+                                                        mesh)),
+        axes_tree, shape_tree, is_leaf=is_axes)
+
+
+def shapes_of(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        tree)
+
+
+def batch_sharding(mesh: Mesh, rules: ShardingRules, ndim: int = 2):
+    dp = rules.act_axis("batch")
+    return NamedSharding(mesh, P(dp, *([None] * (ndim - 1))))

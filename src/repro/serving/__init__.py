@@ -1,0 +1,3 @@
+from .engine import Engine
+
+__all__ = ["Engine"]

@@ -1,0 +1,58 @@
+"""Serving engine: batched prefill + decode with per-arch caches.
+
+``generate`` runs greedy decoding with a jit'd single-token step; prefill
+feeds prompt tokens through the same step (cache-filling), which keeps one
+compiled program for both phases — the large-scale serving shapes
+(decode_32k / long_500k) are exercised via the dry-run on the production
+mesh, this engine is the functional path used by tests and examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.lm import CausalLM, EncDecLM
+
+
+@dataclasses.dataclass
+class Engine:
+    model: object
+    cfg: ArchConfig
+    max_len: int = 256
+
+    def __post_init__(self):
+        self._step = jax.jit(self._decode_one)
+
+    def _decode_one(self, params, token, caches, pos, memory=None):
+        if isinstance(self.model, EncDecLM):
+            logits, caches = self.model.decode_step(params, token, caches,
+                                                    pos, memory)
+        else:
+            logits, caches = self.model.decode_step(params, token, caches,
+                                                    pos)
+        return logits, caches
+
+    def generate(self, params, prompt: jax.Array, n_new: int,
+                 memory: jax.Array | None = None,
+                 greedy: bool = True) -> jax.Array:
+        """prompt: (B, P) int32 -> (B, P+n_new)."""
+        b, plen = prompt.shape
+        caches = self.model.init_caches(b, self.max_len)
+        # Prefill token by token (single compiled program for both phases).
+        logits = None
+        for i in range(plen):
+            logits, caches = self._step(params, prompt[:, i:i + 1], caches,
+                                        jnp.int32(i), memory)
+        out = [prompt]
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out.append(tok)
+        for i in range(plen, plen + n_new - 1):
+            logits, caches = self._step(params, tok, caches, jnp.int32(i),
+                                        memory)
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            out.append(tok)
+        return jnp.concatenate(out, axis=1)

@@ -1,0 +1,6 @@
+from .loop import LoopConfig, StragglerMonitor, train_loop
+from .state import TrainState, make_prefill_step, make_serve_step, \
+    make_train_step
+
+__all__ = ["LoopConfig", "StragglerMonitor", "train_loop", "TrainState",
+           "make_prefill_step", "make_serve_step", "make_train_step"]

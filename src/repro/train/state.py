@@ -1,0 +1,137 @@
+"""Train state pytree + step functions (train / prefill / serve)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import COMPUTE_DTYPE
+from repro.models.lm import lm_loss
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+    @classmethod
+    def create(cls, params, opt_cfg: AdamWConfig | None = None):
+        return cls(params=params, opt_state=adamw.init(params),
+                   step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(model, cfg, opt_cfg: AdamWConfig,
+                    microbatches: int = 1, cast_bf16_gather: bool = False,
+                    param_shardings=None):
+    """Build the jit-able train_step(state, batch) -> (state, metrics).
+
+    Gradient accumulation runs as a ``lax.scan`` over microbatches
+    (compute/comm overlap: each microbatch's backward all-reduces overlap
+    the next microbatch's forward under XLA latency-hiding scheduling).
+    A non-finite-gradient guard skips the optimizer update (fault
+    tolerance at the numerics level).
+
+    ``cast_bf16_gather`` (beyond-paper §Perf optimization): cast fp32
+    master weights to bf16 *shard-side* before use, so FSDP weight
+    all-gathers and the gathered working set move half the bytes; the
+    optimizer still updates fp32 masters."""
+
+    def _maybe_cast(params):
+        if not cast_bf16_gather:
+            return params
+        if param_shardings is not None:
+            # Anchor the cast shard-side: constraining the bf16 copy to the
+            # same (FSDP) sharding forces XLA to cast before gathering, so
+            # weight all-gathers move half the bytes (§Perf H9).
+            return jax.tree.map(
+                lambda p, s: jax.lax.with_sharding_constraint(
+                    p.astype(COMPUTE_DTYPE), s)
+                if p.dtype == jnp.float32 else p, params, param_shardings)
+        return jax.tree.map(
+            lambda p: p.astype(COMPUTE_DTYPE)
+            if p.dtype == jnp.float32 else p, params)
+
+    def loss_fn(params, tokens, extra):
+        params = _maybe_cast(params)
+        if cfg.arch_type == "encdec":
+            logits, aux = model.apply(params, extra["enc_emb"], tokens)
+        elif cfg.arch_type == "vlm":
+            logits, aux = model.apply(params, tokens,
+                                      prefix_emb=extra["prefix_emb"])
+        else:
+            logits, aux = model.apply(params, tokens)
+        loss, parts = lm_loss(logits, tokens, aux)
+        return loss, parts
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: dict):
+        tokens = batch["tokens"]
+        extra = {k: v for k, v in batch.items() if k != "tokens"}
+        if microbatches > 1:
+            b = tokens.shape[0] // microbatches
+            toks = tokens.reshape(microbatches, b, *tokens.shape[1:])
+            extras = jax.tree.map(
+                lambda v: v.reshape(microbatches, b, *v.shape[1:]), extra)
+
+            def acc_fn(carry, xs):
+                g_acc, l_acc = carry
+                t, e = xs
+                (loss, parts), g = grad_fn(state.params, t, e)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + loss), parts
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              state.params)
+            (grads, loss), _ = jax.lax.scan(acc_fn, (g0, 0.0),
+                                            (toks, extras))
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+        else:
+            (loss, parts), grads = grad_fn(state.params, tokens, extra)
+
+        finite = jnp.isfinite(adamw.global_norm(grads))
+        new_params, new_opt, om = adamw.update(opt_cfg, grads,
+                                               state.opt_state, state.params)
+        # NaN/inf guard: keep old state, still advance step counter.
+        new_params = jax.tree.map(
+            lambda n, o: jnp.where(finite, n, o), new_params, state.params)
+        new_opt = jax.tree.map(
+            lambda n, o: jnp.where(finite, n, o), new_opt, state.opt_state)
+        metrics = {"loss": loss, "grad_norm": om["grad_norm"],
+                   "lr": om["lr"], "finite": finite.astype(jnp.int32)}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step
+
+
+def make_serve_step(model, cfg):
+    """serve_step(params, token, caches, pos[, memory]) — one decode step."""
+    if cfg.arch_type == "encdec":
+        def serve_step(params, token, caches, pos, memory):
+            return model.decode_step(params, token, caches, pos, memory)
+    else:
+        def serve_step(params, token, caches, pos):
+            return model.decode_step(params, token, caches, pos)
+    return serve_step
+
+
+def make_prefill_step(model, cfg):
+    """prefill_step = full forward at inference (logits only)."""
+    def prefill_step(params, tokens, *extra_args):
+        if cfg.arch_type == "encdec":
+            logits, _ = model.apply(params, extra_args[0], tokens,
+                                    remat=False)
+        elif cfg.arch_type == "vlm":
+            logits, _ = model.apply(params, tokens, prefix_emb=extra_args[0],
+                                    remat=False)
+        else:
+            logits, _ = model.apply(params, tokens, remat=False)
+        return logits
+    return prefill_step

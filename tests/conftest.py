@@ -1,0 +1,27 @@
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def mesh1():
+    """1x1 ('data','model') mesh installed as ambient for shard_map code."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    jax.sharding.set_mesh(mesh)
+    return mesh
+
+
+def run_multidevice(script: str, n_devices: int = 8) -> str:
+    """Run a python snippet in a subprocess with N fake devices (the only
+    way to get >1 device after jax initialized in-process)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=500)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout

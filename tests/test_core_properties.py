@@ -1,0 +1,89 @@
+"""Property tests on core invariants (bitvec algebra, topology, routing)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bitvec import (bit_is_free, free_slots, full_mask, rotl_np,
+                               rotr_np)
+from repro.core.topology import Mesh3D, PORT_LOCAL, port_for
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 32), st.integers(0, 2**32 - 1))
+def test_rotr_rotl_inverse(n_slots, v):
+    v = np.uint32(v & full_mask(n_slots))
+    assert rotl_np(rotr_np(v, n_slots), n_slots) == v
+    assert rotr_np(rotl_np(v, n_slots), n_slots) == v
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 32), st.integers(0, 2**32 - 1))
+def test_rotr_preserves_popcount(n_slots, v):
+    v = np.uint32(v & full_mask(n_slots))
+    assert bin(int(rotr_np(v, n_slots))).count("1") == bin(int(v)).count("1")
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 255), st.integers(0, 255))
+def test_dor_path_validity(a, b):
+    mesh = Mesh3D(8, 8, 4)
+    if a == b:
+        return
+    path = mesh.dor_path(a, b)
+    assert len(path) == mesh.manhattan(a, b) + 1
+    assert path[0][0] == a and path[-1] == (b, PORT_LOCAL)
+    # every hop moves to an adjacent node through the named port
+    for (n1, p1), (n2, _p2) in zip(path, path[1:]):
+        assert mesh.neighbor(n1, p1) == n2
+
+
+def test_vault_partition_is_exact():
+    mesh = Mesh3D(8, 8, 4)
+    seen = set()
+    for v in range(mesh.n_vaults):
+        banks = mesh.banks_of_vault(v)
+        assert len(banks) == 8                      # HMC: 8 banks per vault
+        for b in banks:
+            assert mesh.vault_of(b) == v
+            seen.add(b)
+    assert seen == set(range(mesh.n_nodes))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 31), st.integers(0, 2**31))
+def test_free_slots_consistent(n_slots, v):
+    v = int(v) & full_mask(n_slots)
+    fs = free_slots(v, n_slots)
+    for s in range(n_slots):
+        assert (s in fs) == bit_is_free(v, s)
+
+
+def test_rope_is_rotation():
+    """RoPE preserves pairwise norms and relative-position inner products."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models.common import apply_rope
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((1, 16, 2, 32)), jnp.float32)
+    pos = jnp.arange(16)[None]
+    y = apply_rope(x, pos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               rtol=1e-5)
+    # shift covariance: <R(p)q, R(p+d)k> == <R(0)q, R(d)k>
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 1, 32)), jnp.float32)
+    def dot_at(pq, pk):
+        qq = apply_rope(q, jnp.asarray([[pq]]))
+        kk = apply_rope(k, jnp.asarray([[pk]]))
+        return float((qq * kk).sum())
+    np.testing.assert_allclose(dot_at(3, 7), dot_at(10, 14), rtol=1e-4)
+
+
+def test_softcap_bounds():
+    import jax.numpy as jnp
+    from repro.models.common import softcap
+    x = jnp.asarray(np.linspace(-1e4, 1e4, 101), jnp.float32)
+    y = np.asarray(softcap(x, 50.0))
+    assert np.all(np.abs(y) <= 50.0 + 1e-3)
+    assert np.all(np.diff(y) >= 0)   # monotone

@@ -1,0 +1,68 @@
+"""Decode-path correctness: step-by-step decode with caches must reproduce
+the full-forward logits — this exercises KV caches (incl. the sliding-window
+ring buffer), SSM states, RG-LRU states and enc-dec cross attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import make_model
+
+KEY = jax.random.PRNGKey(1)
+# one representative per cache mechanism
+ARCHS = ["qwen2.5-32b",          # plain KV
+         "gemma3-27b",           # window ring buffer + sandwich norms
+         "mamba2-130m",          # SSD state
+         "recurrentgemma-9b",    # RG-LRU + window MQA
+         "whisper-small"]        # enc-dec cross attention
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch, mesh1):
+    cfg = get_config(arch, smoke=True)
+    model = make_model(cfg)
+    params = model.init(KEY)
+    b, s = 2, 24
+    toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab)
+    if cfg.arch_type == "encdec":
+        enc = jax.random.normal(KEY, (b, cfg.enc_seq, cfg.d_model))
+        full_logits, _ = model.apply(params, enc, toks, remat=False)
+        memory = model.encode(params, enc, remat=False)
+        caches = model.init_caches(b, s)
+        outs = []
+        for i in range(s):
+            lg, caches = model.decode_step(params, toks[:, i:i + 1], caches,
+                                           jnp.int32(i), memory)
+            outs.append(lg)
+    else:
+        full_logits, _ = model.apply(params, toks, remat=False)
+        caches = model.init_caches(b, s)
+        outs = []
+        for i in range(s):
+            lg, caches = model.decode_step(params, toks[:, i:i + 1], caches,
+                                           jnp.int32(i))
+            outs.append(lg)
+    dec_logits = jnp.concatenate(outs, axis=1)
+    a = jax.nn.log_softmax(full_logits.astype(jnp.float32), axis=-1)
+    c = jax.nn.log_softmax(dec_logits.astype(jnp.float32), axis=-1)
+    err = float(jnp.max(jnp.abs(a - c)))
+    # recurrence archs accumulate bf16 order-of-operations noise between
+    # the chunk-parallel and strictly-sequential paths; attention archs
+    # recompute identically. Greedy decisions must agree in all cases.
+    tol = 5e-2 if cfg.family in ("dense", "audio", "vlm") else 1.5
+    assert err < tol, f"{arch}: decode/forward divergence {err}"
+    agree = float((a.argmax(-1) == c.argmax(-1)).mean())
+    assert agree > 0.95, f"{arch}: greedy tokens diverge ({agree})"
+
+
+def test_generate_engine(mesh1):
+    from repro.serving import Engine
+    cfg = get_config("qwen1.5-4b", smoke=True)
+    model = make_model(cfg)
+    params = model.init(KEY)
+    eng = Engine(model, cfg, max_len=64)
+    prompt = jax.random.randint(KEY, (2, 5), 0, cfg.vocab)
+    out = eng.generate(params, prompt, n_new=8)
+    assert out.shape == (2, 13)
+    assert bool((out[:, :5] == prompt).all())

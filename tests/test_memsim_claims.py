@@ -1,0 +1,88 @@
+"""The paper's headline claims, reproduced by the simulator (Section 3):
+
+* NoM vs conventional 3D DRAM:   ~3.8x IPC  (band 2.5x - 6x geomean)
+* NoM vs RowClone:               ~1.75x     (band 1.3x - 2.3x)
+* NoM-Light within 5-20% of NoM
+* sublinear degradation under link-frequency scaling
+* NoM-Light TSV-conflict motivation: low conflict probability
+"""
+import numpy as np
+import pytest
+
+from repro.memsim import (SimParams, WorkloadSpec, generate, simulate,
+                          traffic_breakdown)
+
+WORKLOADS = ("fork", "fileCopy20", "fileCopy40", "fileCopy60")
+
+
+@pytest.fixture(scope="module")
+def results():
+    out = {}
+    for wl in WORKLOADS:
+        reqs = generate(WorkloadSpec(wl, n_requests=900, seed=1))
+        out[wl] = {cfg: simulate(reqs, SimParams(config=cfg), name=wl)
+                   for cfg in ("conventional", "rowclone", "nom",
+                               "nom_light")}
+    return out
+
+
+def _gm(xs):
+    return float(np.exp(np.mean(np.log(xs))))
+
+
+def test_traffic_mix_matches_fig3():
+    for wl, want in [("fileCopy20", 0.20), ("fileCopy40", 0.40),
+                     ("fileCopy60", 0.60)]:
+        reqs = generate(WorkloadSpec(wl, n_requests=1200, seed=0))
+        mix = traffic_breakdown(reqs)
+        assert abs(mix["inter_bank_copy"] - want) < 0.08, (wl, mix)
+
+
+def test_ordering_nom_beats_rowclone_beats_conventional(results):
+    for wl, r in results.items():
+        assert r["nom"].ipc > r["rowclone"].ipc > r["conventional"].ipc, wl
+
+
+def test_speedup_vs_conventional_in_band(results):
+    ratios = [r["nom"].ipc / r["conventional"].ipc for r in results.values()]
+    assert 2.5 < _gm(ratios) < 6.5, ratios   # paper: 3.8x average
+
+
+def test_speedup_vs_rowclone_in_band(results):
+    ratios = [r["nom"].ipc / r["rowclone"].ipc for r in results.values()]
+    assert 1.25 < _gm(ratios) < 2.4, ratios  # paper: 1.75x average
+
+
+def test_nom_light_gap_in_band(results):
+    for wl, r in results.items():
+        gap = 1 - r["nom_light"].ipc / r["nom"].ipc
+        assert 0.0 <= gap <= 0.25, (wl, gap)  # paper: 5-20%
+
+
+def test_link_frequency_scaling_sublinear():
+    reqs = generate(WorkloadSpec("fileCopy60", n_requests=700, seed=1))
+    base = simulate(reqs, SimParams(config="nom", nom_link_ratio=1.0)).ipc
+    rc = simulate(reqs, SimParams(config="rowclone")).ipc
+    for ratio in (0.75, 0.5):
+        ipc = simulate(reqs, SimParams(config="nom",
+                                       nom_link_ratio=ratio)).ipc
+        degradation = 1 - ipc / base
+        assert degradation < (1 - ratio) * 1.1, (ratio, degradation)
+        assert ipc > rc      # paper: still beats RowClone at half speed
+
+
+def test_tsv_conflict_rate_low():
+    """The NoM-Light motivation: dedicated-Z beats rarely coincide with TSV
+    activity (paper: 0.45% low load, 7.1% high load)."""
+    reqs = generate(WorkloadSpec("fileCopy60", n_requests=700, seed=1))
+    r = simulate(reqs, SimParams(config="nom"))
+    assert r.tsv_conflict_frac < 0.10, r.tsv_conflict_frac
+
+
+def test_slot_bundling_monotone():
+    """Beyond-paper ablation invariant: more bundled slots per copy never
+    hurts IPC (capacity is only additive)."""
+    reqs = generate(WorkloadSpec("fileCopy60", n_requests=500, seed=3))
+    ipcs = [simulate(reqs, SimParams(config="nom", nom_extra_slots=e)).ipc
+            for e in (0, 3, 7)]
+    assert ipcs[0] < ipcs[1] < ipcs[2], ipcs

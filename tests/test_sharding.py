@@ -1,0 +1,66 @@
+"""Sharding-rule unit tests (priority assignment, fallbacks, caches)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import (default_rules, spec_for_cache,
+                                     spec_for_param)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # shape (1,1) but named like production; rule logic only reads names +
+    # sizes, so use a fake 16x16 via Mesh of devices? sizes matter for
+    # divisibility -> build an abstract mesh.
+    from jax.sharding import AbstractMesh
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+def test_vocab_and_heads_prefer_model(mesh):
+    rules = default_rules(mesh, fsdp=True)
+    # embedding (vocab, embed): model->vocab, data->embed (fsdp)
+    assert spec_for_param(("vocab", "embed"), (151936, 4096), rules,
+                          mesh) == P("model", "data")
+    # attention q (embed, heads, head_dim), 64 heads divisible
+    assert spec_for_param(("embed", "heads", "head_dim"),
+                          (4096, 64, 128), rules, mesh) \
+        == P("data", "model", None)
+
+
+def test_non_divisible_heads_fall_back(mesh):
+    rules = default_rules(mesh, fsdp=False)
+    # 40 heads don't divide 16 -> model axis unused (CP attention handles
+    # the compute); embed unsharded without fsdp
+    assert spec_for_param(("embed", "heads", "head_dim"),
+                          (5120, 40, 128), rules, mesh) == P(None, None,
+                                                             None)
+
+
+def test_experts_claim_model_before_mlp(mesh):
+    rules = default_rules(mesh, fsdp=True)
+    spec = spec_for_param(("experts", "embed", "mlp"), (128, 4096, 1536),
+                          rules, mesh)
+    assert spec == P("model", "data", None)
+
+
+def test_no_axis_used_twice(mesh):
+    rules = default_rules(mesh, fsdp=True)
+    spec = spec_for_param(("vocab", "mlp"), (32000, 4096), rules, mesh)
+    used = [s for s in spec if s is not None]
+    assert len(used) == len(set(used))
+
+
+def test_cache_spec_kv_seq(mesh):
+    rules = default_rules(mesh, fsdp=False, kv_seq_axis="data")
+    spec = spec_for_cache(("batch", "kv_seq", "kv_heads", "head_dim"),
+                          (1, 524288, 16, 128), rules, mesh)
+    # batch=1 not divisible -> dropped; seq on data; kv_heads on model
+    assert spec == P(None, "data", "model", None)
+
+
+def test_cache_spec_drops_non_divisible(mesh):
+    rules = default_rules(mesh, fsdp=False, kv_seq_axis="model")
+    spec = spec_for_cache(("batch", "kv_seq", "kv_heads", "head_dim"),
+                          (128, 32768, 8, 128), rules, mesh)
+    assert spec[1] == "model"      # seq claims model
+    assert spec[2] is None         # kv=8 can't take it (already used)
