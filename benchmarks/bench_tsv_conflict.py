@@ -16,5 +16,8 @@ def run():
         us = (time.perf_counter() - t0) * 1e6
         rows.append((f"tsv_conflict/{label}", us,
                      f"p_conflict={100*r.tsv_conflict_frac:.2f}%% "
-                     f"(paper: 0.45%% low / 7.1%% high)"))
+                     f"(paper: 0.45%% low / 7.1%% high) "
+                     f"inflight_avg={r.extra['nom_inflight_avg']:.2f} "
+                     f"inflight_max={r.extra['nom_inflight_max']} "
+                     f"ccu_batch_avg={r.extra['nom_batch_avg']:.2f}"))
     return rows

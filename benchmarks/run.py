@@ -21,13 +21,22 @@ ALL = [
     ("roofline", bench_roofline),
 ]
 
+# --quick: the CI smoke subset — the scheduler-centric benches that gate
+# the concurrent-transfer perf trajectory, fast enough for every PR.
+QUICK = ("tsv_conflict", "slot_alloc", "nom_a2a")
+
 
 def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    args = [a for a in sys.argv[1:]]
+    quick = "--quick" in args
+    args = [a for a in args if a != "--quick"]
+    only = args[0] if args else None
     print("name,us_per_call,derived")
     t_start = time.time()
     for label, mod in ALL:
         if only and only not in label:
+            continue
+        if quick and not any(q in label for q in QUICK):
             continue
         try:
             for name, us, derived in mod.run():

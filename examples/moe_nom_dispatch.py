@@ -12,13 +12,13 @@ import jax                  # noqa: E402
 import jax.numpy as jnp     # noqa: E402
 
 from repro.core.nom_collectives import a2a_link_chunks  # noqa: E402
+from repro.launch.mesh import make_mesh, set_ambient_mesh  # noqa: E402
 from repro.models.moe import MoE, MoEConfig             # noqa: E402
 
 
 def main():
-    mesh = jax.make_mesh((1, 8), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    jax.sharding.set_mesh(mesh)
+    mesh = make_mesh((1, 8), ("data", "model"))
+    set_ambient_mesh(mesh)
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (2, 64, 128), jnp.float32)
 

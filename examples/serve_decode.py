@@ -6,6 +6,8 @@ import argparse
 
 import jax
 
+from repro.launch.mesh import make_mesh, set_ambient_mesh
+
 from repro.configs import ARCHS, get_config
 from repro.models import make_model
 from repro.serving import Engine
@@ -19,9 +21,8 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=16)
     args = ap.parse_args()
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    jax.sharding.set_mesh(mesh)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    set_ambient_mesh(mesh)
     cfg = get_config(args.arch, smoke=True)
     model = make_model(cfg)
     params = model.init(jax.random.PRNGKey(0))

@@ -14,6 +14,8 @@ import dataclasses
 
 import jax
 
+from repro.launch.mesh import make_mesh, set_ambient_mesh
+
 from repro.configs import get_config
 from repro.configs.base import ArchConfig, LayerKind
 from repro.data import DataConfig
@@ -40,9 +42,8 @@ def main():
     ap.add_argument("--ckpt", default="/tmp/repro_example_ckpt")
     args = ap.parse_args()
 
-    mesh = jax.make_mesh((len(jax.devices()), 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    jax.sharding.set_mesh(mesh)
+    mesh = make_mesh((len(jax.devices()), 1), ("data", "model"))
+    set_ambient_mesh(mesh)
 
     cfg, steps, batch, seq = preset_cfg(args.preset)
     model = make_model(cfg)

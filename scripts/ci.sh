@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 gate: the full offline test suite (JAX 0.4.37, no network, no
+# hypothesis — see tests/_hypothesis_shim.py) plus a quick benchmark smoke
+# so the batched-scheduler perf numbers are exercised on every PR.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -q "$@"
+
+echo "== smoke: benchmarks (quick subset) =="
+python benchmarks/run.py --quick

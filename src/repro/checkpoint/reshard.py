@@ -13,7 +13,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.nom_collectives import Transfer, TransferPlan, plan_transfers
+from repro.core.nom_collectives import Transfer, TransferPlan
+from repro.core.scheduler import ScheduleReport, schedule_transfers
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,12 +34,24 @@ def shard_owners(shape, spec_axes, mesh_shape, axis_names):
 
 
 def reshard_plan(params_meta: dict[str, int], old_mesh: tuple,
-                 new_mesh: tuple, torus: bool = True) -> TransferPlan:
+                 new_mesh: tuple, torus: bool = True,
+                 policy: str = "longest_first") -> TransferPlan:
     """params_meta: name -> nbytes (per-param total).  Devices are laid out
     row-major on both meshes; each param's bytes move from its old owner
     set to its new owner set, round-robin.  Returns the NOM round plan
     (used by tests and the elastic example; actual array placement is done
     by jax.device_put — this plan is the *schedule* evidence)."""
+    plan, _report = reshard_plan_with_report(params_meta, old_mesh, new_mesh,
+                                             torus=torus, policy=policy)
+    return plan
+
+
+def reshard_plan_with_report(
+        params_meta: dict[str, int], old_mesh: tuple, new_mesh: tuple,
+        torus: bool = True,
+        policy: str = "longest_first") -> tuple[TransferPlan, ScheduleReport]:
+    """Like :func:`reshard_plan` but routed through the unified NOM batch
+    scheduler, returning the concurrency report alongside the plan."""
     old_n = int(np.prod(old_mesh))
     new_n = int(np.prod(new_mesh))
     shape = new_mesh if new_n >= old_n else old_mesh
@@ -51,4 +64,5 @@ def reshard_plan(params_meta: dict[str, int], old_mesh: tuple,
         if src != dst:
             transfers.append(Transfer(src=src, dst=dst, nbytes=nbytes,
                                       tag=name))
-    return plan_transfers(shape, transfers, torus=torus)
+    return schedule_transfers(transfers, shape=shape, torus=torus,
+                              policy=policy)

@@ -6,17 +6,18 @@ from .nom_collectives import (Transfer, TransferPlan, a2a_link_chunks,
                               nom_all_gather, nom_all_to_all,
                               nom_reduce_scatter, plan_transfers,
                               ring_offsets)
-from .slot_alloc import (AllocResult, Circuit, SlotTable, TdmAllocator,
-                         TdmAllocatorLight, traceback, wavefront_search,
-                         wavefront_search_batch)
+from .scheduler import ScheduleReport, schedule_transfers
+from .slot_alloc import (AllocResult, BatchReport, Circuit, CopyRequest,
+                         SlotTable, TdmAllocator, TdmAllocatorLight,
+                         traceback, wavefront_search, wavefront_search_batch)
 from .topology import PAPER_MESH, Mesh3D, N_PORTS, PORT_LOCAL, port_for
 
 __all__ = [
     "bit_is_free", "free_slots", "full_mask", "rotr", "rotr_np",
     "Transfer", "TransferPlan", "a2a_link_chunks", "nom_all_gather",
     "nom_all_to_all", "nom_reduce_scatter", "plan_transfers", "ring_offsets",
-    "AllocResult", "Circuit", "SlotTable", "TdmAllocator",
-    "TdmAllocatorLight", "traceback", "wavefront_search",
-    "wavefront_search_batch", "PAPER_MESH", "Mesh3D", "N_PORTS",
-    "PORT_LOCAL", "port_for",
+    "AllocResult", "BatchReport", "Circuit", "CopyRequest", "ScheduleReport",
+    "SlotTable", "TdmAllocator", "TdmAllocatorLight", "schedule_transfers",
+    "traceback", "wavefront_search", "wavefront_search_batch", "PAPER_MESH",
+    "Mesh3D", "N_PORTS", "PORT_LOCAL", "port_for",
 ]

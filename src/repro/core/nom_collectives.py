@@ -188,13 +188,37 @@ class TransferPlan:
         used = sum(len(p) for p in self.paths)
         return used / max(1, n_links * self.n_rounds)
 
+    def concurrency(self) -> dict[str, float]:
+        """In-flight transfers per round — the schedule's concurrency
+        profile (a transfer is in flight from its start round until its
+        last hop)."""
+        active = [0] * self.n_rounds
+        for s, path in zip(self.starts, self.paths):
+            for j in range(len(path)):
+                active[s + j] += 1
+        busy = [a for a in active if a]
+        return {"max_inflight": float(max(busy, default=0)),
+                "avg_inflight": float(np.mean(busy)) if busy else 0.0}
+
 
 def plan_transfers(shape: tuple[int, ...], transfers: list[Transfer],
-                   torus: bool = True) -> TransferPlan:
-    """Greedy TDM scheduling: longest path first, earliest conflict-free
-    start slot (the unrolled-time version of the CCU's slot allocation)."""
+                   torus: bool = True,
+                   policy: str = "longest_first") -> TransferPlan:
+    """Greedy TDM scheduling: earliest conflict-free start slot per
+    transfer (the unrolled-time version of the CCU's slot allocation — a
+    transfer that loses a slot to an earlier reservation retries at the
+    next start round, the increasing-slot fallback).
+
+    ``policy``: "longest_first" sorts by descending path length (best
+    packing); "arrival" keeps request order (the CCU's FIFO commit rule,
+    matching ``TdmAllocator.allocate_batch``)."""
     paths = [_dor_path(t.src, t.dst, shape, torus) for t in transfers]
-    order = sorted(range(len(transfers)), key=lambda i: -len(paths[i]))
+    if policy == "longest_first":
+        order = sorted(range(len(transfers)), key=lambda i: -len(paths[i]))
+    elif policy == "arrival":
+        order = list(range(len(transfers)))
+    else:
+        raise ValueError(f"unknown policy {policy!r}")
     busy: dict[tuple, set[int]] = defaultdict(set)   # link -> set of rounds
     starts = [0] * len(transfers)
     for i in order:

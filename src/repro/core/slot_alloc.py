@@ -113,6 +113,14 @@ def wavefront_search_batch(occ, srcs, dsts, init_vecs, *, mesh, n_slots):
     return jax.vmap(lambda s, d, iv: fn(occ, s, d, iv))(srcs, dsts, init_vecs)
 
 
+@partial(jax.jit, static_argnames=("mesh", "n_slots"))
+def _search_batch_jit(occ, srcs, dsts, init_vecs, *, mesh, n_slots):
+    """Module-level jit of the batched search so the compile cache is shared
+    across allocator instances (static over mesh geometry + window size)."""
+    return wavefront_search_batch(occ, srcs, dsts, init_vecs, mesh=mesh,
+                                  n_slots=n_slots)
+
+
 # ---------------------------------------------------------------------------
 # Host-side CCU bookkeeping
 # ---------------------------------------------------------------------------
@@ -171,6 +179,24 @@ class SlotTable:
         weights = (np.uint32(1) << np.arange(self.n_slots, dtype=np.uint32))
         return (busy * weights).sum(axis=1).astype(np.uint32)
 
+    # -- validation -----------------------------------------------------------
+    def can_reserve(self, hops: list[tuple[int, int, int]],
+                    window: int) -> bool:
+        """True iff every (node, port, slot) in ``hops`` is free as of
+        ``window`` and the hop list itself is internally disjoint — the
+        batched scheduler's commit check against circuits reserved after
+        the search snapshot was taken."""
+        seen: set[tuple[int, int, int]] = set()
+        for hop in hops:
+            node, port, slot = hop
+            if hop in seen or self.expiry[node, port, slot] > window:
+                return False
+            seen.add(hop)
+        return True
+
+    def can_reserve_bus(self, column: int, slot: int, window: int) -> bool:
+        return bool(self.bus_expiry[column, slot] <= window)
+
     # -- reservation ----------------------------------------------------------
     def reserve(self, circuit: Circuit, window: int) -> None:
         until = window + circuit.n_windows
@@ -228,7 +254,7 @@ def traceback(vec: np.ndarray, occ: np.ndarray, mesh: Mesh3D, n_slots: int,
 
 
 # ---------------------------------------------------------------------------
-# Full allocation: search + slot choice + trace-back + reserve
+# Full allocation: batched search + slot choice + trace-back + reserve
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
 class AllocResult:
@@ -236,12 +262,65 @@ class AllocResult:
     searched_cycle: int
 
 
+@dataclasses.dataclass(frozen=True)
+class CopyRequest:
+    """One pending inter-bank copy for the batched CCU pipeline.
+
+    ``cycle`` optionally anchors this request later than the batch cycle
+    (e.g. its source read completes later); the occupancy snapshot is still
+    taken at the batch cycle, which is conservative."""
+    src: int
+    dst: int
+    nbytes: int
+    max_extra_slots: int = 0
+    cycle: int | None = None
+
+
+@dataclasses.dataclass
+class BatchReport:
+    """Telemetry of the last ``allocate_batch`` call."""
+    n_requests: int = 0
+    n_committed: int = 0
+    n_denied: int = 0          # no feasible circuit even after re-search
+    search_rounds: int = 0     # vectorized wavefront passes issued
+    conflicts: int = 0         # stale-snapshot commits that forced a re-search
+
+
+_CONFLICT = object()   # sentinel: stale search, re-run against fresh state
+
+
+@dataclasses.dataclass
+class _Search:
+    """Converged search state for one request (full-mesh NoM)."""
+    occ: np.ndarray
+    vec: np.ndarray
+
+
+def _pow2_pad(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
 class TdmAllocator:
     """The CCU's allocation pipeline for the *full 3D mesh* NoM.
 
-    ``allocate`` implements the paper's 3-cycle setup: the request picked at
-    cycle t searches at t (1 cycle), programs slot tables (1 cycle), issues
-    the read (1 cycle), so the earliest injection is t+3.
+    The paper's CCU sets up *many* link-disjoint circuits that stream
+    concurrently; :meth:`allocate_batch` is the corresponding entry point:
+    one vectorized :func:`wavefront_search_batch` pass over every pending
+    request, then a host-side commit loop that reserves circuits in arrival
+    order.  A commit can discover that an earlier circuit from the *same*
+    batch claimed one of its hops (the search snapshot is per-round, not
+    per-request); the loser and everything after it are retried against a
+    fresh search — at later source slots, the paper's increasing-slot
+    fallback — so the results are bit-identical to servicing the stream
+    through :meth:`allocate` one request at a time.
+
+    ``allocate`` (the serial spelling) implements the paper's 3-cycle
+    setup: the request picked at cycle t searches at t (1 cycle), programs
+    slot tables (1 cycle), issues the read (1 cycle), so the earliest
+    injection is t+3.  It is a batch of one.
     """
 
     def __init__(self, mesh: Mesh3D, n_slots: int = 16,
@@ -250,30 +329,94 @@ class TdmAllocator:
         self.n_slots = n_slots
         self.link_bytes = link_bytes  # 64-bit links => 8 bytes/slot-cycle
         self.table = SlotTable(mesh, n_slots)
-        self._search = partial(wavefront_search, mesh=mesh, n_slots=n_slots)
+        self.last_report = BatchReport()
         if use_pallas:  # pragma: no cover - exercised in kernel tests
             from repro.kernels.slot_alloc import ops as _ops
-            self._search = partial(_ops.wavefront_search_pallas, mesh=mesh,
-                                   n_slots=n_slots)
+            self._search_batch = partial(_ops.wavefront_search_pallas_batch,
+                                         mesh=mesh, n_slots=n_slots)
+        else:
+            self._search_batch = partial(_search_batch_jit, mesh=mesh,
+                                         n_slots=n_slots)
 
     def n_windows_for(self, nbytes: int, slots: int = 1) -> int:
         per_window = self.link_bytes * slots
         return max(1, -(-nbytes // per_window))
 
+    # -- public API -----------------------------------------------------------
     def allocate(self, src: int, dst: int, nbytes: int, cycle: int,
                  max_extra_slots: int = 0) -> AllocResult:
         """Find + reserve the earliest circuit for a copy of ``nbytes``.
 
         Returns AllocResult with circuit=None if the lattice is fully busy
         (caller retries next cycle, as the CCU would)."""
-        t_ready = cycle + 3                       # paper's 3-cycle setup
-        window = t_ready // self.n_slots
+        return self.allocate_batch(
+            [CopyRequest(src, dst, nbytes, max_extra_slots)], cycle)[0]
+
+    def allocate_batch(self, requests: list, cycle: int) -> list[AllocResult]:
+        """Service a batch of pending copy requests concurrently.
+
+        ``requests``: CopyRequest list (or (src, dst, nbytes) tuples).
+        Returns one AllocResult per request, in request order.  All searches
+        of a round run as a single vectorized pass; commits happen in
+        arrival order against the live slot table, so every committed
+        circuit is link-disjoint from every other one in its windows."""
+        reqs = [r if isinstance(r, CopyRequest) else CopyRequest(*r)
+                for r in requests]
+        report = BatchReport(n_requests=len(reqs))
+        results: list[AllocResult | None] = [None] * len(reqs)
+        window = (cycle + 3) // self.n_slots
+        pending = list(range(len(reqs)))
+        while pending:
+            report.search_rounds += 1
+            states = self._search_states([reqs[i] for i in pending], window)
+            stalled: int | None = None
+            for k, i in enumerate(pending):
+                req = reqs[i]
+                t_ready = max(req.cycle if req.cycle is not None else cycle,
+                              cycle) + 3
+                out = self._commit_one(req, states[k], window, t_ready)
+                if out is _CONFLICT:
+                    # The snapshot this round searched against went stale
+                    # (an earlier commit claimed a hop).  The very first
+                    # commit of a round can never conflict, so the loop
+                    # always makes progress.
+                    assert k > 0, "fresh search conflicted with itself"
+                    report.conflicts += 1
+                    stalled = k
+                    break
+                results[i] = AllocResult(out, cycle)
+                report.n_committed += out is not None
+                report.n_denied += out is None
+            pending = pending[stalled:] if stalled is not None else []
+        self.last_report = report
+        return results
+
+    # -- search (one vectorized pass per round) -------------------------------
+    def _run_search(self, occ: np.ndarray,
+                    entries: list[tuple[int, int, int]]) -> np.ndarray:
+        """Run ``entries`` = [(src, dst, init_vec), ...] through one batched
+        wavefront pass, padded to a power of two so jit retraces stay rare.
+        Returns (len(entries), n_nodes) uint32 busy vectors (numpy)."""
+        pad = _pow2_pad(len(entries))
+        srcs = np.zeros(pad, np.int32)
+        dsts = np.zeros(pad, np.int32)
+        inits = np.zeros(pad, np.uint32)
+        for j, (s, d, iv) in enumerate(entries):
+            srcs[j], dsts[j], inits[j] = s, d, iv
+        vecs = self._search_batch(jnp.asarray(occ), srcs, dsts, inits)
+        return np.asarray(vecs)[:len(entries)]
+
+    def _search_states(self, reqs: list[CopyRequest],
+                       window: int) -> list[_Search]:
         occ = self.table.busy_masks(window)
-        vec = np.asarray(self._search(jnp.asarray(occ), jnp.int32(src),
-                                      jnp.int32(dst), jnp.uint32(0)))
-        avail = int(vec[dst]) | int(occ[dst, PORT_LOCAL])
-        dist = self.mesh.manhattan(src, dst)
-        best = None  # (start_cycle, arrival_slot)
+        vecs = self._run_search(occ, [(r.src, r.dst, 0) for r in reqs])
+        return [_Search(occ=occ, vec=vecs[j]) for j in range(len(reqs))]
+
+    # -- commit (host-side, arrival order) ------------------------------------
+    def _best_slot(self, avail: int, dist: int, t_ready: int):
+        """Earliest (start_cycle, arrival_slot) over the free arrival slots
+        of ``avail`` for a circuit of ``dist`` hops."""
+        best = None
         for a in range(self.n_slots):
             if not bit_is_free(avail, a):
                 continue
@@ -282,30 +425,60 @@ class TdmAllocator:
             c = t_ready + ((s - t_ready) % self.n_slots)
             if best is None or c < best[0]:
                 best = (c, a)
+        return best
+
+    def _commit_one(self, req: CopyRequest, st: _Search, window: int,
+                    t_ready: int):
+        """Reserve the earliest circuit for ``req`` from its search state.
+        Returns the Circuit, None (mesh saturated), or _CONFLICT when the
+        state predates a commit that claimed one of the chosen hops.
+
+        Validation runs against the snapshot ``window`` (conservative: it
+        is never later than the request's own window), but the reservation
+        anchors at the request's ``t_ready`` window so a cycle-anchored
+        request holds its slots for its actual streaming interval — exactly
+        what serial ``allocate`` at that cycle would reserve."""
+        occ, vec = st.occ, st.vec
+        w_res = t_ready // self.n_slots
+        avail = int(vec[req.dst]) | int(occ[req.dst, PORT_LOCAL])
+        dist = self.mesh.manhattan(req.src, req.dst)
+        best = self._best_slot(avail, dist, t_ready)
         if best is None:
-            return AllocResult(None, cycle)
+            return None
         start_cycle, a = best
-        hops = traceback(vec, occ, self.mesh, self.n_slots, src, dst, a)
+        hops = traceback(vec, occ, self.mesh, self.n_slots, req.src, req.dst,
+                         a)
         # Optionally accelerate with extra free slots (paper Section 2.1).
         extra = 0
-        if max_extra_slots:
+        if req.max_extra_slots:
             for a2 in range(self.n_slots):
-                if extra >= max_extra_slots:
+                if extra >= req.max_extra_slots:
                     break
                 if a2 != a and bit_is_free(avail, a2):
                     try:
                         hops2 = traceback(vec, occ, self.mesh, self.n_slots,
-                                          src, dst, a2)
+                                          req.src, req.dst, a2)
                     except RuntimeError:
                         continue
                     hops = hops + hops2
                     extra += 1
-        n_win = self.n_windows_for(nbytes, slots=1 + extra)
-        circ = Circuit(src=src, dst=dst, start_cycle=start_cycle,
+        if not self.table.can_reserve(hops, window):
+            return _CONFLICT
+        n_win = self.n_windows_for(req.nbytes, slots=1 + extra)
+        circ = Circuit(src=req.src, dst=req.dst, start_cycle=start_cycle,
                        n_windows=n_win, hops=hops, slots_per_window=1 + extra,
                        distance=dist, _n_slots_hint=self.n_slots)
-        self.table.reserve(circ, window)
-        return AllocResult(circ, cycle)
+        self.table.reserve(circ, w_res)
+        return circ
+
+
+@dataclasses.dataclass
+class _SearchLight(_Search):
+    """Cross-layer NoM-Light search state: two phase orders, shared bus."""
+    bus: np.ndarray = None
+    w: int = -1                # order A: XY target on the source layer
+    w2: int = -1               # order B: bus landing on the dest layer
+    vec_b: np.ndarray = None   # order B converged vectors (vec is order A)
 
 
 class TdmAllocatorLight(TdmAllocator):
@@ -314,50 +487,62 @@ class TdmAllocatorLight(TdmAllocator):
     per slot (Section 2.3).
 
     Routes are XY-monotone on one layer plus at most one bus hop.  We search
-    both phase orders (XY-then-bus, bus-then-XY) and keep the earlier.
-    """
+    both phase orders (XY-then-bus, bus-then-XY) — both ride the same
+    vectorized pass as the rest of the batch — and keep the earlier."""
 
-    def allocate(self, src: int, dst: int, nbytes: int, cycle: int,
-                 max_extra_slots: int = 0) -> AllocResult:
+    def _search_states(self, reqs, window):
         mesh, n = self.mesh, self.n_slots
-        sx, sy, sz = mesh.coords(src)
-        dx, dy, dz = mesh.coords(dst)
-        t_ready = cycle + 3
-        window = t_ready // n
         occ = self.table.busy_masks(window)
         bus = self.table.bus_busy_masks(window)
-        if sz == dz:
-            return super().allocate(src, dst, nbytes, cycle, max_extra_slots)
+        entries: list[tuple[int, int, int]] = []
+        metas = []
+        for r in reqs:
+            sx, sy, sz = mesh.coords(r.src)
+            dx, dy, dz = mesh.coords(r.dst)
+            if sz == dz:
+                metas.append((len(entries), None, None))
+                entries.append((r.src, r.dst, 0))
+            else:
+                w = mesh.node_id(dx, dy, sz)     # order A: XY first
+                w2 = mesh.node_id(sx, sy, dz)    # order B: bus first
+                init = rotr_np(np.uint32(int(bus[mesh.column_of(r.src)])), n)
+                metas.append((len(entries), w, w2))
+                entries.append((r.src, w, 0))
+                entries.append((w2, r.dst, int(init)))
+        vecs = self._run_search(occ, entries)
+        states = []
+        for j, w, w2 in metas:
+            if w is None:
+                states.append(_Search(occ=occ, vec=vecs[j]))
+            else:
+                states.append(_SearchLight(occ=occ, vec=vecs[j], bus=bus,
+                                           w=w, w2=w2, vec_b=vecs[j + 1]))
+        return states
 
+    def _commit_one(self, req, st, window, t_ready):
+        if not isinstance(st, _SearchLight):   # same-layer: full-mesh rules
+            return super()._commit_one(req, st, window, t_ready)
+        mesh, n = self.mesh, self.n_slots
+        w_res = t_ready // n
+        occ, bus = st.occ, st.bus
+        vecA, vecB, w, w2 = st.vec, st.vec_b, st.w, st.w2
+        sx, sy, _sz = mesh.coords(req.src)
+        dx, dy, _dz = mesh.coords(req.dst)
         dist_xy = abs(sx - dx) + abs(sy - dy)
-        cands = []  # (start_cycle, order, arrival_slot, vec, anchor nodes)
 
-        # Order A: XY on the source layer, then bus down/up to dst.
-        w = mesh.node_id(dx, dy, sz)
-        vecA = np.asarray(self._search(jnp.asarray(occ), jnp.int32(src),
-                                       jnp.int32(w), jnp.uint32(0)))
         availA = rotr_np(np.uint32(int(vecA[w]) | int(bus[mesh.column_of(w)])),
                          n)
-        availA = int(availA) | int(occ[dst, PORT_LOCAL])
-        # Order B: bus first, then XY on the destination layer.
-        w2 = mesh.node_id(sx, sy, dz)
-        init = rotr_np(np.uint32(int(bus[mesh.column_of(src)])), n)
-        vecB = np.asarray(self._search(jnp.asarray(occ), jnp.int32(w2),
-                                       jnp.int32(dst), jnp.asarray(init, np.uint32)))
-        availB = int(vecB[dst]) | int(occ[dst, PORT_LOCAL])
+        availA = int(availA) | int(occ[req.dst, PORT_LOCAL])
+        availB = int(vecB[req.dst]) | int(occ[req.dst, PORT_LOCAL])
 
         total_hops = dist_xy + 1  # bus counts as one slot regardless of layers
         best = None  # (start_cycle, arrival_slot, order)
         for order, avail in (("A", availA), ("B", availB)):
-            for a in range(n):
-                if not bit_is_free(avail, a):
-                    continue
-                s = (a - total_hops) % n
-                c = t_ready + ((s - t_ready) % n)
-                if best is None or c < best[0]:
-                    best = (c, a, order)
+            got = self._best_slot(avail, total_hops, t_ready)
+            if got is not None and (best is None or got[0] < best[0]):
+                best = (got[0], got[1], order)
         if best is None:
-            return AllocResult(None, cycle)
+            return None
         start_cycle, a0, order = best
 
         def hops_for(order: str, a: int):
@@ -365,39 +550,47 @@ class TdmAllocatorLight(TdmAllocator):
             if order == "A":
                 bus_slot = (a - 1) % n
                 try:
-                    hops_xy = (traceback(vecA, occ, mesh, n, src, w, bus_slot)
-                               [:-1] if dist_xy else [])
+                    hops_xy = (traceback(vecA, occ, mesh, n, req.src, w,
+                                         bus_slot)[:-1] if dist_xy else [])
                 except RuntimeError:
                     return None
-                return (hops_xy + [(dst, PORT_LOCAL, a)],
+                return (hops_xy + [(req.dst, PORT_LOCAL, a)],
                         (mesh.column_of(w), bus_slot))
             s = (a - total_hops) % n              # injection slot = bus slot
             try:
-                hops_xy = (traceback(vecB, occ, mesh, n, w2, dst, a)
-                           if dist_xy else [(dst, PORT_LOCAL, a)])
+                hops_xy = (traceback(vecB, occ, mesh, n, w2, req.dst, a)
+                           if dist_xy else [(req.dst, PORT_LOCAL, a)])
             except RuntimeError:
                 return None
-            return hops_xy, (mesh.column_of(src), s)
+            return hops_xy, (mesh.column_of(req.src), s)
 
         # Bundle extra free slots to accelerate the transfer (Section 2.1).
         picked = []
         avail = availA if order == "A" else availB
         for a in [a0] + [x for x in range(n) if x != a0]:
-            if len(picked) >= 1 + max_extra_slots:
+            if len(picked) >= 1 + req.max_extra_slots:
                 break
             if not bit_is_free(avail, a):
                 continue
             got = hops_for(order, a)
             if got is not None:
                 picked.append(got)
+        if not picked:
+            return _CONFLICT
         hops = [h for hs, _bus in picked for h in hs]
-        n_win = self.n_windows_for(nbytes, slots=len(picked))
-        circ = Circuit(src=src, dst=dst, start_cycle=start_cycle,
+        bus_slots = [b for _h, b in picked]
+        if (not self.table.can_reserve(hops, window)
+                or len({b for b in bus_slots}) < len(bus_slots)
+                or not all(self.table.can_reserve_bus(col, bslot, window)
+                           for col, bslot in bus_slots)):
+            return _CONFLICT
+        n_win = self.n_windows_for(req.nbytes, slots=len(picked))
+        circ = Circuit(src=req.src, dst=req.dst, start_cycle=start_cycle,
                        n_windows=n_win, hops=hops,
                        slots_per_window=len(picked), uses_bus=True,
                        bus_column=picked[0][1][0], distance=total_hops,
                        _n_slots_hint=n)
-        self.table.reserve(circ, window)
-        for col, bslot in (bus for _h, bus in picked):
-            self.table.reserve_bus(col, bslot, window, n_win)
-        return AllocResult(circ, cycle)
+        self.table.reserve(circ, w_res)
+        for col, bslot in bus_slots:
+            self.table.reserve_bus(col, bslot, w_res, n_win)
+        return circ

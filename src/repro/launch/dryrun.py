@@ -268,7 +268,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
             kv_seq_axis = "model"
         use_fsdp = cfg.fsdp if fsdp is None else fsdp
         rules = default_rules(mesh, fsdp=use_fsdp, kv_seq_axis=kv_seq_axis)
-        jax.sharding.set_mesh(mesh)   # ambient mesh for shard_map(MoE)
+        from repro.parallel.compat import set_ambient_mesh
+        set_ambient_mesh(mesh)   # ambient mesh for shard_map(MoE)
         from repro.parallel.context import set_ctx
         tp_size = mesh.shape["model"]
         set_ctx(mesh=mesh,

@@ -2,10 +2,21 @@
 
 Defined as FUNCTIONS so importing this module never touches jax device
 state (device counts are locked at first jax init — see dryrun.py, which
-must set XLA_FLAGS before any jax import)."""
+must set XLA_FLAGS before any jax import).
+
+``make_mesh`` is the version-portable helper every mesh construction in
+the repo (launchers, tests, examples) must go through: the pinned offline
+toolchain is JAX 0.4.37, which has neither ``axis_types`` nor
+``jax.sharding.set_mesh`` (see repro.parallel.compat)."""
 from __future__ import annotations
 
 import jax
+
+from repro.parallel.compat import (abstract_mesh, make_mesh,
+                                   set_ambient_mesh)
+
+__all__ = ["abstract_mesh", "make_mesh", "make_host_mesh",
+           "make_production_mesh", "set_ambient_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -13,14 +24,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod: 2 pods x 256 = 512 chips ("pod", "data", "model")."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model_axis: int = 1):
     """Whatever the current process actually has (tests / examples)."""
     n = len(jax.devices())
-    return jax.make_mesh(
-        (n // model_axis, model_axis), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n // model_axis, model_axis), ("data", "model"))

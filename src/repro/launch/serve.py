@@ -4,6 +4,7 @@ import argparse
 import jax
 
 from repro.configs import ARCHS, get_config
+from repro.launch.mesh import make_mesh, set_ambient_mesh
 from repro.models import make_model
 from repro.serving import Engine
 
@@ -17,9 +18,8 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=24)
     args = ap.parse_args()
 
-    mesh = jax.make_mesh((len(jax.devices()), 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    jax.sharding.set_mesh(mesh)
+    mesh = make_mesh((len(jax.devices()), 1), ("data", "model"))
+    set_ambient_mesh(mesh)
     cfg = get_config(args.arch, smoke=args.smoke)
     model = make_model(cfg)
     params = model.init(jax.random.PRNGKey(0))

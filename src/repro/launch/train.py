@@ -9,6 +9,7 @@ import jax
 
 from repro.configs import ARCHS, get_config
 from repro.data import DataConfig
+from repro.launch.mesh import make_mesh, set_ambient_mesh
 from repro.models import count_params, make_model
 from repro.optim.adamw import AdamWConfig
 from repro.parallel.context import set_ctx
@@ -30,10 +31,9 @@ def main():
     args = ap.parse_args()
 
     n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev // args.model_axis, args.model_axis),
-                         ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    jax.sharding.set_mesh(mesh)
+    mesh = make_mesh((n_dev // args.model_axis, args.model_axis),
+                     ("data", "model"))
+    set_ambient_mesh(mesh)
     cfg = get_config(args.arch, smoke=args.smoke)
     set_ctx(mesh=mesh, dp=("data",), tp="model",
             cp_attention=bool(cfg.n_heads

@@ -22,10 +22,11 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+from collections import defaultdict
 
 import numpy as np
 
-from repro.core.slot_alloc import TdmAllocator, TdmAllocatorLight
+from repro.core.slot_alloc import CopyRequest, TdmAllocator, TdmAllocatorLight
 from repro.core.topology import Mesh3D
 
 from .dram import OffChipLink, SharedInternalBus, Timing, VaultController
@@ -45,6 +46,11 @@ class SimParams:
     compute_gap: int = 2             # compute cycles between memory issues
     nom_link_ratio: float = 1.0      # NoM link freq / logic freq (<=1)
     nom_extra_slots: int = 7         # extra TDM slots the CCU may bundle
+    nom_ccu_batch: int = 8           # max copies per batched circuit setup
+    nom_ccu_horizon: int = 8         # batch copies arriving <= this many TDM
+    #   windows apart (inter-bank transfers last dozens of windows, so these
+    #   requests genuinely overlap in flight; each keeps its own time anchor)
+    nom_max_inflight: int = 0        # per-TDM-window circuit cap (0 = off)
     instr_per_line: int = 2          # conventional copy: LD+ST per line
 
 
@@ -88,6 +94,12 @@ class MemorySystem:
         self.ccu_free_at = 0
         # stats for the TSV dual-use analysis (NoM-Light motivation)
         self.nom_vertical_cycles = 0
+        # concurrent-transfer telemetry: circuits in flight per TDM window
+        self.window_inflight: dict[int, int] = defaultdict(int)
+        self.nom_alloc_conflicts = 0   # stale-search commit retries
+        self.nom_setup_retries = 0     # saturated-mesh re-allocations
+        self.nom_batches = 0
+        self.nom_batched_reqs = 0
 
     # -- helpers -------------------------------------------------------------
     def _vault_bank(self, bank: int) -> tuple[VaultController, int]:
@@ -170,65 +182,131 @@ class MemorySystem:
         return end
 
     def copy_nom(self, at: int, r: Request) -> int:
-        """Inter-bank copy over the TDM circuit-switched mesh."""
+        """Inter-bank copy over the TDM circuit-switched mesh (batch of 1)."""
+        return self.copy_nom_batch([(at, r)])[0]
+
+    def copy_nom_batch(self, items: list[tuple[int, "Request"]]) -> list[int]:
+        """Service a batch of inter-bank copies with one concurrent setup.
+
+        The CCU searches every pending request in a single vectorized
+        wavefront pass (``TdmAllocator.allocate_batch``) and programs the
+        winning circuits back to back — one per cycle after the 3-cycle
+        pipeline fill, versus one setup per 3 cycles when serviced one at a
+        time.  The committed circuits are link-disjoint and stream
+        concurrently; ``window_inflight`` records how many overlap each TDM
+        window, and ``nom_max_inflight`` (if set) caps admissions per
+        window, pushing the overflow to the next window (the increasing-
+        slot fallback at window granularity)."""
         p, t = self.p, self.p.timing
-        # 1) CCU picks up the request (FIFO, one setup per 3 cycles).
-        pick = max(at, self.ccu_free_at)
-        self.ccu_free_at = pick + 3
-        # 2) source read (row-granularity into the bank's CS buffer) via the
-        #    high-priority copy queue.
-        svc, sb = self._vault_bank(r.src_bank)
-        ready = svc.bank_row_op(pick + 3, sb, t.tRCD + t.tCL)
-        # 3) circuit allocation anchored so injection starts when data is
-        #    ready (the CCU knows timings deterministically).
-        res = self.alloc.allocate(r.src_bank, r.dst_bank, r.nbytes,
-                                  cycle=max(ready - 3, pick),
-                                  max_extra_slots=p.nom_extra_slots)
-        tries = 0
-        while res.circuit is None and tries < 64:
-            tries += 1
-            res = self.alloc.allocate(r.src_bank, r.dst_bank, r.nbytes,
-                                      cycle=max(ready - 3, pick) +
-                                      tries * p.n_slots,
-                                      max_extra_slots=p.nom_extra_slots)
-        c = res.circuit
-        assert c is not None, "NoM mesh persistently saturated"
-        dist = max(c.distance, 1)
-        # transfer duration in NoM-link cycles, scaled by link frequency.
-        link_cycles = dist + (c.n_windows - 1) * p.n_slots
-        xfer_done = c.start_cycle + int(np.ceil(link_cycles / p.nom_link_ratio))
-        beats = (r.nbytes // 8) * dist
-        self.nom_hop_beats += beats
-        if self.p.config == "nom":
-            # dedicated-Z-link vertical beats (for the TSV dual-use stat)
-            sz = self.mesh.coords(r.src_bank)[2]
-            dz = self.mesh.coords(r.dst_bank)[2]
-            self.nom_vertical_cycles += abs(sz - dz) * (r.nbytes // 8)
-        elif c.uses_bus and c.bus_column >= 0:
-            # NoM-Light: the vertical hop rides the existing TSV of that
-            # column's vault, stealing bandwidth from regular accesses —
-            # the bandwidth cost behind the paper's 5-20% gap.
-            col_bank = c.bus_column  # a z=0 bank id shares the column index
-            vc, _b = self._vault_bank(col_bank)
-            vc._tsv(c.start_cycle, r.nbytes // 8)
-        # 4) destination write via the copy queue.
-        dvc, db = self._vault_bank(r.dst_bank)
-        done = dvc.bank_row_op(xfer_done, db, t.tRCD + t.tWR)
-        return done
+        # 1) CCU picks up the batch (FIFO; pipelined 1/cycle after fill).
+        pick0 = max(min(at for at, _r in items), self.ccu_free_at)
+        self.ccu_free_at = pick0 + 3 + (len(items) - 1)
+        self.nom_batches += 1
+        self.nom_batched_reqs += len(items)
+        # 2) source reads (row-granularity into the bank's CS buffer) via
+        #    the high-priority copy queue.
+        reqs: list[CopyRequest] = []
+        for i, (at, r) in enumerate(items):
+            pick = max(at, pick0 + i)
+            svc, sb = self._vault_bank(r.src_bank)
+            ready = svc.bank_row_op(pick + 3, sb, t.tRCD + t.tCL)
+            # 3) circuit allocation anchored so injection starts when data
+            #    is ready (the CCU knows timings deterministically).
+            reqs.append(CopyRequest(r.src_bank, r.dst_bank, r.nbytes,
+                                    max_extra_slots=p.nom_extra_slots,
+                                    cycle=max(ready - 3, pick)))
+        batch_cycle = min(rq.cycle for rq in reqs)
+        # Per-window concurrency cap: an admission is delayed until every
+        # window its circuit could span (conservative slots=1 estimate,
+        # +1 for injection rolling into the next window) has headroom over
+        # the live circuits plus this batch's earlier admissions — the
+        # increasing-slot fallback at window granularity.
+        if p.nom_max_inflight:
+            planned: dict[int, int] = defaultdict(int)
+            bumped = []
+            for rq in reqs:
+                span = self.alloc.n_windows_for(rq.nbytes, slots=1) + 1
+                w = (rq.cycle + 3) // p.n_slots
+                for _ in range(4096):   # bounded: circuits always expire
+                    if all(self.window_inflight[u] + planned[u]
+                           < p.nom_max_inflight
+                           for u in range(w, w + span)):
+                        break
+                    w += 1
+                for u in range(w, w + span):
+                    planned[u] += 1
+                bumped.append(dataclasses.replace(
+                    rq, cycle=max(rq.cycle, w * p.n_slots)))
+            reqs = bumped
+        results = self.alloc.allocate_batch(reqs, cycle=batch_cycle)
+        self.nom_alloc_conflicts += self.alloc.last_report.conflicts
+        dones = []
+        for rq, res, (_at, r) in zip(reqs, results, items):
+            tries = 0
+            while res.circuit is None and tries < 64:
+                tries += 1
+                self.nom_setup_retries += 1
+                res = self.alloc.allocate(rq.src, rq.dst, rq.nbytes,
+                                          cycle=rq.cycle + tries * p.n_slots,
+                                          max_extra_slots=rq.max_extra_slots)
+            c = res.circuit
+            assert c is not None, "NoM mesh persistently saturated"
+            w_start = c.start_cycle // p.n_slots   # actual streaming window
+            for w in range(w_start, w_start + c.n_windows):
+                self.window_inflight[w] += 1
+            dist = max(c.distance, 1)
+            # transfer duration in NoM-link cycles, scaled by link frequency.
+            link_cycles = dist + (c.n_windows - 1) * p.n_slots
+            xfer_done = c.start_cycle + int(np.ceil(link_cycles
+                                                    / p.nom_link_ratio))
+            beats = (r.nbytes // 8) * dist
+            self.nom_hop_beats += beats
+            if self.p.config == "nom":
+                # dedicated-Z-link vertical beats (for the TSV dual-use stat)
+                sz = self.mesh.coords(r.src_bank)[2]
+                dz = self.mesh.coords(r.dst_bank)[2]
+                self.nom_vertical_cycles += abs(sz - dz) * (r.nbytes // 8)
+            elif c.uses_bus and c.bus_column >= 0:
+                # NoM-Light: the vertical hop rides the existing TSV of that
+                # column's vault, stealing bandwidth from regular accesses —
+                # the bandwidth cost behind the paper's 5-20% gap.
+                col_bank = c.bus_column  # a z=0 bank id shares the column idx
+                vc, _b = self._vault_bank(col_bank)
+                vc._tsv(c.start_cycle, r.nbytes // 8)
+            # 4) destination write via the copy queue.
+            dvc, db = self._vault_bank(r.dst_bank)
+            dones.append(dvc.bank_row_op(xfer_done, db, t.tRCD + t.tWR))
+        return dones
 
 
 def simulate(reqs: list[Request], p: SimParams, name: str = "") -> SimResult:
-    """Run the closed-loop core over the request stream."""
+    """Run the closed-loop core over the request stream.
+
+    Under the NoM configs, inter-bank copies issued within one TDM window
+    coalesce into a single batched CCU setup (``copy_nom_batch``) — the
+    paper's concurrent circuit establishment — bounded by
+    ``p.nom_ccu_batch`` and the MLP window."""
     sys = MemorySystem(p)
     t = p.timing
     outstanding: list[int] = []   # completion-time min-heap
     core_time = 0
     total_instr = 0               # config-independent instruction count
     copy_bytes = 0
+    nom = p.config in ("nom", "nom_light")
+    pending: list[tuple[int, Request]] = []   # CCU batch queue (NoM only)
+
+    def flush_copies():
+        if pending:
+            for done in sys.copy_nom_batch(pending):
+                heapq.heappush(outstanding, done)
+            pending.clear()
 
     for r in reqs:
-        # Respect the MLP window.
-        while len(outstanding) >= p.window:
+        # Respect the MLP window (queued CCU copies count as outstanding).
+        while len(outstanding) + len(pending) >= p.window:
+            if not outstanding:   # only CCU-queued copies left: materialize
+                flush_copies()
+                continue
             core_time = max(core_time, heapq.heappop(outstanding))
         issue = core_time = core_time + p.compute_gap
         total_instr += p.compute_gap
@@ -254,9 +332,17 @@ def simulate(reqs: list[Request], p: SimParams, name: str = "") -> SimResult:
             elif p.config == "rowclone":
                 done = sys.copy_rowclone_psm(issue, r)
             else:
-                done = sys.copy_nom(issue, r)
+                # Batch with other copies arriving within the CCU horizon.
+                span = p.n_slots * max(1, p.nom_ccu_horizon)
+                if pending and (issue // span != pending[0][0] // span):
+                    flush_copies()
+                pending.append((issue, r))
+                if len(pending) >= p.nom_ccu_batch:
+                    flush_copies()
+                continue
         heapq.heappush(outstanding, done)
 
+    flush_copies()
     while outstanding:
         core_time = max(core_time, heapq.heappop(outstanding))
     cycles = max(1, core_time)
@@ -267,9 +353,21 @@ def simulate(reqs: list[Request], p: SimParams, name: str = "") -> SimResult:
     # the observation motivating NoM-Light (Section 2.3).
     conflict = (sys.nom_vertical_cycles / max(cycles, 1)) * tsv_frac
     hit = float(np.mean([v.row_hit_rate for v in sys.vaults]))
+    inflight = [n for n in sys.window_inflight.values() if n > 0]
+    extra = {}
+    if nom:
+        extra = {
+            "nom_inflight_avg": float(np.mean(inflight)) if inflight else 0.0,
+            "nom_inflight_max": int(max(inflight, default=0)),
+            "nom_alloc_conflicts": sys.nom_alloc_conflicts,
+            "nom_setup_retries": sys.nom_setup_retries,
+            "nom_batches": sys.nom_batches,
+            "nom_batch_avg": (sys.nom_batched_reqs / sys.nom_batches
+                              if sys.nom_batches else 0.0),
+        }
     return SimResult(
         name=name, config=p.config, cycles=cycles, instructions=total_instr,
         ipc=total_instr / cycles, reqs=len(reqs), copy_bytes=copy_bytes,
         offchip_bytes=sys.offchip.bytes_moved, nom_hop_beats=sys.nom_hop_beats,
         bus_busy_cycles=sys.shared_bus.busy_cycles, tsv_busy_frac=tsv_frac,
-        tsv_conflict_frac=conflict, row_hit_rate=hit)
+        tsv_conflict_frac=conflict, row_hit_rate=hit, extra=extra)

@@ -32,6 +32,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core.nom_collectives import nom_all_to_all
+from repro.parallel.compat import shard_map
 
 from .common import AxesTree, Params, dense_init
 
@@ -221,7 +222,7 @@ class MoE:
         body = self._ep_body_replicated if decode else self._ep_body
         x_spec = (P(c.dp_axes, None, None) if decode
                   else P(c.dp_axes, c.ep_axis, None))
-        fn = jax.shard_map(
+        fn = shard_map(
             body,
             in_specs=(self._param_specs(), x_spec),
             out_specs=(x_spec, P()),

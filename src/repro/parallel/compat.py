@@ -1,0 +1,90 @@
+"""Version-portable wrappers over the JAX mesh / shard_map API surface.
+
+The repo targets the modern (>= 0.5) spelling — ``jax.make_mesh(...,
+axis_types=...)``, ``jax.sharding.set_mesh`` ambient meshes, and
+``jax.shard_map`` without an explicit mesh — but the pinned offline
+toolchain ships JAX 0.4.37, where none of those exist.  Everything that
+builds a mesh or enters shard_map goes through this module so the rest of
+the codebase can use one spelling on either line:
+
+* :func:`make_mesh` — ``jax.make_mesh`` with ``axis_types`` forwarded only
+  when the installed JAX accepts it.
+* :func:`abstract_mesh` — ``AbstractMesh`` across the 0.4.x
+  ``((name, size), ...)`` and the newer ``(shape, names)`` constructors.
+* :func:`set_ambient_mesh` / :func:`get_ambient_mesh` — ambient-mesh
+  registry; delegates to ``jax.sharding.set_mesh`` when available and keeps
+  a process-global fallback otherwise.
+* :func:`shard_map` — ``jax.shard_map`` when present, else
+  ``jax.experimental.shard_map.shard_map`` with the mesh taken from the
+  ambient registry and ``check_vma`` mapped onto ``check_rep``.
+"""
+from __future__ import annotations
+
+import jax
+
+_HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
+_HAS_SET_MESH = hasattr(jax.sharding, "set_mesh")
+_HAS_JAX_SHARD_MAP = hasattr(jax, "shard_map")
+
+_AMBIENT_MESH = None
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None,
+              axis_types=None):
+    """``jax.make_mesh`` that works on 0.4.x (no ``axis_types``) and newer.
+
+    ``axis_types=None`` requests Auto on every axis where the concept
+    exists; on 0.4.x meshes are implicitly auto, so the kwarg is dropped.
+    """
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if _HAS_AXIS_TYPES:
+        if axis_types is None:
+            axis_types = (jax.sharding.AxisType.Auto,) * len(tuple(axis_names))
+        kwargs["axis_types"] = axis_types
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def abstract_mesh(axis_shapes, axis_names):
+    """``AbstractMesh`` across the 0.4.x ((name, size), ...) signature and
+    the newer (shape_tuple, names) one."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(axis_shapes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(tuple(axis_names), tuple(axis_shapes))))
+
+
+def set_ambient_mesh(mesh):
+    """Install ``mesh`` as the ambient mesh for subsequent :func:`shard_map`
+    calls (and for ``jax.sharding.set_mesh`` where it exists)."""
+    global _AMBIENT_MESH
+    _AMBIENT_MESH = mesh
+    if _HAS_SET_MESH:
+        jax.sharding.set_mesh(mesh)
+    return mesh
+
+
+def get_ambient_mesh():
+    return _AMBIENT_MESH
+
+
+def shard_map(f, *, mesh=None, in_specs, out_specs, check_vma=False):
+    """Portable ``shard_map``: modern ambient-mesh spelling on new JAX,
+    explicit-mesh ``jax.experimental.shard_map`` on 0.4.x."""
+    if _HAS_JAX_SHARD_MAP:
+        kwargs = dict(in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        if mesh is not None:
+            kwargs["mesh"] = mesh
+        return jax.shard_map(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    if mesh is None:
+        mesh = get_ambient_mesh()
+    if mesh is None:
+        raise ValueError(
+            "shard_map on JAX 0.4.x needs a mesh: pass mesh= or install one "
+            "with repro.parallel.compat.set_ambient_mesh(...)")
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=bool(check_vma))

@@ -1,0 +1,93 @@
+"""Minimal seeded-random stand-in for ``hypothesis`` (offline container).
+
+The real package is not installable here (no network), so conftest.py
+installs this module under ``sys.modules["hypothesis"]`` when the import
+fails.  Only the surface this repo's property tests use is provided:
+
+* ``strategies.integers(lo, hi)`` / ``lists(elem, min_size, max_size)`` /
+  ``tuples(*elems)``
+* ``@given(*strategies)`` — runs the test body over ``max_examples``
+  deterministic samples (seeded from the test's qualified name, so runs
+  are reproducible and order-independent)
+* ``@settings(max_examples=..., deadline=...)`` — only ``max_examples``
+  is honoured; the rest is accepted and ignored.
+
+No shrinking, no database, no assume(): failures report the offending
+example index + values so the case can be replayed by seed.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+import zlib
+
+import numpy as np
+
+__version__ = "0.0-repro-shim"
+
+_DEFAULT_MAX_EXAMPLES = 50
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _tuples(*elems: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(e.example(rng) for e in elems))
+
+
+def _lists(elem: _Strategy, *, min_size: int = 0,
+           max_size: int = 10) -> _Strategy:
+    def draw(rng):
+        size = int(rng.integers(min_size, max_size + 1))
+        return [elem.example(rng) for _ in range(size)]
+    return _Strategy(draw)
+
+
+strategies = types.SimpleNamespace(integers=_integers, tuples=_tuples,
+                                   lists=_lists)
+
+
+def given(*strats: _Strategy):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+            for i in range(n):
+                rng = np.random.default_rng((seed, i))
+                example = tuple(s.example(rng) for s in strats)
+                try:
+                    fn(*args, *example, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__qualname__} failed on example {i}/{n}: "
+                        f"{example!r}") from e
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        # Hide the example parameters from pytest's fixture resolution: the
+        # strategies fill every positional arg, so the collected signature
+        # must only expose whatever leading fixture args remain (none in
+        # this repo's tests).
+        params = list(inspect.signature(fn).parameters.values())
+        wrapper.__signature__ = inspect.Signature(params[:-len(strats)]
+                                                  if strats else params)
+        return wrapper
+    return decorate
+
+
+def settings(**kwargs):
+    max_examples = kwargs.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+
+    def decorate(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return decorate

@@ -2,16 +2,26 @@ import os
 import subprocess
 import sys
 
-import jax
-import pytest
+# Offline container: vendor the minimal hypothesis shim when the real
+# package is unavailable (must run before test modules import hypothesis).
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_shim as _shim
+    sys.modules["hypothesis"] = _shim
+    sys.modules["hypothesis.strategies"] = _shim.strategies
+
+import pytest  # noqa: E402
+
+from repro.launch.mesh import make_mesh, set_ambient_mesh  # noqa: E402
 
 
 @pytest.fixture(scope="session")
 def mesh1():
     """1x1 ('data','model') mesh installed as ambient for shard_map code."""
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    jax.sharding.set_mesh(mesh)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    set_ambient_mesh(mesh)
     return mesh
 
 

@@ -116,8 +116,8 @@ def test_elastic_restore_roundtrip(tmp_path, mesh1):
     params = model.init(KEY)
     ckpt.save(d, 5, {"params": params})
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("x",))
     shard = jax.tree.map(lambda _: NamedSharding(mesh, P()), {"params": params})
     tree, manifest = ckpt.restore(d, shardings=shard)
     flat_a = jax.tree.leaves(tree["params"])

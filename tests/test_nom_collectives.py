@@ -47,9 +47,10 @@ def test_collectives_match_lax_on_8_devices():
     out = run_multidevice("""
 import jax, numpy as np, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.parallel.compat import shard_map
+from repro.launch.mesh import make_mesh
 from repro.core import nom_all_to_all, nom_all_gather, nom_reduce_scatter
-mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("x",))
 xs = jnp.arange(8*8*4, dtype=jnp.float32).reshape(64, 4)
 f = shard_map(lambda x: nom_all_to_all(x, "x"), mesh=mesh,
               in_specs=P("x", None), out_specs=P("x", None))
@@ -76,9 +77,9 @@ def test_moe_nom_vs_xla_dispatch_on_8_devices():
     out = run_multidevice("""
 import jax, numpy as np, jax.numpy as jnp
 from repro.models.moe import MoE, MoEConfig
-mesh = jax.make_mesh((1, 8), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
-jax.sharding.set_mesh(mesh)
+from repro.launch.mesh import make_mesh, set_ambient_mesh
+mesh = make_mesh((1, 8), ("data", "model"))
+set_ambient_mesh(mesh)
 key = jax.random.PRNGKey(0)
 x = jax.random.normal(key, (2, 16, 32), jnp.float32)
 outs = {}

@@ -11,9 +11,10 @@ from repro.parallel.sharding import (default_rules, spec_for_cache,
 def mesh():
     # shape (1,1) but named like production; rule logic only reads names +
     # sizes, so use a fake 16x16 via Mesh of devices? sizes matter for
-    # divisibility -> build an abstract mesh.
-    from jax.sharding import AbstractMesh
-    return AbstractMesh((16, 16), ("data", "model"))
+    # divisibility -> build an abstract mesh (via the version-portable
+    # helper: the AbstractMesh constructor changed between 0.4.x and 0.5+).
+    from repro.launch.mesh import abstract_mesh
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 def test_vocab_and_heads_prefer_model(mesh):
