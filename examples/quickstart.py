@@ -9,7 +9,8 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import (Mesh3D, TdmAllocator, Transfer, plan_transfers)
+from repro.core import (Mesh3D, TdmAllocator, Transfer, TransferRequest,
+                        plan_transfers, schedule_transfers)
 from repro.memsim import SimParams, WorkloadSpec, generate, simulate
 
 
@@ -18,11 +19,13 @@ def main():
     mesh = Mesh3D(8, 8, 4)
     alloc = TdmAllocator(mesh, n_slots=16)
     src, dst = mesh.node_id(0, 0, 0), mesh.node_id(5, 3, 2)
-    c = alloc.allocate(src, dst, nbytes=4096, cycle=0,
-                       max_extra_slots=3).circuit
+    results, report = schedule_transfers(
+        [TransferRequest(src, dst, nbytes=4096, max_extra_slots=3)],
+        allocator=alloc, cycle=0)
+    c = results[0].circuit
     print(f"circuit {mesh.coords(src)} -> {mesh.coords(dst)}: "
           f"start cycle {c.start_cycle}, {c.slots_per_window} slots/window, "
-          f"{c.n_windows} windows")
+          f"{c.n_windows} windows (stall_cycles={report.stall_cycles})")
     print("  first hops:", [(mesh.coords(n), f"port{p}", f"slot{s}")
                             for n, p, s in c.hops[:4]])
 

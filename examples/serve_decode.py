@@ -39,6 +39,18 @@ def main():
     for row in out.tolist():
         print("  prompt", row[:6], "->", row[6:])
 
+    # Cache movement rides the NoM scheduler: one batched circuit setup
+    # per prefill/decode step; this is the aggregate ScheduleReport.
+    tel = eng.transfer_telemetry()
+    print(f"\nNoM cache-transfer telemetry over {tel['steps']} steps:")
+    print(f"  circuits {tel['scheduled']}/{tel['requests']} scheduled, "
+          f"{tel['batch_avg']:.1f} per batched setup")
+    print(f"  concurrency: max {tel['max_inflight']} in flight/window, "
+          f"avg {tel['avg_inflight']:.2f}")
+    print(f"  stall_cycles={tel['stall_cycles']} "
+          f"search_rounds={tel['search_rounds']} "
+          f"conflicts={tel['conflicts']}")
+
 
 if __name__ == "__main__":
     main()

@@ -1,0 +1,49 @@
+#!/usr/bin/env python
+"""Docs gate for CI: the documentation suite must exist, README python
+blocks must at least compile, and every path README/architecture.md
+reference must exist in the tree (stale docs fail the build)."""
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+REQUIRED = ("README.md", "docs/architecture.md", "PAPER.md", "ROADMAP.md",
+            "CHANGES.md")
+
+
+def fail(msg: str) -> None:
+    print(f"check_docs: FAIL — {msg}")
+    sys.exit(1)
+
+
+def python_blocks(text: str) -> list[str]:
+    return re.findall(r"```python\n(.*?)```", text, re.S)
+
+
+def referenced_paths(text: str) -> set[str]:
+    """Backtick/link-referenced repo paths (files or dirs) in a doc."""
+    pat = re.compile(r"[`(]((?:src|docs|tests|benchmarks|examples|scripts)"
+                     r"/[\w./-]+?)[`)]")
+    return {m.rstrip(".,") for m in pat.findall(text)}
+
+
+def main() -> None:
+    for rel in REQUIRED:
+        if not (ROOT / rel).is_file():
+            fail(f"missing {rel}")
+    for rel in ("README.md", "docs/architecture.md"):
+        text = (ROOT / rel).read_text()
+        for i, block in enumerate(python_blocks(text)):
+            try:
+                compile(block, f"{rel}[python block {i}]", "exec")
+            except SyntaxError as e:
+                fail(f"{rel} python block {i} does not compile: {e}")
+        for path in sorted(referenced_paths(text)):
+            p = ROOT / path
+            if not (p.exists() or p.with_suffix("").exists()):
+                fail(f"{rel} references missing path {path}")
+    print("check_docs: OK")
+
+
+if __name__ == "__main__":
+    main()

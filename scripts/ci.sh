@@ -6,6 +6,9 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== docs: suite present + README blocks compile =="
+python scripts/check_docs.py
+
 echo "== tier-1: pytest =="
 python -m pytest -q "$@"
 

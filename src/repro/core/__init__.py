@@ -6,7 +6,7 @@ from .nom_collectives import (Transfer, TransferPlan, a2a_link_chunks,
                               nom_all_gather, nom_all_to_all,
                               nom_reduce_scatter, plan_transfers,
                               ring_offsets)
-from .scheduler import ScheduleReport, schedule_transfers
+from .scheduler import ScheduleReport, TransferRequest, schedule_transfers
 from .slot_alloc import (AllocResult, BatchReport, Circuit, CopyRequest,
                          SlotTable, TdmAllocator, TdmAllocatorLight,
                          traceback, wavefront_search, wavefront_search_batch)
@@ -17,7 +17,8 @@ __all__ = [
     "Transfer", "TransferPlan", "a2a_link_chunks", "nom_all_gather",
     "nom_all_to_all", "nom_reduce_scatter", "plan_transfers", "ring_offsets",
     "AllocResult", "BatchReport", "Circuit", "CopyRequest", "ScheduleReport",
-    "SlotTable", "TdmAllocator", "TdmAllocatorLight", "schedule_transfers",
+    "SlotTable", "TdmAllocator", "TdmAllocatorLight", "TransferRequest",
+    "schedule_transfers",
     "traceback", "wavefront_search", "wavefront_search_batch", "PAPER_MESH",
     "Mesh3D", "N_PORTS", "PORT_LOCAL", "port_for",
 ]

@@ -1,7 +1,8 @@
 """Single entry point for concurrent bulk-transfer setup.
 
 Every subsystem that needs link-disjoint circuits — the memory simulator's
-CCU, checkpoint resharding, elastic shard migration, the benchmark
+CCU, checkpoint resharding, elastic shard migration, the serving engine's
+decode-cache movement, the MoE expert-dispatch planner, the benchmark
 harness — routes through :func:`schedule_transfers`, which dispatches to
 one of two backends sharing the same batched-commit discipline (search all
 requests at once, reserve in arrival order, retry losers at later slots):
@@ -12,9 +13,12 @@ requests at once, reserve in arrival order, retry losers at later slots):
 * **device level** — :func:`repro.core.nom_collectives.plan_transfers`:
   DOR routes over a device mesh/torus packed into link-disjoint rounds.
 
-Both return a :class:`ScheduleReport` with the concurrency profile (how
-many circuits are in flight per TDM window/round) so callers can assert
-the paper's headline property — *concurrent* transfer — uniformly.
+Callers describe their traffic with :class:`TransferRequest` — a
+backend-agnostic (src, dst, nbytes) record — and get back a
+:class:`ScheduleReport` with the concurrency profile (how many circuits
+are in flight per TDM window/round, how long requests stalled for slots)
+so every subsystem can assert the paper's headline property —
+*concurrent* transfer — uniformly.
 """
 from __future__ import annotations
 
@@ -26,33 +30,157 @@ from .nom_collectives import Transfer, TransferPlan, plan_transfers
 from .slot_alloc import AllocResult, CopyRequest, TdmAllocator
 
 
+@dataclasses.dataclass(frozen=True)
+class TransferRequest:
+    """One pending bulk transfer, backend-agnostic.
+
+    This is the lingua franca of :func:`schedule_transfers`: the serving
+    engine emits its per-decode-step cache movement as TransferRequests,
+    the MoE planner its expert-dispatch blocks, reshard its shard moves.
+
+    Attributes:
+      src, dst: endpoint ids.  Bank level (tdm backend): int node ids on
+        the :class:`~repro.core.topology.Mesh3D`.  Device level (rounds
+        backend): coordinate tuples on the device mesh; a bare int is
+        promoted to a 1-D ring coordinate ``(int,)``.
+      nbytes: payload size in bytes (default 1).  Determines how many TDM
+        windows a bank-level circuit persists (8 bytes/slot-cycle on the
+        paper's 64-bit links).
+      tag: opaque caller label (cache-leaf path, parameter name, expert
+        pair) carried through to the plan for attribution.
+      max_extra_slots: bank level only — extra free TDM slots the CCU may
+        bundle to accelerate this transfer (paper Section 2.1; default 0).
+      cycle: bank level only — anchor this request later than the batch
+        cycle (e.g. its source read completes later); default None
+        (anchored at the batch cycle).
+    """
+    src: object
+    dst: object
+    nbytes: int = 1
+    tag: object = None
+    max_extra_slots: int = 0
+    cycle: int | None = None
+
+
 @dataclasses.dataclass
 class ScheduleReport:
+    """Telemetry of one :func:`schedule_transfers` call.
+
+    Attributes:
+      backend: ``"tdm"`` (bank-level :class:`TdmAllocator` circuits) or
+        ``"rounds"`` (device-level DOR round packing).
+      n_requests: requests submitted in this batch.
+      n_scheduled: requests that received a circuit/route (the rest were
+        denied — mesh saturated at every retry slot).
+      n_windows: TDM windows (tdm) / rounds (rounds) the schedule spans —
+        the makespan in scheduler time units.
+      max_inflight: peak concurrent circuits in one window/round — the
+        paper's "concurrent transfer" evidence; 1 means serialized.
+      avg_inflight: mean in-flight circuits over non-empty windows/rounds.
+      stall_cycles: total cycles (tdm; TDM-slot cycles) or rounds (rounds
+        backend) that requests waited beyond their earliest possible start
+        because slots/links were taken — queueing delay under contention.
+      search_rounds: vectorized wavefront passes issued (tdm backend).
+      conflicts: stale-snapshot commit retries (tdm backend).
+    """
     backend: str               # "tdm" | "rounds"
     n_requests: int
     n_scheduled: int
     n_windows: int             # TDM windows (tdm) / rounds (rounds) spanned
     max_inflight: int          # peak concurrent circuits in one window
     avg_inflight: float        # mean over non-empty windows
+    stall_cycles: int = 0      # waits beyond the earliest possible start
     search_rounds: int = 0     # vectorized search passes (tdm backend)
     conflicts: int = 0         # stale-snapshot retries (tdm backend)
+    agg_windows: int = 0       # windows folded into avg_inflight by merge()
+    #   (0 on a fresh report: its own n_windows is the weight)
+
+    def merge(self, other: "ScheduleReport") -> "ScheduleReport":
+        """Accumulate another report of the same backend (telemetry over a
+        sequence of batches, e.g. one serving step after another).
+        ``avg_inflight`` stays the mean over all underlying non-empty
+        windows (weights tracked in ``agg_windows``); ``n_windows`` keeps
+        the largest single-batch makespan."""
+        assert self.backend == other.backend, (self.backend, other.backend)
+        wa = self.agg_windows or self.n_windows
+        wb = other.agg_windows or other.n_windows
+        num = self.avg_inflight * wa + other.avg_inflight * wb
+        return ScheduleReport(
+            backend=self.backend,
+            n_requests=self.n_requests + other.n_requests,
+            n_scheduled=self.n_scheduled + other.n_scheduled,
+            n_windows=max(self.n_windows, other.n_windows),
+            max_inflight=max(self.max_inflight, other.max_inflight),
+            avg_inflight=num / (wa + wb) if wa + wb else 0.0,
+            stall_cycles=self.stall_cycles + other.stall_cycles,
+            search_rounds=self.search_rounds + other.search_rounds,
+            conflicts=self.conflicts + other.conflicts,
+            agg_windows=wa + wb)
 
 
-def _tdm_report(alloc: TdmAllocator,
-                results: list[AllocResult]) -> ScheduleReport:
+def _as_copy_requests(transfers) -> list[CopyRequest]:
+    """Normalize bank-level input: CopyRequest | TransferRequest | tuple."""
+    out = []
+    for t in transfers:
+        if isinstance(t, CopyRequest):
+            out.append(t)
+        elif isinstance(t, TransferRequest):
+            out.append(CopyRequest(int(t.src), int(t.dst), t.nbytes,
+                                   max_extra_slots=t.max_extra_slots,
+                                   cycle=t.cycle))
+        else:
+            out.append(CopyRequest(*t))
+    return out
+
+
+def _coord(v) -> tuple[int, ...]:
+    return tuple(v) if isinstance(v, (tuple, list)) else (int(v),)
+
+
+def _as_transfers(transfers) -> list[Transfer]:
+    """Normalize device-level input: Transfer | TransferRequest | tuple."""
+    out = []
+    for t in transfers:
+        if isinstance(t, Transfer):
+            out.append(t)
+        elif isinstance(t, TransferRequest):
+            out.append(Transfer(src=_coord(t.src), dst=_coord(t.dst),
+                                nbytes=t.nbytes, tag=t.tag))
+        else:
+            out.append(Transfer(*t))
+    return out
+
+
+def _tdm_report(alloc: TdmAllocator, reqs: list[CopyRequest],
+                results: list[AllocResult], cycle: int) -> ScheduleReport:
     circuits = [r.circuit for r in results if r.circuit is not None]
     # Window-occupancy histogram: a circuit holds its slots for n_windows
-    # consecutive windows starting at its reservation window.
-    span = max((c.n_windows for c in circuits), default=0)
+    # consecutive windows starting at its streaming window — circuits
+    # anchored at different cycles (per-request anchors) must not be
+    # stacked onto the same window.
+    n = alloc.n_slots
+    starts = [c.start_cycle // n for c in circuits]
+    w0 = min(starts, default=0)
+    span = max((s - w0 + c.n_windows for s, c in zip(starts, circuits)),
+               default=0)
     active = np.zeros(span, np.int64)
-    for c in circuits:
-        active[:c.n_windows] += 1
+    for s, c in zip(starts, circuits):
+        active[s - w0:s - w0 + c.n_windows] += 1
     busy = active[active > 0]
+    # Queueing delay: injection happens at start_cycle; the earliest a
+    # request could inject is its anchor + the 3-cycle CCU setup pipeline.
+    stall = 0
+    for rq, res in zip(reqs, results):
+        if res.circuit is None:
+            continue
+        anchor = max(rq.cycle if rq.cycle is not None else cycle, cycle) + 3
+        stall += max(0, res.circuit.start_cycle - anchor)
     rep = alloc.last_report
     return ScheduleReport(
         backend="tdm", n_requests=len(results), n_scheduled=len(circuits),
         n_windows=int(span), max_inflight=int(busy.max()) if busy.size else 0,
         avg_inflight=float(busy.mean()) if busy.size else 0.0,
+        stall_cycles=stall,
         search_rounds=rep.search_rounds, conflicts=rep.conflicts)
 
 
@@ -62,27 +190,44 @@ def schedule_transfers(transfers, *, allocator: TdmAllocator | None = None,
                        policy: str = "arrival"):
     """Schedule a batch of bulk transfers concurrently.
 
-    Bank level (``allocator`` given): ``transfers`` is a list of
-    :class:`CopyRequest` (or (src, dst, nbytes) tuples); returns
-    ``(list[AllocResult], ScheduleReport)``.
+    This is the single entry point for circuit setup (the CCU of paper
+    Section 2.2, generalized): *all* requests of a batch are searched in
+    one vectorized pass and committed in arrival order, so every granted
+    circuit is link/slot-disjoint from every other one it overlaps — the
+    transfers genuinely stream concurrently.
 
-    Device level (``shape`` given): ``transfers`` is a list of
-    :class:`Transfer`; returns ``(TransferPlan, ScheduleReport)``.
+    Exactly one of ``allocator=`` / ``shape=`` selects the backend:
+
+    * **Bank level** (``allocator`` given): ``transfers`` is a list of
+      :class:`TransferRequest` / :class:`CopyRequest` (or plain
+      ``(src, dst, nbytes)`` tuples) with int bank ids; ``cycle`` anchors
+      the batch in allocator time.  Returns
+      ``(list[AllocResult], ScheduleReport)`` in request order.
+    * **Device level** (``shape`` given): ``transfers`` is a list of
+      :class:`TransferRequest` / :class:`Transfer` with coordinate
+      endpoints on a device mesh of that shape; ``torus`` enables
+      wraparound links and ``policy`` picks the packing order —
+      ``"arrival"`` (FIFO, the CCU's rule) or ``"longest_first"``
+      (best packing; see ``benchmarks/bench_sched_policies.py``).
+      Returns ``(TransferPlan, ScheduleReport)``.
     """
     if (allocator is None) == (shape is None):
         raise ValueError("pass exactly one of allocator= or shape=")
     if allocator is not None:
-        results = allocator.allocate_batch(list(transfers), cycle)
-        return results, _tdm_report(allocator, results)
-    plan = plan_transfers(shape, list(transfers), torus=torus, policy=policy)
+        reqs = _as_copy_requests(transfers)
+        results = allocator.allocate_batch(reqs, cycle)
+        return results, _tdm_report(allocator, reqs, results, cycle)
+    plan = plan_transfers(shape, _as_transfers(transfers), torus=torus,
+                          policy=policy)
     conc = plan.concurrency()
+    stall = sum(s for s, p in zip(plan.starts, plan.paths) if p)
     report = ScheduleReport(
         backend="rounds", n_requests=len(plan.transfers),
         n_scheduled=sum(1 for p in plan.paths if p),
         n_windows=plan.n_rounds, max_inflight=int(conc["max_inflight"]),
-        avg_inflight=conc["avg_inflight"])
+        avg_inflight=conc["avg_inflight"], stall_cycles=stall)
     return plan, report
 
 
 __all__ = ["CopyRequest", "ScheduleReport", "Transfer", "TransferPlan",
-           "schedule_transfers"]
+           "TransferRequest", "schedule_transfers"]

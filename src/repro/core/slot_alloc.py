@@ -355,11 +355,35 @@ class TdmAllocator:
     def allocate_batch(self, requests: list, cycle: int) -> list[AllocResult]:
         """Service a batch of pending copy requests concurrently.
 
-        ``requests``: CopyRequest list (or (src, dst, nbytes) tuples).
-        Returns one AllocResult per request, in request order.  All searches
-        of a round run as a single vectorized pass; commits happen in
-        arrival order against the live slot table, so every committed
-        circuit is link-disjoint from every other one in its windows."""
+        This is the CCU's concurrent circuit establishment (paper Section
+        2.2): every request of the batch is searched in one vectorized
+        wavefront pass, then committed in arrival (FIFO) order against the
+        live slot table, so each granted circuit is (router, port, slot)-
+        disjoint from every other circuit live in its TDM windows.  A
+        commit that finds its hops claimed by an earlier commit of the
+        same batch triggers a fresh search for it and everything after it
+        (the paper's increasing-slot fallback) — results are bit-identical
+        to streaming the requests through :meth:`allocate` one at a time.
+
+        Args:
+          requests: list of :class:`CopyRequest` (or bare
+            ``(src, dst, nbytes)`` tuples).  ``src``/``dst`` are int bank
+            ids on the mesh; ``nbytes`` is the payload in bytes — with the
+            paper's 64-bit links one TDM slot moves ``link_bytes`` (8) per
+            window, so the circuit persists
+            ``ceil(nbytes / (8 * slots))`` windows.
+          cycle: absolute allocator cycle at which the batch is picked up;
+            injection starts no earlier than ``cycle + 3`` (the 3-cycle
+            search/program/read setup pipeline).  Requests carrying their
+            own ``cycle`` anchor are validated against this batch cycle
+            (conservative) but reserved at their own window.
+
+        Returns:
+          One :class:`AllocResult` per request, in request order.
+          ``circuit is None`` means the lattice was saturated at every
+          candidate slot.  ``self.last_report`` holds the
+          :class:`BatchReport` (search passes, conflicts, denials).
+        """
         reqs = [r if isinstance(r, CopyRequest) else CopyRequest(*r)
                 for r in requests]
         report = BatchReport(n_requests=len(reqs))

@@ -26,6 +26,7 @@ from collections import defaultdict
 
 import numpy as np
 
+from repro.core.scheduler import schedule_transfers
 from repro.core.slot_alloc import CopyRequest, TdmAllocator, TdmAllocatorLight
 from repro.core.topology import Mesh3D
 
@@ -37,6 +38,30 @@ CONFIGS = ("conventional", "rowclone", "nom", "nom_light")
 
 @dataclasses.dataclass
 class SimParams:
+    """Simulation knobs.  All time quantities are logic-die cycles.
+
+    The ``nom_*`` fields model the CCU and router provisioning of the
+    paper's NoM (Sections 2.1-2.3):
+
+    * ``nom_link_ratio`` (default 1.0): NoM link frequency as a fraction
+      of logic frequency (<= 1) — the paper's frequency-scaling study
+      (Fig. 6); transfer durations are divided by this ratio.
+    * ``nom_extra_slots`` (default 7): extra free TDM slots the CCU may
+      bundle onto one circuit to accelerate it (Section 2.1's multi-slot
+      circuits); 0 = one slot per circuit.
+    * ``nom_ccu_queue_depth`` (default 8): capacity of the CCU's bounded
+      request queue, in pending copy requests.  The CCU drains the queue
+      with one batched setup pass (``TdmAllocator.allocate_batch``) when
+      it fills; a copy issued against a full queue *backpressures* the
+      core until the drain's pickup pipeline completes — the bounded
+      router/controller buffering that the HMC NoC studies identify as
+      the contention bottleneck.  Depth is clamped to
+      ``nom_max_inflight`` when that cap is set (a queue deeper than the
+      in-flight circuit budget could never drain faster anyway).
+    * ``nom_max_inflight`` (default 0 = uncapped): per-TDM-window cap on
+      concurrent circuits — the router-buffering calibration knob; an
+      admission that would exceed it is pushed to a later window.
+    """
     config: str = "nom"
     mesh: Mesh3D = dataclasses.field(default_factory=lambda: Mesh3D(8, 8, 4))
     n_slots: int = 16
@@ -46,10 +71,7 @@ class SimParams:
     compute_gap: int = 2             # compute cycles between memory issues
     nom_link_ratio: float = 1.0      # NoM link freq / logic freq (<=1)
     nom_extra_slots: int = 7         # extra TDM slots the CCU may bundle
-    nom_ccu_batch: int = 8           # max copies per batched circuit setup
-    nom_ccu_horizon: int = 8         # batch copies arriving <= this many TDM
-    #   windows apart (inter-bank transfers last dozens of windows, so these
-    #   requests genuinely overlap in flight; each keeps its own time anchor)
+    nom_ccu_queue_depth: int = 8     # bounded CCU request queue (see above)
     nom_max_inflight: int = 0        # per-TDM-window circuit cap (0 = off)
     instr_per_line: int = 2          # conventional copy: LD+ST per line
 
@@ -72,6 +94,33 @@ class SimResult:
     extra: dict = dataclasses.field(default_factory=dict)
 
 
+@dataclasses.dataclass
+class CcuQueue:
+    """The CCU's bounded request queue — an explicit, observable resource.
+
+    Pending inter-bank copies sit here (with their arrival cycles) until
+    the CCU drains the queue through one batched circuit-setup pass.  The
+    queue is bounded by ``depth``: a copy issued while it is full stalls
+    the issuing core until the forced drain's pickup pipeline completes
+    (``busy_until``) — backpressure, replacing the old unbounded
+    ``pending`` list + ``ccu_free_at`` scalar approximation.
+    """
+    depth: int
+    items: list = dataclasses.field(default_factory=list)  # (cycle, Request)
+    busy_until: int = 0        # CCU front-end pickup pipeline drain time
+    stall_cycles: int = 0      # core cycles lost to queue-full backpressure
+    full_stalls: int = 0       # copies that hit a full queue
+    peak_occupancy: int = 0
+
+    def full(self) -> bool:
+        return len(self.items) >= self.depth
+
+    def push(self, at: int, r: "Request") -> None:
+        assert not self.full(), "push on a full CCU queue (drain first)"
+        self.items.append((at, r))
+        self.peak_occupancy = max(self.peak_occupancy, len(self.items))
+
+
 class MemorySystem:
     """Shared geometry + per-config data paths."""
 
@@ -91,7 +140,13 @@ class MemorySystem:
         elif p.config == "nom_light":
             self.alloc = TdmAllocatorLight(self.mesh, p.n_slots)
         self.nom_hop_beats = 0
-        self.ccu_free_at = 0
+        # Bounded CCU request queue, calibrated against the router-buffering
+        # cap: a queue deeper than the in-flight circuit budget would only
+        # park requests the mesh cannot admit, so the cap clamps the depth.
+        depth = max(1, p.nom_ccu_queue_depth)
+        if p.nom_max_inflight:
+            depth = max(1, min(depth, p.nom_max_inflight))
+        self.ccu = CcuQueue(depth)
         # stats for the TSV dual-use analysis (NoM-Light motivation)
         self.nom_vertical_cycles = 0
         # concurrent-transfer telemetry: circuits in flight per TDM window
@@ -185,7 +240,8 @@ class MemorySystem:
         """Inter-bank copy over the TDM circuit-switched mesh (batch of 1)."""
         return self.copy_nom_batch([(at, r)])[0]
 
-    def copy_nom_batch(self, items: list[tuple[int, "Request"]]) -> list[int]:
+    def copy_nom_batch(self, items: list[tuple[int, "Request"]],
+                       pickup_at: int = 0) -> list[int]:
         """Service a batch of inter-bank copies with one concurrent setup.
 
         The CCU searches every pending request in a single vectorized
@@ -199,8 +255,12 @@ class MemorySystem:
         slot fallback at window granularity)."""
         p, t = self.p, self.p.timing
         # 1) CCU picks up the batch (FIFO; pipelined 1/cycle after fill).
-        pick0 = max(min(at for at, _r in items), self.ccu_free_at)
-        self.ccu_free_at = pick0 + 3 + (len(items) - 1)
+        # The search runs speculatively as requests arrive, so a scheduled
+        # drain anchors at the head's arrival; a forced (queue-full) drain
+        # passes ``pickup_at`` — it cannot start before the drain decision.
+        pick0 = max(min(at for at, _r in items), self.ccu.busy_until,
+                    pickup_at)
+        self.ccu.busy_until = pick0 + 3 + (len(items) - 1)
         self.nom_batches += 1
         self.nom_batched_reqs += len(items)
         # 2) source reads (row-granularity into the bank's CS buffer) via
@@ -238,17 +298,19 @@ class MemorySystem:
                 bumped.append(dataclasses.replace(
                     rq, cycle=max(rq.cycle, w * p.n_slots)))
             reqs = bumped
-        results = self.alloc.allocate_batch(reqs, cycle=batch_cycle)
-        self.nom_alloc_conflicts += self.alloc.last_report.conflicts
+        results, report = schedule_transfers(reqs, allocator=self.alloc,
+                                             cycle=batch_cycle)
+        self.nom_alloc_conflicts += report.conflicts
         dones = []
         for rq, res, (_at, r) in zip(reqs, results, items):
             tries = 0
             while res.circuit is None and tries < 64:
                 tries += 1
                 self.nom_setup_retries += 1
-                res = self.alloc.allocate(rq.src, rq.dst, rq.nbytes,
-                                          cycle=rq.cycle + tries * p.n_slots,
-                                          max_extra_slots=rq.max_extra_slots)
+                retry = dataclasses.replace(rq, cycle=None)
+                (res,), _rep = schedule_transfers(
+                    [retry], allocator=self.alloc,
+                    cycle=rq.cycle + tries * p.n_slots)
             c = res.circuit
             assert c is not None, "NoM mesh persistently saturated"
             w_start = c.start_cycle // p.n_slots   # actual streaming window
@@ -282,10 +344,13 @@ class MemorySystem:
 def simulate(reqs: list[Request], p: SimParams, name: str = "") -> SimResult:
     """Run the closed-loop core over the request stream.
 
-    Under the NoM configs, inter-bank copies issued within one TDM window
-    coalesce into a single batched CCU setup (``copy_nom_batch``) — the
-    paper's concurrent circuit establishment — bounded by
-    ``p.nom_ccu_batch`` and the MLP window."""
+    Under the NoM configs, inter-bank copies accumulate in the CCU's
+    bounded request queue (``sys.ccu``, depth ``p.nom_ccu_queue_depth``)
+    and are drained by a single batched circuit setup
+    (``copy_nom_batch``) — the paper's concurrent circuit establishment.
+    A copy issued against a full queue backpressures the core until the
+    drain's pickup pipeline completes; the lost cycles are reported as
+    ``extra["nom_ccu_stall_cycles"]``."""
     sys = MemorySystem(p)
     t = p.timing
     outstanding: list[int] = []   # completion-time min-heap
@@ -293,17 +358,16 @@ def simulate(reqs: list[Request], p: SimParams, name: str = "") -> SimResult:
     total_instr = 0               # config-independent instruction count
     copy_bytes = 0
     nom = p.config in ("nom", "nom_light")
-    pending: list[tuple[int, Request]] = []   # CCU batch queue (NoM only)
 
-    def flush_copies():
-        if pending:
-            for done in sys.copy_nom_batch(pending):
+    def flush_copies(pickup_at: int = 0):
+        if sys.ccu.items:
+            for done in sys.copy_nom_batch(sys.ccu.items, pickup_at):
                 heapq.heappush(outstanding, done)
-            pending.clear()
+            sys.ccu.items.clear()
 
     for r in reqs:
         # Respect the MLP window (queued CCU copies count as outstanding).
-        while len(outstanding) + len(pending) >= p.window:
+        while len(outstanding) + len(sys.ccu.items) >= p.window:
             if not outstanding:   # only CCU-queued copies left: materialize
                 flush_copies()
                 continue
@@ -332,13 +396,25 @@ def simulate(reqs: list[Request], p: SimParams, name: str = "") -> SimResult:
             elif p.config == "rowclone":
                 done = sys.copy_rowclone_psm(issue, r)
             else:
-                # Batch with other copies arriving within the CCU horizon.
-                span = p.n_slots * max(1, p.nom_ccu_horizon)
-                if pending and (issue // span != pending[0][0] // span):
+                # Bounded CCU queue: depth bounds both dimensions of the
+                # CCU's service budget — at most ``depth`` buffered
+                # requests, and the head waits at most ``depth`` TDM
+                # windows before its batched pickup pass (the concurrent
+                # circuit establishment).  A copy that finds the buffer at
+                # depth forces an early drain and backpressures the core
+                # until the pickup pipeline completes.
+                q = sys.ccu
+                if q.items and (issue // p.n_slots
+                                - q.items[0][0] // p.n_slots) >= q.depth:
                     flush_copies()
-                pending.append((issue, r))
-                if len(pending) >= p.nom_ccu_batch:
-                    flush_copies()
+                if sys.ccu.full():
+                    flush_copies(pickup_at=issue)
+                    freed = max(issue, sys.ccu.busy_until)
+                    sys.ccu.stall_cycles += freed - issue
+                    sys.ccu.full_stalls += 1
+                    core_time = max(core_time, freed)
+                    issue = freed
+                sys.ccu.push(issue, r)
                 continue
         heapq.heappush(outstanding, done)
 
@@ -364,6 +440,10 @@ def simulate(reqs: list[Request], p: SimParams, name: str = "") -> SimResult:
             "nom_batches": sys.nom_batches,
             "nom_batch_avg": (sys.nom_batched_reqs / sys.nom_batches
                               if sys.nom_batches else 0.0),
+            "nom_ccu_queue_depth": sys.ccu.depth,
+            "nom_ccu_peak_queue": sys.ccu.peak_occupancy,
+            "nom_ccu_full_stalls": sys.ccu.full_stalls,
+            "nom_ccu_stall_cycles": sys.ccu.stall_cycles,
         }
     return SimResult(
         name=name, config=p.config, cycles=cycles, instructions=total_instr,

@@ -28,11 +28,13 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core.nom_collectives import nom_all_to_all
-from repro.parallel.compat import shard_map
+from repro.core.scheduler import TransferRequest, schedule_transfers
+from repro.parallel.compat import get_ambient_mesh, shard_map
 
 from .common import AxesTree, Params, dense_init
 
@@ -136,10 +138,100 @@ class MoE:
                               * keep[:, None]).astype(gathered.dtype)
         return jnp.zeros((t, d), dtype).at[tok].add(contrib)
 
+    # -- host-side dispatch transfer planning ---------------------------------------
+    def _axis_size(self, name: str) -> int:
+        """Ambient-mesh axis size (1 when no mesh / unknown axis)."""
+        mesh = get_ambient_mesh()
+        try:
+            return int(dict(mesh.shape)[name])
+        except Exception:
+            return 1
+
+    def _ep_size(self) -> int:
+        """EP axis size from the ambient mesh (1 when none installed)."""
+        return self._axis_size(self.cfg.ep_axis)
+
+    def plan_dispatch(self, p: Params, x: jax.Array, ep: int | None = None,
+                      policy: str = "arrival"):
+        """Expert-dispatch transfer plan from the bucketized routing.
+
+        Mirrors what :meth:`_ep_body` puts on the wire: the router runs
+        eagerly on the host, tokens are bucketed per source EP rank with
+        the same capacity rule, and every non-empty (src_rank, dst_rank)
+        block becomes a :class:`TransferRequest` — dispatch direction plus
+        the combine return path — scheduled through
+        :func:`schedule_transfers` on the ``(ep,)`` EP ring, the same
+        allocator discipline as reshard.  Returns
+        ``(TransferPlan, ScheduleReport)`` and stores them for
+        :attr:`last_dispatch_report`.
+
+        The plan covers one data-parallel replica's EP ring (each dp
+        replica runs an identical, independent a2a): the batch dim is
+        divided by the dp axis size so per-rank token counts and the
+        capacity match what each device's ``_ep_body`` actually sends.
+
+        Requires concrete (non-traced) inputs; ``ep`` defaults to the
+        ambient mesh's EP-axis size.
+        """
+        c = self.cfg
+        if isinstance(x, jax.core.Tracer):
+            raise TypeError("plan_dispatch needs concrete inputs "
+                            "(host-side planning cannot run under jit)")
+        ep = self._ep_size() if ep is None else int(ep)
+        e_loc = max(1, c.n_experts // ep)
+        dp = 1
+        for ax in c.dp_axes:
+            dp *= self._axis_size(ax)
+        b, s, d = x.shape
+        b_loc = max(1, b // dp)
+        x = x[:b_loc]
+        s_loc = max(1, s // ep)
+        itemsize = jnp.dtype(x.dtype).itemsize
+        blocks = np.zeros((ep, ep), np.int64)   # kept tokens per (src, dst)
+        for r in range(ep):
+            x_loc = np.asarray(x[:, r * s_loc:(r + 1) * s_loc]
+                               ).reshape(-1, d)
+            t_loc = x_loc.shape[0]
+            _w, e, _aux = self._route(p["router"], jnp.asarray(x_loc))
+            flat_e = np.asarray(e).reshape(-1)
+            cap = max(1, int(c.capacity_factor * t_loc * c.top_k
+                             / c.n_experts))
+            _pos, keep = bucket_by(jnp.asarray(flat_e), c.n_experts, cap)
+            kept = np.bincount(flat_e[np.asarray(keep)],
+                               minlength=c.n_experts)
+            for expert, n_tok in enumerate(kept):
+                blocks[r, expert // e_loc] += int(n_tok)
+        reqs = []
+        for r in range(ep):
+            for q in range(ep):
+                if r == q or not blocks[r, q]:
+                    continue
+                nbytes = int(blocks[r, q]) * d * itemsize
+                reqs.append(TransferRequest(src=(r,), dst=(q,), nbytes=nbytes,
+                                            tag=("dispatch", r, q)))
+                reqs.append(TransferRequest(src=(q,), dst=(r,), nbytes=nbytes,
+                                            tag=("combine", q, r)))
+        plan, report = schedule_transfers(reqs, shape=(ep,), torus=True,
+                                          policy=policy)
+        object.__setattr__(self, "_last_dispatch", (plan, report))
+        return plan, report
+
+    @property
+    def last_dispatch_report(self):
+        """ScheduleReport of the most recent dispatch plan (None before)."""
+        last = getattr(self, "_last_dispatch", None)
+        return None if last is None else last[1]
+
     # -- expert-parallel dispatch via all-to-all (train / prefill) -----------------
     def _ep_body(self, p: Params, x: jax.Array):
         """Per-device body; weights pre-sharded: w_* (E/ep, D, F).
-        x: (b_loc, s_loc, D) — sequence sharded on the EP axis."""
+        x: (b_loc, s_loc, D) — sequence sharded on the EP axis.
+
+        The inter-device traffic this body emits (the bucketized a2a
+        blocks, forward and combine) is exactly what
+        :meth:`plan_dispatch` schedules host-side through
+        ``schedule_transfers``; ``apply`` refreshes that plan on every
+        eager call so dispatch telemetry tracks the live routing."""
         c = self.cfg
         ep = lax.psum(1, c.ep_axis)
         if isinstance(ep, jax.Array):
@@ -214,11 +306,18 @@ class MoE:
         return y_tok.reshape(b, s, d), aux
 
     def apply(self, p: Params, x: jax.Array) -> tuple[jax.Array, jax.Array]:
-        """x: (B, S, D) global. Returns (y, aux_loss)."""
+        """x: (B, S, D) global. Returns (y, aux_loss).
+
+        Eager (non-traced) expert-parallel calls also refresh the NoM
+        dispatch plan / :class:`ScheduleReport` via :meth:`plan_dispatch`
+        (skipped under jit, where the routing is not concrete)."""
         c = self.cfg
         if c.dispatch == "einsum":
             return self._einsum_body(p, x)
         decode = x.shape[1] == 1
+        if (not decode and not isinstance(x, jax.core.Tracer)
+                and self._ep_size() > 1):
+            self.plan_dispatch(p, x)
         body = self._ep_body_replicated if decode else self._ep_body
         x_spec = (P(c.dp_axes, None, None) if decode
                   else P(c.dp_axes, c.ep_axis, None))

@@ -5,16 +5,28 @@ feeds prompt tokens through the same step (cache-filling), which keeps one
 compiled program for both phases — the large-scale serving shapes
 (decode_32k / long_500k) are exercised via the dry-run on the production
 mesh, this engine is the functional path used by tests and examples.
+
+Decode-cache movement rides the NoM scheduler: each step's cache updates
+(the new KV lines / refreshed recurrent states, one transfer per cache
+leaf) are emitted as :class:`~repro.core.scheduler.TransferRequest`s and
+scheduled in one batched :func:`~repro.core.scheduler.schedule_transfers`
+call against the engine's bank mesh — the serving analogue of the paper's
+bulk inter-bank copies.  Per-step :class:`ScheduleReport`s accumulate on
+``Engine.reports`` and aggregate into ``Engine.last_report``
+(circuits/window, batch sizes, stall cycles).
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core.scheduler import (ScheduleReport, TransferRequest,
+                                  schedule_transfers)
+from repro.core.slot_alloc import TdmAllocator
+from repro.core.topology import Mesh3D
 from repro.models.lm import CausalLM, EncDecLM
 
 
@@ -23,9 +35,25 @@ class Engine:
     model: object
     cfg: ArchConfig
     max_len: int = 256
+    # NoM cache-transfer scheduling (set track_transfers=False to opt out).
+    track_transfers: bool = True
+    cache_mesh: Mesh3D = dataclasses.field(
+        default_factory=lambda: Mesh3D(8, 8, 4))
+    n_slots: int = 16
+    max_extra_slots: int = 3
+    keep_reports: int = 256    # recent per-step reports retained for
+    #   inspection; the aggregate (last_report / n_sched_steps) is exact
+    #   regardless, so a long-lived engine stays bounded
 
     def __post_init__(self):
         self._step = jax.jit(self._decode_one)
+        self._alloc = (TdmAllocator(self.cache_mesh, self.n_slots)
+                       if self.track_transfers else None)
+        self._placement = None     # [(tag, src, dst, step_bytes)] per leaf
+        self._next_cycle = 0       # scheduler-time anchor of the next step
+        self.reports: list[ScheduleReport] = []
+        self.last_report: ScheduleReport | None = None
+        self.n_sched_steps = 0
 
     def _decode_one(self, params, token, caches, pos, memory=None):
         if isinstance(self.model, EncDecLM):
@@ -36,17 +64,104 @@ class Engine:
                                                     pos)
         return logits, caches
 
+    # -- cache placement / transfer planning -----------------------------------
+    def _step_nbytes(self, batch: int) -> list[int]:
+        """Per-decode-step movement of every cache leaf, in bytes.
+
+        Probed by abstract evaluation at two cache lengths: a leaf whose
+        size scales with ``max_len`` (KV / ring buffers) moves one
+        token-slot per step (the size slope); a length-independent leaf
+        (SSM / RG-LRU state) is refreshed in place every step."""
+        full = jax.eval_shape(
+            lambda: self.model.init_caches(batch, self.max_len))
+        half_len = max(1, self.max_len // 2)
+        half = jax.eval_shape(
+            lambda: self.model.init_caches(batch, half_len))
+        out = []
+        for lf, lh in zip(jax.tree_util.tree_leaves(full),
+                          jax.tree_util.tree_leaves(half)):
+            nb_full = lf.size * jnp.dtype(lf.dtype).itemsize
+            nb_half = lh.size * jnp.dtype(lh.dtype).itemsize
+            if nb_full != nb_half and self.max_len != half_len:
+                out.append(max(1, (nb_full - nb_half)
+                               // (self.max_len - half_len)))
+            else:
+                out.append(max(1, nb_full))
+        return out
+
+    def _plan_placement(self, caches, batch: int) -> None:
+        """Home every cache leaf on a bank of the 3D mesh.
+
+        The vault controller stages incoming lines on the logic die (the
+        z=0 bank of the home column); NoM carries them up/across to the
+        leaf's home bank.  Homes spread over the DRAM layers (z >= 1)
+        with a stride coprime to the pool size, so consecutive leaves
+        land on different columns and their circuits can stream
+        concurrently.  On a single-layer mesh, homes spread over the
+        plane and stage at the row's edge bank; a leaf homed on its own
+        staging bank is a controller-local write — no inter-bank hop.
+        """
+        mesh = self.cache_mesh
+        flat, _ = jax.tree_util.tree_flatten_with_path(caches)
+        step_bytes = self._step_nbytes(batch)
+        placement = []
+        plane = mesh.X * mesh.Y
+        pool = mesh.n_nodes - plane
+        for i, (path, _leaf) in enumerate(flat):
+            if pool:
+                home = plane + (i * 37 + 11) % pool
+                x, y, _z = mesh.coords(home)
+                staging = mesh.node_id(x, y, 0)
+            else:       # single-layer mesh: all banks sit on the logic die
+                home = (i * 37 + 11) % mesh.n_nodes
+                _x, y, _z = mesh.coords(home)
+                staging = mesh.node_id(0, y, 0)
+            if staging == home:
+                continue
+            placement.append((jax.tree_util.keystr(path), staging, home,
+                              step_bytes[i]))
+        self._placement = placement
+
+    def _schedule_step(self) -> None:
+        """Schedule this step's cache transfer set as one concurrent batch."""
+        if not self._placement:
+            return
+        reqs = [TransferRequest(src=s, dst=d, nbytes=n, tag=t,
+                                max_extra_slots=self.max_extra_slots)
+                for t, s, d, n in self._placement]
+        results, report = schedule_transfers(reqs, allocator=self._alloc,
+                                             cycle=self._next_cycle)
+        self.reports.append(report)
+        del self.reports[:-self.keep_reports]
+        self.n_sched_steps += 1
+        self.last_report = (report if self.last_report is None
+                            else self.last_report.merge(report))
+        # The next decode step starts after this step's circuits drained
+        # (a model-forward pass dwarfs the cache-flush streaming time).
+        end = max((r.circuit.end_cycle for r in results
+                   if r.circuit is not None), default=self._next_cycle)
+        self._next_cycle = ((end // self.n_slots) + 1) * self.n_slots
+
     def generate(self, params, prompt: jax.Array, n_new: int,
                  memory: jax.Array | None = None,
                  greedy: bool = True) -> jax.Array:
-        """prompt: (B, P) int32 -> (B, P+n_new)."""
+        """prompt: (B, P) int32 -> (B, P+n_new).
+
+        Every prefill/decode step also emits its cache-movement transfer
+        set through the NoM scheduler (unless ``track_transfers=False``);
+        telemetry lands on ``self.reports`` / ``self.last_report``.
+        """
         b, plen = prompt.shape
         caches = self.model.init_caches(b, self.max_len)
+        if self._alloc is not None:
+            self._plan_placement(caches, b)
         # Prefill token by token (single compiled program for both phases).
         logits = None
         for i in range(plen):
             logits, caches = self._step(params, prompt[:, i:i + 1], caches,
                                         jnp.int32(i), memory)
+            if self._alloc is not None:
+                self._schedule_step()
         out = [prompt]
         tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         out.append(tok)
@@ -55,4 +170,23 @@ class Engine:
                                         memory)
             tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
             out.append(tok)
+            if self._alloc is not None:
+                self._schedule_step()
         return jnp.concatenate(out, axis=1)
+
+    def transfer_telemetry(self) -> dict:
+        """Aggregate cache-transfer scheduling stats over ``generate``."""
+        if not self.n_sched_steps:
+            return {}
+        agg = self.last_report
+        return {
+            "steps": self.n_sched_steps,
+            "requests": agg.n_requests,
+            "scheduled": agg.n_scheduled,
+            "batch_avg": agg.n_requests / self.n_sched_steps,
+            "max_inflight": agg.max_inflight,
+            "avg_inflight": agg.avg_inflight,
+            "stall_cycles": agg.stall_cycles,
+            "search_rounds": agg.search_rounds,
+            "conflicts": agg.conflicts,
+        }
