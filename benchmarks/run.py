@@ -6,8 +6,9 @@ import traceback
 
 from benchmarks import (bench_ablations, bench_energy, bench_freq_scaling,
                         bench_ipc, bench_nom_a2a, bench_roofline,
-                        bench_sched_policies, bench_slot_alloc,
-                        bench_traffic_mix, bench_tsv_conflict)
+                        bench_sched_policies, bench_serving_tenancy,
+                        bench_slot_alloc, bench_traffic_mix,
+                        bench_tsv_conflict)
 
 ALL = [
     ("traffic_mix(Fig3)", bench_traffic_mix),
@@ -18,13 +19,15 @@ ALL = [
     ("slot_alloc", bench_slot_alloc),
     ("nom_a2a", bench_nom_a2a),
     ("sched_policies", bench_sched_policies),
+    ("serving_tenancy", bench_serving_tenancy),
     ("ablations", bench_ablations),
     ("roofline", bench_roofline),
 ]
 
 # --quick: the CI smoke subset — the scheduler-centric benches that gate
 # the concurrent-transfer perf trajectory, fast enough for every PR.
-QUICK = ("tsv_conflict", "slot_alloc", "nom_a2a", "sched_policies")
+QUICK = ("tsv_conflict", "slot_alloc", "nom_a2a", "sched_policies",
+         "serving_tenancy")
 
 
 def main() -> None:

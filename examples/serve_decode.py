@@ -19,6 +19,11 @@ def main():
                     choices=sorted(ARCHS))
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--policy", default="spread",
+                    choices=("spread", "partition", "stall_feedback"))
+    ap.add_argument("--ring-slots", type=int, default=8,
+                    help="ring capacity per KV leaf (token slots); decode "
+                         "past it emits overwrite-eviction INITs")
     args = ap.parse_args()
 
     mesh = make_mesh((1, 1), ("data", "model"))
@@ -26,7 +31,8 @@ def main():
     cfg = get_config(args.arch, smoke=True)
     model = make_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = Engine(model, cfg, max_len=64)
+    eng = Engine(model, cfg, max_len=64, placement_policy=args.policy,
+                 ring_slots=args.ring_slots)
     prompt = jax.random.randint(jax.random.PRNGKey(1),
                                 (args.batch, 6), 0, cfg.vocab)
     if cfg.arch_type == "encdec":
@@ -40,7 +46,8 @@ def main():
         print("  prompt", row[:6], "->", row[6:])
 
     # Cache movement rides the NoM scheduler: one batched circuit setup
-    # per prefill/decode step; this is the aggregate ScheduleReport.
+    # per prefill/decode step (the stream runs as a bank-pool tenant);
+    # ring overwrites + the teardown scrub show up as INIT-class ops.
     tel = eng.transfer_telemetry()
     print(f"\nNoM cache-transfer telemetry over {tel['steps']} steps:")
     print(f"  circuits {tel['scheduled']}/{tel['requests']} scheduled, "
@@ -50,6 +57,10 @@ def main():
     print(f"  stall_cycles={tel['stall_cycles']} "
           f"search_rounds={tel['search_rounds']} "
           f"conflicts={tel['conflicts']}")
+    print(f"  tenancy: policy={args.policy} "
+          f"peak_tenants={tel['peak_tenants']} repacks={tel['repacks']}")
+    print(f"  eviction/INIT: {tel['init_requests']}/{tel['requests']} "
+          f"requests (ring wraps past {args.ring_slots} slots + teardown)")
 
 
 if __name__ == "__main__":

@@ -1,14 +1,19 @@
 #!/usr/bin/env python
-"""Docs gate for CI: the documentation suite must exist, README python
-blocks must at least compile, and every path README/architecture.md
-reference must exist in the tree (stale docs fail the build)."""
+"""Docs gate for CI: the documentation suite must exist, README /
+architecture python blocks must compile, docs/serving.md blocks must
+actually *run* (imports included), every path a doc references must exist
+in the tree, and every public method of the serving API (`Engine`,
+`BankPool`) must be mentioned in a doc page (stale docs fail the build)."""
 import pathlib
 import re
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
-REQUIRED = ("README.md", "docs/architecture.md", "PAPER.md", "ROADMAP.md",
-            "CHANGES.md")
+REQUIRED = ("README.md", "docs/architecture.md", "docs/serving.md",
+            "PAPER.md", "ROADMAP.md", "CHANGES.md")
+DOC_PAGES = ("README.md", "docs/architecture.md", "docs/serving.md")
+# Pages whose python blocks must execute end to end, not just compile.
+EXEC_PAGES = ("docs/serving.md",)
 
 
 def fail(msg: str) -> None:
@@ -27,21 +32,46 @@ def referenced_paths(text: str) -> set[str]:
     return {m.rstrip(".,") for m in pat.findall(text)}
 
 
+def public_methods(cls) -> list[str]:
+    return sorted(name for name, val in vars(cls).items()
+                  if callable(val) and not name.startswith("_"))
+
+
+def check_serving_api_documented() -> None:
+    """Every public Engine/BankPool method must appear in some doc page."""
+    from repro.serving import BankPool, Engine
+    corpus = "\n".join((ROOT / rel).read_text() for rel in DOC_PAGES)
+    for cls in (Engine, BankPool):
+        for m in public_methods(cls):
+            # Word-boundary match: "release" must not satisfy "lease".
+            if not re.search(rf"\b{re.escape(m)}\b", corpus):
+                fail(f"{cls.__name__}.{m} is public but mentioned in no "
+                     f"doc page ({', '.join(DOC_PAGES)})")
+
+
 def main() -> None:
+    sys.path.insert(0, str(ROOT / "src"))   # for doc-block exec + API import
     for rel in REQUIRED:
         if not (ROOT / rel).is_file():
             fail(f"missing {rel}")
-    for rel in ("README.md", "docs/architecture.md"):
+    for rel in DOC_PAGES:
         text = (ROOT / rel).read_text()
         for i, block in enumerate(python_blocks(text)):
+            where = f"{rel}[python block {i}]"
             try:
-                compile(block, f"{rel}[python block {i}]", "exec")
+                code = compile(block, where, "exec")
             except SyntaxError as e:
-                fail(f"{rel} python block {i} does not compile: {e}")
+                fail(f"{where} does not compile: {e}")
+            if rel in EXEC_PAGES:
+                try:
+                    exec(code, {"__name__": "__check_docs__"})
+                except Exception as e:
+                    fail(f"{where} does not run: {type(e).__name__}: {e}")
         for path in sorted(referenced_paths(text)):
             p = ROOT / path
             if not (p.exists() or p.with_suffix("").exists()):
                 fail(f"{rel} references missing path {path}")
+    check_serving_api_documented()
     print("check_docs: OK")
 
 

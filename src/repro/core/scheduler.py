@@ -53,6 +53,14 @@ class TransferRequest:
       cycle: bank level only — anchor this request later than the batch
         cycle (e.g. its source read completes later); default None
         (anchored at the batch cycle).
+      op: ``"copy"`` (default) streams ``nbytes`` from ``src`` to ``dst``;
+        ``"init"`` is INIT-class bulk initialization *in place* (requires
+        ``src == dst``) — ring-buffer overwrites, eviction scrubs, page
+        zeroing.  On the tdm backend an INIT becomes a *zero-hop* circuit
+        occupying only the bank's LOCAL port while rows clear in-DRAM
+        (RowClone-FPM); on the rounds backend it is a local no-route
+        transfer.  Either way it shares the batch's admission order and
+        shows up in :attr:`ScheduleReport.n_init`.
     """
     src: object
     dst: object
@@ -60,6 +68,7 @@ class TransferRequest:
     tag: object = None
     max_extra_slots: int = 0
     cycle: int | None = None
+    op: str = "copy"
 
 
 @dataclasses.dataclass
@@ -82,6 +91,8 @@ class ScheduleReport:
         because slots/links were taken — queueing delay under contention.
       search_rounds: vectorized wavefront passes issued (tdm backend).
       conflicts: stale-snapshot commit retries (tdm backend).
+      n_init: INIT-class requests (``op="init"``) in this batch — the
+        eviction/initialization share of the traffic.
     """
     backend: str               # "tdm" | "rounds"
     n_requests: int
@@ -92,6 +103,7 @@ class ScheduleReport:
     stall_cycles: int = 0      # waits beyond the earliest possible start
     search_rounds: int = 0     # vectorized search passes (tdm backend)
     conflicts: int = 0         # stale-snapshot retries (tdm backend)
+    n_init: int = 0            # INIT-class (op="init") requests in the batch
     agg_windows: int = 0       # windows folded into avg_inflight by merge()
     #   (0 on a fresh report: its own n_windows is the weight)
 
@@ -115,6 +127,7 @@ class ScheduleReport:
             stall_cycles=self.stall_cycles + other.stall_cycles,
             search_rounds=self.search_rounds + other.search_rounds,
             conflicts=self.conflicts + other.conflicts,
+            n_init=self.n_init + other.n_init,
             agg_windows=wa + wb)
 
 
@@ -127,7 +140,7 @@ def _as_copy_requests(transfers) -> list[CopyRequest]:
         elif isinstance(t, TransferRequest):
             out.append(CopyRequest(int(t.src), int(t.dst), t.nbytes,
                                    max_extra_slots=t.max_extra_slots,
-                                   cycle=t.cycle))
+                                   cycle=t.cycle, op=t.op))
         else:
             out.append(CopyRequest(*t))
     return out
@@ -181,7 +194,8 @@ def _tdm_report(alloc: TdmAllocator, reqs: list[CopyRequest],
         n_windows=int(span), max_inflight=int(busy.max()) if busy.size else 0,
         avg_inflight=float(busy.mean()) if busy.size else 0.0,
         stall_cycles=stall,
-        search_rounds=rep.search_rounds, conflicts=rep.conflicts)
+        search_rounds=rep.search_rounds, conflicts=rep.conflicts,
+        n_init=sum(1 for rq in reqs if rq.op == "init"))
 
 
 def schedule_transfers(transfers, *, allocator: TdmAllocator | None = None,
@@ -213,19 +227,28 @@ def schedule_transfers(transfers, *, allocator: TdmAllocator | None = None,
     """
     if (allocator is None) == (shape is None):
         raise ValueError("pass exactly one of allocator= or shape=")
+    transfers = list(transfers)     # validated + iterated more than once
+    for t in transfers:
+        if getattr(t, "op", "copy") == "init" and t.src != t.dst:
+            raise ValueError(f"init requires src == dst, got {t!r}")
     if allocator is not None:
         reqs = _as_copy_requests(transfers)
         results = allocator.allocate_batch(reqs, cycle)
         return results, _tdm_report(allocator, reqs, results, cycle)
-    plan = plan_transfers(shape, _as_transfers(transfers), torus=torus,
-                          policy=policy)
+    n_init = sum(1 for t in transfers if getattr(t, "op", "copy") == "init")
+    norm = _as_transfers(transfers)
+    plan = plan_transfers(shape, norm, torus=torus, policy=policy)
     conc = plan.concurrency()
     stall = sum(s for s, p in zip(plan.starts, plan.paths) if p)
+    # A src == dst transfer (e.g. an INIT scrub) is local: no route to
+    # grant, trivially "scheduled" rather than denied.
     report = ScheduleReport(
         backend="rounds", n_requests=len(plan.transfers),
-        n_scheduled=sum(1 for p in plan.paths if p),
+        n_scheduled=sum(1 for t, p in zip(norm, plan.paths)
+                        if p or t.src == t.dst),
         n_windows=plan.n_rounds, max_inflight=int(conc["max_inflight"]),
-        avg_inflight=conc["avg_inflight"], stall_cycles=stall)
+        avg_inflight=conc["avg_inflight"], stall_cycles=stall,
+        n_init=n_init)
     return plan, report
 
 

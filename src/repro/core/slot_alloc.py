@@ -268,12 +268,21 @@ class CopyRequest:
 
     ``cycle`` optionally anchors this request later than the batch cycle
     (e.g. its source read completes later); the occupancy snapshot is still
-    taken at the batch cycle, which is conservative."""
+    taken at the batch cycle, which is conservative.
+
+    ``op`` selects the operation class: ``"copy"`` (default) streams
+    ``nbytes`` over a circuit from ``src`` to ``dst``; ``"init"`` is
+    bulk initialization *in place* (``src == dst``) — the CCU sets up a
+    zero-hop circuit that occupies only the bank's LOCAL port while the
+    bank clears rows internally (RowClone-FPM style), so INIT traffic
+    shares the CCU's admission/telemetry pipeline without consuming mesh
+    links."""
     src: int
     dst: int
     nbytes: int
     max_extra_slots: int = 0
     cycle: int | None = None
+    op: str = "copy"
 
 
 @dataclasses.dataclass
@@ -338,9 +347,17 @@ class TdmAllocator:
             self._search_batch = partial(_search_batch_jit, mesh=mesh,
                                          n_slots=n_slots)
 
+    # An in-place INIT clears one DRAM row per TDM window (RowClone-FPM in
+    # the bank; no bytes cross the mesh), so its zero-hop circuit holds the
+    # LOCAL port for ceil(nbytes / init_row_bytes) windows.
+    init_row_bytes: int = 8192
+
     def n_windows_for(self, nbytes: int, slots: int = 1) -> int:
         per_window = self.link_bytes * slots
         return max(1, -(-nbytes // per_window))
+
+    def n_windows_for_init(self, nbytes: int) -> int:
+        return max(1, -(-nbytes // self.init_row_bytes))
 
     # -- public API -----------------------------------------------------------
     def allocate(self, src: int, dst: int, nbytes: int, cycle: int,
@@ -473,8 +490,9 @@ class TdmAllocator:
         hops = traceback(vec, occ, self.mesh, self.n_slots, req.src, req.dst,
                          a)
         # Optionally accelerate with extra free slots (paper Section 2.1).
+        # INIT never streams over links, so extra slots cannot help it.
         extra = 0
-        if req.max_extra_slots:
+        if req.max_extra_slots and req.op != "init":
             for a2 in range(self.n_slots):
                 if extra >= req.max_extra_slots:
                     break
@@ -488,7 +506,8 @@ class TdmAllocator:
                     extra += 1
         if not self.table.can_reserve(hops, window):
             return _CONFLICT
-        n_win = self.n_windows_for(req.nbytes, slots=1 + extra)
+        n_win = (self.n_windows_for_init(req.nbytes) if req.op == "init"
+                 else self.n_windows_for(req.nbytes, slots=1 + extra))
         circ = Circuit(src=req.src, dst=req.dst, start_cycle=start_cycle,
                        n_windows=n_win, hops=hops, slots_per_window=1 + extra,
                        distance=dist, _n_slots_hint=self.n_slots)

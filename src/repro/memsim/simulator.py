@@ -111,6 +111,11 @@ class CcuQueue:
     stall_cycles: int = 0      # core cycles lost to queue-full backpressure
     full_stalls: int = 0       # copies that hit a full queue
     peak_occupancy: int = 0
+    # INIT-class occupancy, accounted separately: bulk initialization
+    # (page zeroing) shares the queue with copies but sets up zero-hop
+    # circuits — how much of the bounded buffer it eats is its own signal.
+    init_reqs: int = 0
+    peak_init: int = 0
 
     def full(self) -> bool:
         return len(self.items) >= self.depth
@@ -119,6 +124,10 @@ class CcuQueue:
         assert not self.full(), "push on a full CCU queue (drain first)"
         self.items.append((at, r))
         self.peak_occupancy = max(self.peak_occupancy, len(self.items))
+        if r.op == Op.INIT:
+            self.init_reqs += 1
+            n = sum(1 for _at, q in self.items if q.op == Op.INIT)
+            self.peak_init = max(self.peak_init, n)
 
 
 class MemorySystem:
@@ -139,6 +148,10 @@ class MemorySystem:
             self.alloc = TdmAllocator(self.mesh, p.n_slots)
         elif p.config == "nom_light":
             self.alloc = TdmAllocatorLight(self.mesh, p.n_slots)
+        if self.alloc is not None:
+            # Keep the zero-hop INIT circuit's window occupancy in sync
+            # with the modeled in-bank zeroing (one row per TDM window).
+            self.alloc.init_row_bytes = t.row_bytes
         self.nom_hop_beats = 0
         # Bounded CCU request queue, calibrated against the router-buffering
         # cap: a queue deeper than the in-flight circuit budget would only
@@ -147,6 +160,7 @@ class MemorySystem:
         if p.nom_max_inflight:
             depth = max(1, min(depth, p.nom_max_inflight))
         self.ccu = CcuQueue(depth)
+        self.nom_init_windows = 0      # TDM windows held by zero-hop INITs
         # stats for the TSV dual-use analysis (NoM-Light motivation)
         self.nom_vertical_cycles = 0
         # concurrent-transfer telemetry: circuits in flight per TDM window
@@ -264,10 +278,16 @@ class MemorySystem:
         self.nom_batches += 1
         self.nom_batched_reqs += len(items)
         # 2) source reads (row-granularity into the bank's CS buffer) via
-        #    the high-priority copy queue.
+        #    the high-priority copy queue.  An INIT has no source read:
+        #    the CCU issues an in-bank RowClone-FPM zero, and its zero-hop
+        #    circuit holds only the home bank's LOCAL port.
         reqs: list[CopyRequest] = []
         for i, (at, r) in enumerate(items):
             pick = max(at, pick0 + i)
+            if r.op == Op.INIT:
+                reqs.append(CopyRequest(r.src_bank, r.src_bank, r.nbytes,
+                                        op="init", cycle=pick))
+                continue
             svc, sb = self._vault_bank(r.src_bank)
             ready = svc.bank_row_op(pick + 3, sb, t.tRCD + t.tCL)
             # 3) circuit allocation anchored so injection starts when data
@@ -285,7 +305,9 @@ class MemorySystem:
             planned: dict[int, int] = defaultdict(int)
             bumped = []
             for rq in reqs:
-                span = self.alloc.n_windows_for(rq.nbytes, slots=1) + 1
+                span = (self.alloc.n_windows_for_init(rq.nbytes)
+                        if rq.op == "init"
+                        else self.alloc.n_windows_for(rq.nbytes, slots=1)) + 1
                 w = (rq.cycle + 3) // p.n_slots
                 for _ in range(4096):   # bounded: circuits always expire
                     if all(self.window_inflight[u] + planned[u]
@@ -316,6 +338,20 @@ class MemorySystem:
             w_start = c.start_cycle // p.n_slots   # actual streaming window
             for w in range(w_start, w_start + c.n_windows):
                 self.window_inflight[w] += 1
+            if rq.op == "init":
+                # Zero-hop circuit: the bank clears rows internally
+                # (RowClone-FPM) while the circuit holds its LOCAL port;
+                # nothing streams over mesh links.
+                self.nom_init_windows += c.n_windows
+                vc, b = self._vault_bank(r.src_bank)
+                # One cleared row per circuit window (init_row_bytes is
+                # pinned to t.row_bytes above, keeping occupancy and
+                # modeled zeroing work coupled).
+                done = c.start_cycle
+                for _ in range(c.n_windows):
+                    done = vc.bank_row_op(done, b, t.rowclone_fpm)
+                dones.append(done)
+                continue
             dist = max(c.distance, 1)
             # transfer duration in NoM-link cycles, scaled by link frequency.
             link_cycles = dist + (c.n_windows - 1) * p.n_slots
@@ -344,13 +380,15 @@ class MemorySystem:
 def simulate(reqs: list[Request], p: SimParams, name: str = "") -> SimResult:
     """Run the closed-loop core over the request stream.
 
-    Under the NoM configs, inter-bank copies accumulate in the CCU's
-    bounded request queue (``sys.ccu``, depth ``p.nom_ccu_queue_depth``)
-    and are drained by a single batched circuit setup
-    (``copy_nom_batch``) — the paper's concurrent circuit establishment.
-    A copy issued against a full queue backpressures the core until the
-    drain's pickup pipeline completes; the lost cycles are reported as
-    ``extra["nom_ccu_stall_cycles"]``."""
+    Under the NoM configs, inter-bank copies *and* bulk initializations
+    accumulate in the CCU's bounded request queue (``sys.ccu``, depth
+    ``p.nom_ccu_queue_depth``) and are drained by a single batched
+    circuit setup (``copy_nom_batch``) — the paper's concurrent circuit
+    establishment, over its mixed copy/INIT workload.  A request issued
+    against a full queue backpressures the core until the drain's pickup
+    pipeline completes; the lost cycles are reported as
+    ``extra["nom_ccu_stall_cycles"]``, and the INIT share of the queue
+    and of the TDM windows as ``extra["nom_ccu_init_*"]``."""
     sys = MemorySystem(p)
     t = p.timing
     outstanding: list[int] = []   # completion-time min-heap
@@ -364,6 +402,27 @@ def simulate(reqs: list[Request], p: SimParams, name: str = "") -> SimResult:
             for done in sys.copy_nom_batch(sys.ccu.items, pickup_at):
                 heapq.heappush(outstanding, done)
             sys.ccu.items.clear()
+
+    def enqueue_nom(issue: int, r: Request) -> int:
+        """Admit a copy/INIT into the bounded CCU queue.  The depth
+        bounds both dimensions of the CCU's service budget — at most
+        ``depth`` buffered requests, and the head waits at most ``depth``
+        TDM windows before its batched pickup pass (the concurrent
+        circuit establishment).  A request that finds the buffer at depth
+        forces an early drain and backpressures the core until the pickup
+        pipeline completes.  Returns the (possibly stalled) issue cycle."""
+        q = sys.ccu
+        if q.items and (issue // p.n_slots
+                        - q.items[0][0] // p.n_slots) >= q.depth:
+            flush_copies()
+        if q.full():
+            flush_copies(pickup_at=issue)
+            freed = max(issue, q.busy_until)
+            q.stall_cycles += freed - issue
+            q.full_stalls += 1
+            issue = freed
+        q.push(issue, r)
+        return issue
 
     for r in reqs:
         # Respect the MLP window (queued CCU copies count as outstanding).
@@ -381,11 +440,18 @@ def simulate(reqs: list[Request], p: SimParams, name: str = "") -> SimResult:
                                    r.op == Op.WRITE)
         elif r.op == Op.INIT:
             total_instr += r.nbytes // LINE * 1  # conventional stores
+            copy_bytes += r.nbytes
             if p.config == "conventional":
                 done = sys.copy_conventional(issue, r, write_only=True)
-            else:
+            elif not nom:
                 done = sys.copy_in_dram_local(issue, r)
-            copy_bytes += r.nbytes
+            else:
+                # INIT rides the CCU queue too: the zeroing is still
+                # in-bank (RowClone-FPM), but issue/admission shares the
+                # bounded buffer with copies, and the zero-hop circuit's
+                # occupancy lands in the nom_ccu_* telemetry.
+                core_time = max(core_time, enqueue_nom(issue, r))
+                continue
         else:  # COPY
             total_instr += r.nbytes // LINE * p.instr_per_line
             copy_bytes += r.nbytes
@@ -396,25 +462,7 @@ def simulate(reqs: list[Request], p: SimParams, name: str = "") -> SimResult:
             elif p.config == "rowclone":
                 done = sys.copy_rowclone_psm(issue, r)
             else:
-                # Bounded CCU queue: depth bounds both dimensions of the
-                # CCU's service budget — at most ``depth`` buffered
-                # requests, and the head waits at most ``depth`` TDM
-                # windows before its batched pickup pass (the concurrent
-                # circuit establishment).  A copy that finds the buffer at
-                # depth forces an early drain and backpressures the core
-                # until the pickup pipeline completes.
-                q = sys.ccu
-                if q.items and (issue // p.n_slots
-                                - q.items[0][0] // p.n_slots) >= q.depth:
-                    flush_copies()
-                if sys.ccu.full():
-                    flush_copies(pickup_at=issue)
-                    freed = max(issue, sys.ccu.busy_until)
-                    sys.ccu.stall_cycles += freed - issue
-                    sys.ccu.full_stalls += 1
-                    core_time = max(core_time, freed)
-                    issue = freed
-                sys.ccu.push(issue, r)
+                core_time = max(core_time, enqueue_nom(issue, r))
                 continue
         heapq.heappush(outstanding, done)
 
@@ -444,6 +492,11 @@ def simulate(reqs: list[Request], p: SimParams, name: str = "") -> SimResult:
             "nom_ccu_peak_queue": sys.ccu.peak_occupancy,
             "nom_ccu_full_stalls": sys.ccu.full_stalls,
             "nom_ccu_stall_cycles": sys.ccu.stall_cycles,
+            # INIT-class occupancy, separately: how much of the bounded
+            # queue and of the TDM windows the initialization traffic eats.
+            "nom_ccu_init_reqs": sys.ccu.init_reqs,
+            "nom_ccu_init_peak": sys.ccu.peak_init,
+            "nom_ccu_init_windows": sys.nom_init_windows,
         }
     return SimResult(
         name=name, config=p.config, cycles=cycles, instructions=total_instr,

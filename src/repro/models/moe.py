@@ -165,6 +165,12 @@ class MoE:
         ``(TransferPlan, ScheduleReport)`` and stores them for
         :attr:`last_dispatch_report`.
 
+        This is the *standalone* planner (plan without running the
+        model); eager :meth:`apply` calls do NOT come through here — they
+        reuse the traced routing via the block-counts aux output of
+        ``_ep_body`` (:meth:`_plan_from_blocks`), so the router runs
+        exactly once per forward.
+
         The plan covers one data-parallel replica's EP ring (each dp
         replica runs an identical, independent a2a): the batch dim is
         divided by the dp axis size so per-rank token counts and the
@@ -201,6 +207,14 @@ class MoE:
                                minlength=c.n_experts)
             for expert, n_tok in enumerate(kept):
                 blocks[r, expert // e_loc] += int(n_tok)
+        return self._plan_from_blocks(blocks, d, itemsize, policy)
+
+    def _plan_from_blocks(self, blocks: np.ndarray, d: int, itemsize: int,
+                          policy: str = "arrival"):
+        """Schedule the EP-ring a2a from a (ep, ep) kept-token block
+        matrix — the shared back half of :meth:`plan_dispatch` and of the
+        traced-routing reuse path in :meth:`apply`."""
+        ep = blocks.shape[0]
         reqs = []
         for r in range(ep):
             for q in range(ep):
@@ -227,11 +241,11 @@ class MoE:
         """Per-device body; weights pre-sharded: w_* (E/ep, D, F).
         x: (b_loc, s_loc, D) — sequence sharded on the EP axis.
 
-        The inter-device traffic this body emits (the bucketized a2a
-        blocks, forward and combine) is exactly what
-        :meth:`plan_dispatch` schedules host-side through
-        ``schedule_transfers``; ``apply`` refreshes that plan on every
-        eager call so dispatch telemetry tracks the live routing."""
+        Besides (y, aux_loss) the body returns its *dispatch block
+        counts* — kept tokens per destination EP rank, shape (1, 1, ep) —
+        as a third output: the traced routing made reusable, so eager
+        ``apply`` refreshes the NoM dispatch plan without re-running the
+        router on host (the double-routing ROADMAP item)."""
         c = self.cfg
         ep = lax.psum(1, c.ep_axis)
         if isinstance(ep, jax.Array):
@@ -244,6 +258,10 @@ class MoE:
         flat_e = e.reshape(-1)
         cap = max(1, int(c.capacity_factor * t * c.top_k / c.n_experts))
         send, pos, keep, tok = self._bucketize(x2d, flat_e, cap)
+        # Kept tokens per destination rank — the (src=me, dst) row of the
+        # block matrix plan_dispatch would compute host-side.
+        blocks = jnp.zeros((ep,), jnp.int32).at[flat_e // e_loc].add(
+            keep.astype(jnp.int32))
         send = send.reshape(ep, e_loc * cap, d)
         a2a = (nom_all_to_all if c.dispatch == "nom" else
                lambda v, ax: lax.all_to_all(v, ax, 0, 0))
@@ -261,7 +279,8 @@ class MoE:
         y_tok = self._combine(back, flat_e, pos, keep, tok, w, t, d, cap,
                               x.dtype)
         axes = tuple(c.dp_axes) + (c.ep_axis,)
-        return y_tok.reshape(b, s, d), lax.pmean(aux, axes)
+        return (y_tok.reshape(b, s, d), lax.pmean(aux, axes),
+                blocks.reshape(1, 1, ep))
 
     # -- replicated dispatch (decode: S == 1, batch < devices) ----------------------
     def _ep_body_replicated(self, p: Params, x: jax.Array):
@@ -309,21 +328,34 @@ class MoE:
         """x: (B, S, D) global. Returns (y, aux_loss).
 
         Eager (non-traced) expert-parallel calls also refresh the NoM
-        dispatch plan / :class:`ScheduleReport` via :meth:`plan_dispatch`
-        (skipped under jit, where the routing is not concrete)."""
+        dispatch plan / :class:`ScheduleReport` — from the *traced*
+        routing: ``_ep_body`` returns its dispatch block counts as an aux
+        output, so the router runs exactly once per forward (no host-side
+        re-route; skipped under jit, where the counts are not concrete).
+        """
         c = self.cfg
         if c.dispatch == "einsum":
             return self._einsum_body(p, x)
         decode = x.shape[1] == 1
-        if (not decode and not isinstance(x, jax.core.Tracer)
-                and self._ep_size() > 1):
-            self.plan_dispatch(p, x)
-        body = self._ep_body_replicated if decode else self._ep_body
         x_spec = (P(c.dp_axes, None, None) if decode
                   else P(c.dp_axes, c.ep_axis, None))
+        if decode:
+            fn = shard_map(
+                self._ep_body_replicated,
+                in_specs=(self._param_specs(), x_spec),
+                out_specs=(x_spec, P()),
+                check_vma=False)
+            return fn(p, x)
         fn = shard_map(
-            body,
+            self._ep_body,
             in_specs=(self._param_specs(), x_spec),
-            out_specs=(x_spec, P()),
+            out_specs=(x_spec, P(), P(c.dp_axes, c.ep_axis, None)),
             check_vma=False)
-        return fn(p, x)
+        y, aux, blocks = fn(p, x)
+        if not isinstance(blocks, jax.core.Tracer) and self._ep_size() > 1:
+            # blocks: (dp, ep, ep); dp replicas run identical independent
+            # a2a rings — plan the first, as plan_dispatch does.
+            self._plan_from_blocks(np.asarray(blocks[0], np.int64),
+                                   d=x.shape[-1],
+                                   itemsize=jnp.dtype(x.dtype).itemsize)
+        return y, aux

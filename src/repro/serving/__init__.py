@@ -1,3 +1,6 @@
 from .engine import Engine
+from .placement import (PLACEMENT_POLICIES, BankPool, Lease, LeafSpec,
+                        step_requests, teardown_requests)
 
-__all__ = ["Engine"]
+__all__ = ["Engine", "BankPool", "Lease", "LeafSpec", "PLACEMENT_POLICIES",
+           "step_requests", "teardown_requests"]

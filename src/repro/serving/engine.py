@@ -6,14 +6,19 @@ compiled program for both phases — the large-scale serving shapes
 (decode_32k / long_500k) are exercised via the dry-run on the production
 mesh, this engine is the functional path used by tests and examples.
 
-Decode-cache movement rides the NoM scheduler: each step's cache updates
-(the new KV lines / refreshed recurrent states, one transfer per cache
-leaf) are emitted as :class:`~repro.core.scheduler.TransferRequest`s and
-scheduled in one batched :func:`~repro.core.scheduler.schedule_transfers`
-call against the engine's bank mesh — the serving analogue of the paper's
-bulk inter-bank copies.  Per-step :class:`ScheduleReport`s accumulate on
-``Engine.reports`` and aggregate into ``Engine.last_report``
-(circuits/window, batch sizes, stall cycles).
+Decode-cache movement rides the NoM scheduler, multi-tenant: each
+``generate`` stream is a *tenant* that leases bank homes from a
+:class:`~repro.serving.placement.BankPool` (placement policies: strided
+spread, per-tenant column partitioning, stall-feedback repacking).  Every
+step's cache updates are emitted as
+:class:`~repro.core.scheduler.TransferRequest`s and scheduled in one
+batched :func:`~repro.core.scheduler.schedule_transfers` call; ring-buffer
+overwrites, stall-driven evictions, and tenant teardown ride the same
+batches as INIT-class requests (``op="init"``, zero-hop circuits) — the
+serving analogue of the paper's mixed copy/initialization traffic.
+Per-batch :class:`ScheduleReport`s accumulate on ``Engine.reports`` and
+aggregate into ``Engine.last_report``; ``Engine.transfer_telemetry()``
+summarizes both, including the INIT share.  See ``docs/serving.md``.
 """
 from __future__ import annotations
 
@@ -23,15 +28,47 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.scheduler import (ScheduleReport, TransferRequest,
-                                  schedule_transfers)
+from repro.core.scheduler import (ScheduleReport, schedule_transfers)
 from repro.core.slot_alloc import TdmAllocator
 from repro.core.topology import Mesh3D
 from repro.models.lm import CausalLM, EncDecLM
+from repro.serving.placement import (BankPool, LeafSpec, step_requests,
+                                     teardown_requests)
+
+
+@dataclasses.dataclass
+class _Tenant:
+    """Live state of one serving stream's lease on the bank mesh."""
+    name: str
+    leases: list
+    pos: int = 0               # write position (ring wrap -> evictions)
+    stall_mark: int = 0        # tenant's attributed stalls at last repack
 
 
 @dataclasses.dataclass
 class Engine:
+    """Multi-tenant serving engine over a NoM bank mesh.
+
+    Functional path: ``generate`` (batched greedy prefill+decode with one
+    jit'd step).  Scheduling path (``track_transfers=True``): every stream
+    is a tenant of ``self.pool``; per-step cache movement and INIT-class
+    eviction traffic go through ``schedule_transfers`` against one shared
+    :class:`TdmAllocator` — so concurrent tenants' circuits genuinely
+    compete for (and share) TDM windows, the quantity
+    ``benchmarks/bench_serving_tenancy.py`` sweeps.
+
+    Attributes:
+      placement_policy: ``"spread"`` | ``"partition"`` |
+        ``"stall_feedback"`` (see ``repro/serving/placement.py``).
+      ring_slots: ring capacity per KV/ring leaf in token slots for the
+        traffic model; ``None`` means ``max_len`` (no wrap within one
+        ``generate``).  Smaller values exercise overwrite evictions.
+      repack_stall_threshold: accumulated ``stall_cycles`` above which a
+        ``stall_feedback`` engine re-homes a tenant (ignored otherwise).
+      keep_reports: recent per-batch reports retained for inspection; the
+        aggregate (``last_report`` / ``n_sched_steps``) is exact
+        regardless, so a long-lived engine stays bounded.
+    """
     model: object
     cfg: ArchConfig
     max_len: int = 256
@@ -41,19 +78,26 @@ class Engine:
         default_factory=lambda: Mesh3D(8, 8, 4))
     n_slots: int = 16
     max_extra_slots: int = 3
-    keep_reports: int = 256    # recent per-step reports retained for
-    #   inspection; the aggregate (last_report / n_sched_steps) is exact
-    #   regardless, so a long-lived engine stays bounded
+    keep_reports: int = 256
+    placement_policy: str = "spread"
+    ring_slots: int | None = None
+    repack_stall_threshold: int = 64
 
     def __post_init__(self):
         self._step = jax.jit(self._decode_one)
         self._alloc = (TdmAllocator(self.cache_mesh, self.n_slots)
                        if self.track_transfers else None)
-        self._placement = None     # [(tag, src, dst, step_bytes)] per leaf
-        self._next_cycle = 0       # scheduler-time anchor of the next step
+        self.pool = (BankPool(self.cache_mesh, self.placement_policy)
+                     if self.track_transfers else None)
+        self._tenants: dict[str, _Tenant] = {}
+        self._tenant_stalls: dict[str, int] = {}   # per-tenant stall cycles
+        self._gen_seq = 0
+        self._next_cycle = 0       # scheduler-time anchor of the next batch
         self.reports: list[ScheduleReport] = []
         self.last_report: ScheduleReport | None = None
         self.n_sched_steps = 0
+        self.n_repacks = 0
+        self.peak_tenants = 0
 
     def _decode_one(self, params, token, caches, pos, memory=None):
         if isinstance(self.model, EncDecLM):
@@ -64,118 +108,194 @@ class Engine:
                                                     pos)
         return logits, caches
 
-    # -- cache placement / transfer planning -----------------------------------
-    def _step_nbytes(self, batch: int) -> list[int]:
-        """Per-decode-step movement of every cache leaf, in bytes.
+    # -- cache leaf inventory ----------------------------------------------
+    def _leaf_specs(self, batch: int) -> list[LeafSpec]:
+        """Describe every cache leaf for placement.
 
         Probed by abstract evaluation at two cache lengths: a leaf whose
         size scales with ``max_len`` (KV / ring buffers) moves one
-        token-slot per step (the size slope); a length-independent leaf
-        (SSM / RG-LRU state) is refreshed in place every step."""
+        token-slot per step (the size slope) and wraps at ``ring_slots``;
+        a length-independent leaf (SSM / RG-LRU state) is refreshed in
+        place every step and never wraps.  ``lease_bytes`` is the full
+        footprint, scrubbed at teardown."""
         full = jax.eval_shape(
             lambda: self.model.init_caches(batch, self.max_len))
         half_len = max(1, self.max_len // 2)
         half = jax.eval_shape(
             lambda: self.model.init_caches(batch, half_len))
+        flat_full = jax.tree_util.tree_flatten_with_path(full)[0]
+        flat_half = jax.tree_util.tree_leaves(half)
+        ring = self.ring_slots if self.ring_slots is not None else self.max_len
         out = []
-        for lf, lh in zip(jax.tree_util.tree_leaves(full),
-                          jax.tree_util.tree_leaves(half)):
+        for (path, lf), lh in zip(flat_full, flat_half):
             nb_full = lf.size * jnp.dtype(lf.dtype).itemsize
             nb_half = lh.size * jnp.dtype(lh.dtype).itemsize
+            tag = jax.tree_util.keystr(path)
             if nb_full != nb_half and self.max_len != half_len:
-                out.append(max(1, (nb_full - nb_half)
-                               // (self.max_len - half_len)))
+                step = max(1, (nb_full - nb_half)
+                           // (self.max_len - half_len))
+                out.append(LeafSpec(tag=tag, step_bytes=step,
+                                    lease_bytes=nb_full, ring_slots=ring))
             else:
-                out.append(max(1, nb_full))
+                out.append(LeafSpec(tag=tag, step_bytes=max(1, nb_full),
+                                    lease_bytes=nb_full, ring_slots=0))
         return out
 
-    def _plan_placement(self, caches, batch: int) -> None:
-        """Home every cache leaf on a bank of the 3D mesh.
+    # -- tenancy ------------------------------------------------------------
+    def open_tenant(self, name: str, batch: int) -> list:
+        """Lease bank homes for a new serving stream.
 
-        The vault controller stages incoming lines on the logic die (the
-        z=0 bank of the home column); NoM carries them up/across to the
-        leaf's home bank.  Homes spread over the DRAM layers (z >= 1)
-        with a stride coprime to the pool size, so consecutive leaves
-        land on different columns and their circuits can stream
-        concurrently.  On a single-layer mesh, homes spread over the
-        plane and stage at the row's edge bank; a leaf homed on its own
-        staging bank is a controller-local write — no inter-bank hop.
-        """
-        mesh = self.cache_mesh
-        flat, _ = jax.tree_util.tree_flatten_with_path(caches)
-        step_bytes = self._step_nbytes(batch)
-        placement = []
-        plane = mesh.X * mesh.Y
-        pool = mesh.n_nodes - plane
-        for i, (path, _leaf) in enumerate(flat):
-            if pool:
-                home = plane + (i * 37 + 11) % pool
-                x, y, _z = mesh.coords(home)
-                staging = mesh.node_id(x, y, 0)
-            else:       # single-layer mesh: all banks sit on the logic die
-                home = (i * 37 + 11) % mesh.n_nodes
-                _x, y, _z = mesh.coords(home)
-                staging = mesh.node_id(0, y, 0)
-            if staging == home:
-                continue
-            placement.append((jax.tree_util.keystr(path), staging, home,
-                              step_bytes[i]))
-        self._placement = placement
+        One tenant per concurrent ``generate`` stream; ``batch`` sizes the
+        leaf footprints.  Returns the leases (also kept internally until
+        :meth:`close_tenant`).  Raises if the name is already active or
+        the pool is exhausted."""
+        if self.pool is None:
+            raise RuntimeError("track_transfers=False engine has no pool")
+        if name in self._tenants:
+            raise ValueError(f"tenant {name!r} already active")
+        leases = self.pool.lease(name, self._leaf_specs(batch))
+        self._tenants[name] = _Tenant(name=name, leases=leases)
+        self._tenant_stalls[name] = 0
+        self.peak_tenants = max(self.peak_tenants, len(self._tenants))
+        return leases
 
-    def _schedule_step(self) -> None:
-        """Schedule this step's cache transfer set as one concurrent batch."""
-        if not self._placement:
+    def close_tenant(self, name: str) -> ScheduleReport | None:
+        """Tear a stream down: schedule one INIT scrub per vacated home
+        (through the same scheduler batch), release the leases, and
+        return that final batch's report."""
+        if name not in self._tenants:
+            raise ValueError(f"tenant {name!r} is not active "
+                             "(never opened, or already closed)")
+        ten = self._tenants.pop(name)
+        self._tenant_stalls.pop(name, None)
+        reqs = teardown_requests(ten.leases)
+        self.pool.release(name)
+        if not reqs:
+            return None
+        return self._schedule_batch(reqs)
+
+    def schedule_tick(self, tenants: list[str] | None = None
+                      ) -> ScheduleReport | None:
+        """Schedule one step's transfer set for the named tenants (default:
+        all active) as a single concurrent batch, advancing each tenant's
+        write position.  This is the scheduler-side heartbeat: ``generate``
+        calls it once per model step for its own tenant; the tenancy
+        benchmark drives many tenants through it without a model."""
+        names = list(self._tenants) if tenants is None else tenants
+        reqs = []
+        for name in names:
+            if name not in self._tenants:
+                raise ValueError(f"tenant {name!r} is not active "
+                                 "(never opened, or already closed)")
+            ten = self._tenants[name]
+            reqs += step_requests(ten.leases, ten.pos,
+                                  max_extra_slots=self.max_extra_slots)
+            ten.pos += 1
+        if not reqs:
+            return None
+        report = self._schedule_batch(reqs)
+        for name in names:
+            self._maybe_repack(self._tenants[name])
+        return report
+
+    def _maybe_repack(self, ten: _Tenant) -> None:
+        """Stall feedback: re-home a tenant whose *own* circuits queue too
+        long (per-tenant stall attribution, accumulated in
+        ``_schedule_batch``).  The vacated homes are scrubbed by an INIT
+        batch scheduled *immediately* — the pool has already freed those
+        banks, so the scrub must land before anyone can re-lease them."""
+        if self.placement_policy != "stall_feedback":
             return
-        reqs = [TransferRequest(src=s, dst=d, nbytes=n, tag=t,
-                                max_extra_slots=self.max_extra_slots)
-                for t, s, d, n in self._placement]
+        stalls = self._tenant_stalls.get(ten.name, 0) - ten.stall_mark
+        evicted, fresh = self.pool.repack(ten.name, stalls,
+                                          self.repack_stall_threshold)
+        if evicted:
+            ten.leases = fresh
+            ten.stall_mark = self._tenant_stalls.get(ten.name, 0)
+            self.n_repacks += 1
+            self._schedule_batch(teardown_requests(evicted))
+
+    # -- scheduling ----------------------------------------------------------
+    def _schedule_batch(self, reqs) -> ScheduleReport:
+        """Run one transfer batch through the shared allocator and fold
+        its report into the aggregates; per-request queueing delay is
+        attributed to the owning tenant (the first tag element) for the
+        stall-feedback policy."""
+        cycle = self._next_cycle
         results, report = schedule_transfers(reqs, allocator=self._alloc,
-                                             cycle=self._next_cycle)
+                                             cycle=cycle)
+        for rq, res in zip(reqs, results):
+            if res.circuit is None or not isinstance(rq.tag, tuple):
+                continue
+            name = rq.tag[0]
+            if name in self._tenant_stalls:
+                self._tenant_stalls[name] += max(
+                    0, res.circuit.start_cycle - (cycle + 3))
         self.reports.append(report)
         del self.reports[:-self.keep_reports]
         self.n_sched_steps += 1
         self.last_report = (report if self.last_report is None
                             else self.last_report.merge(report))
-        # The next decode step starts after this step's circuits drained
-        # (a model-forward pass dwarfs the cache-flush streaming time).
+        # The next step starts after this batch's circuits drained (a
+        # model-forward pass dwarfs the cache-flush streaming time).
         end = max((r.circuit.end_cycle for r in results
                    if r.circuit is not None), default=self._next_cycle)
         self._next_cycle = ((end // self.n_slots) + 1) * self.n_slots
+        return report
 
+    # -- decoding -------------------------------------------------------------
     def generate(self, params, prompt: jax.Array, n_new: int,
                  memory: jax.Array | None = None,
-                 greedy: bool = True) -> jax.Array:
+                 greedy: bool = True, tenant: str | None = None) -> jax.Array:
         """prompt: (B, P) int32 -> (B, P+n_new).
 
-        Every prefill/decode step also emits its cache-movement transfer
-        set through the NoM scheduler (unless ``track_transfers=False``);
-        telemetry lands on ``self.reports`` / ``self.last_report``.
+        The stream runs as a tenant of the bank pool (name ``tenant``,
+        auto-generated when None): leases open before prefill, every
+        prefill/decode step emits its cache movement through
+        :meth:`schedule_tick`, and completion tears the tenant down with
+        INIT scrubs (unless ``track_transfers=False``).  Telemetry lands
+        on ``self.reports`` / ``self.last_report`` /
+        :meth:`transfer_telemetry`.
         """
         b, plen = prompt.shape
         caches = self.model.init_caches(b, self.max_len)
+        name = None
         if self._alloc is not None:
-            self._plan_placement(caches, b)
-        # Prefill token by token (single compiled program for both phases).
+            name = tenant or f"gen{self._gen_seq}"
+            self._gen_seq += 1
+            self.open_tenant(name, b)
         logits = None
-        for i in range(plen):
-            logits, caches = self._step(params, prompt[:, i:i + 1], caches,
-                                        jnp.int32(i), memory)
-            if self._alloc is not None:
-                self._schedule_step()
-        out = [prompt]
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        out.append(tok)
-        for i in range(plen, plen + n_new - 1):
-            logits, caches = self._step(params, tok, caches, jnp.int32(i),
-                                        memory)
+        try:
+            # Prefill token by token (one compiled program for both phases).
+            for i in range(plen):
+                logits, caches = self._step(params, prompt[:, i:i + 1],
+                                            caches, jnp.int32(i), memory)
+                if name is not None:
+                    self.schedule_tick([name])
+            out = [prompt]
             tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
             out.append(tok)
-            if self._alloc is not None:
-                self._schedule_step()
+            for i in range(plen, plen + n_new - 1):
+                logits, caches = self._step(params, tok, caches,
+                                            jnp.int32(i), memory)
+                tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+                out.append(tok)
+                if name is not None:
+                    self.schedule_tick([name])
+        finally:
+            if name is not None and name in self._tenants:
+                self.close_tenant(name)
         return jnp.concatenate(out, axis=1)
 
     def transfer_telemetry(self) -> dict:
-        """Aggregate cache-transfer scheduling stats over ``generate``."""
+        """Aggregate transfer-scheduling stats over the engine's lifetime.
+
+        Keys: ``steps`` (scheduled batches, incl. teardown), ``requests``
+        / ``scheduled`` / ``batch_avg``, ``init_requests`` (eviction +
+        teardown INITs), concurrency (``max_inflight`` /
+        ``avg_inflight``), ``stall_cycles``, ``search_rounds`` /
+        ``conflicts``, and tenancy (``active_tenants`` /
+        ``peak_tenants`` / ``repacks``)."""
         if not self.n_sched_steps:
             return {}
         agg = self.last_report
@@ -184,9 +304,13 @@ class Engine:
             "requests": agg.n_requests,
             "scheduled": agg.n_scheduled,
             "batch_avg": agg.n_requests / self.n_sched_steps,
+            "init_requests": agg.n_init,
             "max_inflight": agg.max_inflight,
             "avg_inflight": agg.avg_inflight,
             "stall_cycles": agg.stall_cycles,
             "search_rounds": agg.search_rounds,
             "conflicts": agg.conflicts,
+            "active_tenants": len(self._tenants),
+            "peak_tenants": self.peak_tenants,
+            "repacks": self.n_repacks,
         }

@@ -1,0 +1,316 @@
+"""Multi-tenant cache placement and eviction for the serving engine.
+
+The engine's decode caches live on the NoM bank mesh: every cache leaf is
+*homed* on a DRAM bank, and its per-step updates stream from the logic-die
+staging bank of the home column up to the home (see ``docs/serving.md``).
+This module owns the *where*: a :class:`BankPool` leases bank homes to
+tenants — one tenant per concurrent ``generate`` stream — under a
+placement policy, and turns cache-lifecycle events into scheduler traffic:
+
+* **per-step flush** (:func:`step_requests`) — one ``copy`` transfer per
+  leaf, staging → home, exactly the engine's previous static behaviour;
+* **ring-buffer overwrite** — once a ring leaf's write position wraps its
+  capacity, the incoming line lands on an occupied slot; the overwritten
+  slot is scrubbed *in place* first, an INIT-class transfer
+  (:class:`~repro.core.scheduler.TransferRequest` with ``op="init"``,
+  ``src == dst``) that the TDM backend realizes as a zero-hop circuit;
+* **tenant teardown** (:func:`teardown_requests`) — releasing a tenant
+  scrubs every leased home with one INIT covering the leaf's full
+  footprint (the OS-service bulk-initialization class that RowClone
+  accelerates in-DRAM);
+* **stall-driven repacking** (:meth:`BankPool.repack`) — the engine feeds
+  ``ScheduleReport.stall_cycles`` back; a tenant whose circuits queue too
+  long is re-homed onto the least-loaded columns, and the vacated homes
+  are scrubbed with INITs (eviction traffic through the same scheduler).
+
+All of it rides the same batched
+:func:`~repro.core.scheduler.schedule_transfers` calls as the copy
+traffic, so copy and INIT circuits compete for (and are reported over)
+one TDM fabric — the paper's mixed copy/initialization workload.
+
+Placement policies (:data:`PLACEMENT_POLICIES`):
+
+* ``"spread"`` — the classic strided spread: homes stride over the
+  DRAM-layer pool with a step coprime to the pool size, so consecutive
+  leaves land on different columns.  Tenants interleave freely; isolation
+  is probabilistic.
+* ``"partition"`` — per-tenant column partitioning: each tenant owns a
+  disjoint set of (x, y) columns and its homes cycle through them.
+  Cache-flush circuits are purely vertical (staging at z=0 → home in the
+  same column), so *tenants' circuits are link-disjoint by construction*.
+  On a single-layer mesh, where circuits run horizontally from the row's
+  edge staging bank, the partitioned unit is the *row* — the guarantee
+  holds with rows as the isolation groups.
+* ``"stall_feedback"`` — places like ``"spread"`` but repacks: when the
+  engine observes accumulated ``stall_cycles`` above its threshold it
+  calls :meth:`BankPool.repack`, which re-leases the tenant onto the
+  least-loaded columns and returns the vacated leases for scrubbing.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.scheduler import TransferRequest
+from repro.core.topology import Mesh3D
+
+PLACEMENT_POLICIES = ("spread", "partition", "stall_feedback")
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    """Placement-relevant description of one cache leaf.
+
+    Attributes:
+      tag: caller label (the engine uses the pytree key path).
+      step_bytes: bytes the leaf moves per decode step (the size slope for
+        ring leaves; the whole state for in-place leaves).
+      lease_bytes: full footprint scrubbed at teardown (>= step_bytes;
+        0 falls back to step_bytes).
+      ring_slots: ring capacity in token slots — writes at positions >=
+        ring_slots overwrite live slots and emit eviction INITs; 0 marks
+        an in-place state leaf (SSM / RG-LRU) that never wraps.
+    """
+    tag: str
+    step_bytes: int
+    lease_bytes: int = 0
+    ring_slots: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Lease:
+    """One leased bank home: ``tenant`` holds ``home`` for ``leaf``;
+    per-step traffic stages at ``staging`` (the z=0 bank of the home
+    column, i.e. the vault controller's landing bank)."""
+    tenant: str
+    leaf: LeafSpec
+    home: int
+    staging: int
+
+
+class BankPool:
+    """Leases bank homes on a :class:`~repro.core.topology.Mesh3D` to
+    tenants under a placement policy — the multi-tenant replacement for
+    the engine's old static per-leaf spread.
+
+    The leasable pool is the DRAM layers (z >= 1); on a single-layer mesh
+    the whole plane is leasable and staging sits at the row's edge bank.
+    A bank is leased to at most one tenant at a time (never double-leased;
+    asserted on every grant), and :meth:`release` must free it before it
+    can be re-leased.
+    """
+
+    def __init__(self, mesh: Mesh3D, policy: str = "spread"):
+        if policy not in PLACEMENT_POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; "
+                             f"choose from {PLACEMENT_POLICIES}")
+        self.mesh = mesh
+        self.policy = policy
+        plane = mesh.X * mesh.Y
+        pool = list(range(plane, mesh.n_nodes))
+        self._pool = pool or list(range(plane))
+        self._single_layer = not pool
+        self._owner: dict[int, str] = {}        # bank -> tenant
+        self._leased: dict[str, list[Lease]] = {}
+        self._col_owner: dict[int, str] = {}    # group -> tenant (partition)
+        self._lease_seq = 0                     # rotates spread start points
+
+    # -- geometry helpers -------------------------------------------------
+    def _staging_for(self, home: int) -> int:
+        x, y, _z = self.mesh.coords(home)
+        if self._single_layer:
+            return self.mesh.node_id(0, y, 0)
+        return self.mesh.node_id(x, y, 0)
+
+    def _column(self, bank: int) -> int:
+        """Path-confining placement group of a bank: the (x, y) column on
+        a multi-layer mesh (cache-flush circuits are vertical), the *row*
+        on a single-layer mesh (circuits run along the row from the edge
+        staging bank) — the unit the partition policy isolates by and
+        :meth:`column_load` counts over."""
+        if self._single_layer:
+            return self.mesh.coords(bank)[1]
+        return self.mesh.column_of(bank)
+
+    def _n_groups(self) -> int:
+        return self.mesh.Y if self._single_layer else self.mesh.X * self.mesh.Y
+
+    def _free_in_column(self, col: int) -> list[int]:
+        return [b for b in self._pool
+                if self._column(b) == col and b not in self._owner]
+
+    # -- candidate orders per policy ---------------------------------------
+    def _spread_order(self, seq: int, i: int) -> list[int]:
+        n = len(self._pool)
+        start = (seq * 13 + i * 37 + 11) % n
+        return [self._pool[(start + k) % n] for k in range(n)]
+
+    def _partition_candidate(self, tenant: str) -> int | None:
+        """Next home in the tenant's owned groups, acquiring a fresh
+        unowned group when the owned ones are exhausted."""
+        owned = [c for c, t in self._col_owner.items() if t == tenant]
+        # Prefer the owned group with the most free banks (fill evenly).
+        for col in sorted(owned,
+                          key=lambda c: -len(self._free_in_column(c))):
+            free = self._free_in_column(col)
+            if free:
+                return free[0]
+        for col in range(self._n_groups()):
+            if col not in self._col_owner and self._free_in_column(col):
+                self._col_owner[col] = tenant
+                return self._free_in_column(col)[0]
+        return None
+
+    def _least_loaded_order(self, avoid: set[int]) -> list[int]:
+        load = self.column_load()
+        return sorted((b for b in self._pool if b not in self._owner),
+                      key=lambda b: (self._column(b) in avoid,
+                                     load.get(self._column(b), 0),
+                                     b))
+
+    def _pick_home(self, tenant: str, i: int, policy: str, seq: int,
+                   avoid: set[int] | None = None) -> int:
+        if policy == "partition":
+            home = self._partition_candidate(tenant)
+        elif avoid is not None:     # repack: prefer away from hot columns
+            order = self._least_loaded_order(avoid)
+            home = order[0] if order else None
+        else:                       # spread / stall_feedback initial
+            home = next((b for b in self._spread_order(seq, i)
+                         if b not in self._owner), None)
+        if home is None:
+            raise RuntimeError(f"bank pool exhausted leasing for {tenant!r} "
+                               f"({len(self._owner)}/{len(self._pool)} "
+                               f"banks leased)")
+        return home
+
+    # -- public API ---------------------------------------------------------
+    def lease(self, tenant: str, leaves: list[LeafSpec],
+              _avoid: set[int] | None = None) -> list[Lease]:
+        """Lease one home bank per leaf to ``tenant`` under the pool's
+        policy.  Returns the leases in leaf order; raises ``RuntimeError``
+        when the pool is exhausted.  A tenant may lease repeatedly (e.g.
+        after :meth:`release`); banks are never double-leased."""
+        seq = self._lease_seq
+        self._lease_seq = (self._lease_seq + 1) % max(1, len(self._pool))
+        cols_before = {c for c, t in self._col_owner.items() if t == tenant}
+        out = []
+        try:
+            for i, leaf in enumerate(leaves):
+                home = self._pick_home(tenant, i, self.policy, seq,
+                                       avoid=_avoid)
+                assert home not in self._owner, "double lease"
+                self._owner[home] = tenant
+                out.append(Lease(tenant=tenant, leaf=leaf, home=home,
+                                 staging=self._staging_for(home)))
+        except RuntimeError:
+            # All-or-nothing admission: a failed lease must not shrink
+            # the pool — roll back this call's grants (banks and any
+            # partition groups acquired along the way).
+            for ls in out:
+                del self._owner[ls.home]
+            for col in [c for c, t in self._col_owner.items()
+                        if t == tenant and c not in cols_before]:
+                del self._col_owner[col]
+            raise
+        self._leased.setdefault(tenant, []).extend(out)
+        return out
+
+    def release(self, tenant: str) -> list[Lease]:
+        """Free every bank leased to ``tenant`` and return the vacated
+        leases — the caller turns them into teardown INIT scrubs via
+        :func:`teardown_requests`."""
+        out = self._leased.pop(tenant, [])
+        for ls in out:
+            self._owner.pop(ls.home, None)
+        for col in [c for c, t in self._col_owner.items() if t == tenant]:
+            del self._col_owner[col]
+        return out
+
+    def repack(self, tenant: str,
+               stall_cycles: int, threshold: int = 0
+               ) -> tuple[list[Lease], list[Lease]]:
+        """Stall-feedback repacking: when ``stall_cycles`` exceeds
+        ``threshold``, re-home ``tenant``'s leaves onto the least-loaded
+        columns (avoiding its current, contended columns).  Returns
+        ``(evicted, fresh)``: the vacated leases (scrub them with INITs)
+        and the replacement leases.  Below the threshold returns
+        ``([], [])`` and changes nothing.  Under the ``"partition"``
+        policy placement is static by design — a tenant's contention is
+        confined to its own groups, so re-homing cannot relieve it — and
+        repack is a no-op."""
+        if (stall_cycles <= threshold or tenant not in self._leased
+                or self.policy == "partition"):
+            return [], []
+        old = self.release(tenant)
+        hot = {self._column(ls.home) for ls in old}
+        fresh = self.lease(tenant, [ls.leaf for ls in old], _avoid=hot)
+        if {ls.home for ls in fresh} & {ls.home for ls in old}:
+            # Pool pressure: the "least-loaded" order fell back onto the
+            # just-vacated banks — there is nowhere better to go.  Revert
+            # to the old placement and report no repack, so the caller
+            # never scrubs homes that are still (again) live.
+            self.release(tenant)
+            for ls in old:
+                assert ls.home not in self._owner
+                self._owner[ls.home] = tenant
+            self._leased[tenant] = list(old)
+            return [], []
+        return old, fresh
+
+    def leases(self, tenant: str) -> list[Lease]:
+        """Current leases held by ``tenant`` (empty list when none)."""
+        return list(self._leased.get(tenant, []))
+
+    def column_load(self) -> dict[int, int]:
+        """Leased banks per placement group — the (x, y) column on a
+        multi-layer mesh, the row on a single-layer one — the contention
+        map the stall-feedback policy packs against."""
+        load: dict[int, int] = {}
+        for bank in self._owner:
+            col = self._column(bank)
+            load[col] = load.get(col, 0) + 1
+        return load
+
+    def free_banks(self) -> int:
+        """Number of leasable banks not currently under lease."""
+        return len(self._pool) - len(self._owner)
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle events -> TransferRequests (all through schedule_transfers)
+# ---------------------------------------------------------------------------
+def step_requests(leases: list[Lease], pos: int,
+                  max_extra_slots: int = 0) -> list[TransferRequest]:
+    """One decode step's transfer set for ``leases`` at write position
+    ``pos``: a staging → home ``copy`` per leaf, preceded — once a ring
+    leaf has wrapped (``pos >= ring_slots``) — by an in-place INIT that
+    scrubs the slot being overwritten (``pos % ring_slots``), the
+    eviction made visible as an ``op="init"`` zero-hop circuit.  A leaf
+    homed on its own staging bank is a controller-local write: no copy
+    is emitted (its ring evictions still are)."""
+    reqs = []
+    for ls in leases:
+        leaf = ls.leaf
+        if leaf.ring_slots and pos >= leaf.ring_slots:
+            reqs.append(TransferRequest(
+                src=ls.home, dst=ls.home, nbytes=leaf.step_bytes, op="init",
+                tag=(ls.tenant, leaf.tag, "evict", pos % leaf.ring_slots)))
+        if ls.staging != ls.home:
+            reqs.append(TransferRequest(
+                src=ls.staging, dst=ls.home, nbytes=leaf.step_bytes,
+                tag=(ls.tenant, leaf.tag, "copy"),
+                max_extra_slots=max_extra_slots))
+    return reqs
+
+
+def teardown_requests(leases: list[Lease]) -> list[TransferRequest]:
+    """Tenant teardown as INIT-class traffic: one in-place scrub per
+    vacated home covering the leaf's full leased footprint."""
+    return [TransferRequest(
+        src=ls.home, dst=ls.home,
+        nbytes=max(ls.leaf.lease_bytes, ls.leaf.step_bytes, 1), op="init",
+        tag=(ls.tenant, ls.leaf.tag, "teardown")) for ls in leases]
+
+
+__all__ = ["PLACEMENT_POLICIES", "BankPool", "LeafSpec", "Lease",
+           "step_requests", "teardown_requests"]

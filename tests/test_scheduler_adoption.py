@@ -48,15 +48,19 @@ def test_engine_generate_populates_schedule_telemetry(mesh1):
     prompt = jax.random.randint(KEY, (2, 4), 0, cfg.vocab)
     out = eng.generate(params, prompt, n_new=6)
     assert out.shape == (2, 10)
-    # one report per prefill/decode step that moved cache bytes
-    assert len(eng.reports) == 4 + 5
+    # one report per prefill/decode step that moved cache bytes, plus the
+    # tenant-teardown INIT batch
+    assert len(eng.reports) == 4 + 5 + 1
     agg = eng.last_report
     assert agg is not None and agg.backend == "tdm"
     assert agg.n_scheduled == agg.n_requests > 0
+    assert agg.n_init > 0          # teardown scrubs rode the scheduler
     tel = eng.transfer_telemetry()
     assert tel["steps"] == len(eng.reports)
     assert tel["max_inflight"] >= 1
     assert tel["batch_avg"] >= 1.0
+    assert tel["init_requests"] == agg.n_init
+    assert tel["active_tenants"] == 0 and tel["peak_tenants"] == 1
 
 
 def test_engine_opt_out(mesh1):

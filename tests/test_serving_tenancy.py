@@ -1,0 +1,272 @@
+"""Multi-tenant placement + eviction-as-INIT: zero-hop INIT circuits,
+BankPool lease discipline, per-policy isolation properties, the engine's
+tenant lifecycle, memsim INIT accounting, and the MoE single-router
+invariant (traced-routing reuse)."""
+import jax
+import pytest
+
+from repro.core import Mesh3D, TdmAllocator, TransferRequest
+from repro.core.scheduler import schedule_transfers
+from repro.core.topology import PORT_LOCAL
+from repro.memsim import SimParams, WorkloadSpec, generate, simulate
+from repro.serving import (BankPool, LeafSpec, step_requests,
+                           teardown_requests)
+
+from conftest import run_multidevice
+
+KEY = jax.random.PRNGKey(0)
+
+LEAVES = [LeafSpec(tag=f"leaf{i}", step_bytes=128, lease_bytes=2048,
+                   ring_slots=4 if i % 2 == 0 else 0) for i in range(4)]
+
+
+# --- INIT-class requests through the scheduler ---------------------------------
+def test_init_is_zero_hop_and_reported():
+    alloc = TdmAllocator(Mesh3D(4, 4, 2), 16)
+    reqs = [TransferRequest(src=20, dst=20, nbytes=16384, op="init",
+                            tag="scrub"),
+            TransferRequest(src=0, dst=21, nbytes=512, tag="copy")]
+    results, rep = schedule_transfers(reqs, allocator=alloc, cycle=0)
+    assert rep.n_scheduled == 2 and rep.n_init == 1
+    c = results[0].circuit
+    # zero-hop: only the bank's LOCAL port, no mesh links, no streaming
+    assert c.distance == 0
+    assert c.hops == [(20, PORT_LOCAL, c.hops[0][2])]
+    # occupancy is row-granular (in-DRAM zeroing), not byte-streaming
+    assert c.n_windows == -(-16384 // alloc.init_row_bytes)
+    assert results[1].circuit.distance > 0
+
+
+def test_init_requires_src_eq_dst():
+    alloc = TdmAllocator(Mesh3D(4, 4, 2), 16)
+    with pytest.raises(ValueError, match="src == dst"):
+        schedule_transfers([TransferRequest(src=0, dst=1, op="init")],
+                           allocator=alloc)
+
+
+def test_init_merge_accumulates():
+    alloc = TdmAllocator(Mesh3D(4, 4, 2), 16)
+    _r1, a = schedule_transfers([TransferRequest(16, 16, 64, op="init")],
+                                allocator=alloc, cycle=0)
+    _r2, b = schedule_transfers([TransferRequest(17, 17, 64, op="init")],
+                                allocator=alloc, cycle=64)
+    assert a.merge(b).n_init == 2
+
+
+# --- BankPool lease discipline --------------------------------------------------
+def test_bankpool_never_double_leases():
+    pool = BankPool(Mesh3D(4, 4, 2), policy="spread")
+    homes = []
+    for k in range(4):
+        homes += [ls.home for ls in pool.lease(f"t{k}", LEAVES)]
+    assert len(homes) == len(set(homes)) == 16
+    assert pool.free_banks() == 0
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pool.lease("overflow", LEAVES[:1])
+    freed = pool.release("t0")
+    assert len(freed) == 4 and pool.free_banks() == 4
+    again = pool.lease("t4", LEAVES)     # freed banks are re-leasable
+    assert {ls.home for ls in again} == {ls.home for ls in freed}
+
+
+def test_bankpool_lease_rolls_back_on_exhaustion():
+    """A failed admission must not shrink the pool: partially-granted
+    banks (and partition groups) are returned on the way out."""
+    for policy in ("spread", "partition"):
+        pool = BankPool(Mesh3D(4, 4, 2), policy=policy)
+        pool.lease("t0", LEAVES * 3)         # 12 of 16 banks
+        free = pool.free_banks()
+        with pytest.raises(RuntimeError, match="exhausted"):
+            pool.lease("t1", LEAVES * 2)     # needs 8, only 4 left
+        assert pool.free_banks() == free     # nothing leaked
+        assert pool.leases("t1") == []
+        assert len(pool.lease("t1", LEAVES)) == 4   # retry at fitting size
+
+
+def test_schedule_transfers_accepts_generator_input():
+    alloc = TdmAllocator(Mesh3D(4, 4, 2), 16)
+    results, rep = schedule_transfers(
+        (TransferRequest(src=i, dst=16 + i, nbytes=64) for i in range(3)),
+        allocator=alloc, cycle=0)
+    assert rep.n_requests == 3 and rep.n_scheduled == 3
+
+
+def test_bankpool_rejects_unknown_policy():
+    with pytest.raises(ValueError, match="policy"):
+        BankPool(Mesh3D(4, 4, 2), policy="roulette")
+
+
+def test_partition_tenants_are_link_disjoint():
+    """The partition policy's isolation guarantee: within one scheduled
+    window, circuits of different tenants share no (router, port)."""
+    mesh = Mesh3D(8, 8, 4)
+    pool = BankPool(mesh, policy="partition")
+    alloc = TdmAllocator(mesh, 16)
+    reqs = []
+    for k in range(3):
+        reqs += step_requests(pool.lease(f"t{k}", LEAVES), pos=5)
+    results, rep = schedule_transfers(reqs, allocator=alloc, cycle=0)
+    assert rep.n_scheduled == rep.n_requests
+    assert rep.n_init == 3 * 2           # wrapped ring leaves per tenant
+    used: dict[str, set] = {}
+    for rq, res in zip(reqs, results):
+        tenant = rq.tag[0]
+        used.setdefault(tenant, set()).update(
+            (node, port) for node, port, _slot in res.circuit.hops)
+    tenants = sorted(used)
+    for a in tenants:
+        for b in tenants:
+            if a < b:
+                assert not (used[a] & used[b]), (a, b, used[a] & used[b])
+
+
+def test_partition_tenants_are_link_disjoint_single_layer():
+    """On a single-layer mesh circuits run horizontally from the row's
+    edge staging bank, so the partition policy isolates by *row*."""
+    mesh = Mesh3D(4, 4, 1)
+    pool = BankPool(mesh, policy="partition")
+    alloc = TdmAllocator(mesh, 16)
+    reqs = []
+    for k in range(2):
+        reqs += step_requests(pool.lease(f"t{k}", LEAVES), pos=0)
+    results, rep = schedule_transfers(reqs, allocator=alloc, cycle=0)
+    assert rep.n_scheduled == rep.n_requests
+    used: dict[str, set] = {}
+    for rq, res in zip(reqs, results):
+        used.setdefault(rq.tag[0], set()).update(
+            (node, port) for node, port, _slot in res.circuit.hops)
+    assert not (used["t0"] & used["t1"]), used["t0"] & used["t1"]
+
+
+def test_stall_feedback_repack_moves_homes_and_scrubs():
+    pool = BankPool(Mesh3D(4, 4, 2), policy="stall_feedback")
+    old = pool.lease("t", LEAVES)
+    # below threshold: no-op
+    assert pool.repack("t", stall_cycles=3, threshold=10) == ([], [])
+    evicted, fresh = pool.repack("t", stall_cycles=500, threshold=10)
+    assert [ls.leaf for ls in evicted] == [ls.leaf for ls in fresh]
+    assert {ls.home for ls in evicted} == {ls.home for ls in old}
+    assert not ({ls.home for ls in fresh} & {ls.home for ls in evicted})
+    # the vacated homes become INIT scrubs covering the full footprint
+    scrubs = teardown_requests(evicted)
+    assert all(r.op == "init" and r.src == r.dst
+               and r.nbytes == 2048 for r in scrubs)
+
+
+def test_repack_reverts_when_no_better_homes_exist():
+    """Under pool pressure the 'least-loaded' order would hand back the
+    just-vacated banks; repack must revert instead of scrubbing homes
+    that are still live."""
+    pool = BankPool(Mesh3D(4, 4, 2), policy="stall_feedback")
+    pool.lease("hog", LEAVES * 3)        # 12 of 16 banks
+    before = {ls.home for ls in pool.lease("t", LEAVES)}
+    assert pool.repack("t", stall_cycles=1000, threshold=0) == ([], [])
+    assert {ls.home for ls in pool.leases("t")} == before
+    assert pool.free_banks() == 0
+
+
+def test_repack_is_noop_under_partition():
+    pool = BankPool(Mesh3D(4, 4, 2), policy="partition")
+    pool.lease("t", LEAVES)
+    assert pool.repack("t", stall_cycles=10**6, threshold=0) == ([], [])
+
+
+# --- engine tenant lifecycle ----------------------------------------------------
+def test_engine_ring_wrap_and_teardown_emit_init(mesh1):
+    from repro.configs import get_config
+    from repro.models import make_model
+    from repro.serving import Engine
+
+    cfg = get_config("qwen1.5-4b", smoke=True)
+    model = make_model(cfg)
+    params = model.init(KEY)
+    eng = Engine(model, cfg, max_len=64, ring_slots=3)
+    prompt = jax.random.randint(KEY, (1, 4), 0, cfg.vocab)
+    out = eng.generate(params, prompt, n_new=5)
+    assert out.shape == (1, 9)
+    tel = eng.transfer_telemetry()
+    # KV leaves wrap from step 3 on (positions 3..7) and every lease is
+    # scrubbed at teardown -> INITs well beyond the leaf count
+    per_step = [r.n_init for r in eng.reports]
+    assert sum(per_step[:3]) == 0                # before the wrap
+    assert any(n > 0 for n in per_step[3:-1])    # wrapped steps evict
+    assert per_step[-1] > 0                      # teardown scrub batch
+    assert tel["init_requests"] == sum(per_step)
+    assert tel["scheduled"] == tel["requests"]
+    assert tel["active_tenants"] == 0            # lease released
+
+
+def test_engine_two_streams_share_pool_without_double_lease(mesh1):
+    from repro.configs import get_config
+    from repro.models import make_model
+    from repro.serving import Engine
+
+    cfg = get_config("qwen1.5-4b", smoke=True)
+    model = make_model(cfg)
+    params = model.init(KEY)
+    eng = Engine(model, cfg, max_len=64)
+    a = eng.open_tenant("a", batch=1)
+    b = eng.open_tenant("b", batch=1)
+    assert not ({ls.home for ls in a} & {ls.home for ls in b})
+    rep = eng.schedule_tick()            # both tenants in one batch
+    assert rep.n_requests == len(a) + len(b)
+    with pytest.raises(ValueError, match="already active"):
+        eng.open_tenant("a", batch=1)
+    eng.close_tenant("a")
+    eng.close_tenant("b")
+    with pytest.raises(ValueError, match="not active"):
+        eng.close_tenant("a")                # double close is an error
+    assert eng.transfer_telemetry()["peak_tenants"] == 2
+    assert eng.pool.free_banks() == len(eng.pool._pool)
+
+
+# --- memsim INIT accounting -----------------------------------------------------
+def test_memsim_accounts_init_in_ccu_queue():
+    reqs = generate(WorkloadSpec("fork", n_requests=600, seed=1))
+    r = simulate(reqs, SimParams(config="nom"))
+    assert r.extra["nom_ccu_init_reqs"] > 0
+    assert r.extra["nom_ccu_init_peak"] >= 1
+    assert r.extra["nom_ccu_init_windows"] >= r.extra["nom_ccu_init_reqs"]
+    # INITs share the bounded queue: total peak covers them too
+    assert r.extra["nom_ccu_peak_queue"] >= r.extra["nom_ccu_init_peak"]
+
+
+def test_memsim_init_still_ordered_across_configs():
+    """Routing INIT through the CCU must not break the paper's config
+    ordering on an init-heavy mix."""
+    reqs = generate(WorkloadSpec("fork", n_requests=600, seed=2))
+    ipc = {cfg: simulate(reqs, SimParams(config=cfg)).ipc
+           for cfg in ("conventional", "rowclone", "nom")}
+    assert ipc["nom"] > ipc["rowclone"] > ipc["conventional"]
+
+
+# --- MoE: traced-routing reuse (single router invocation) -----------------------
+@pytest.mark.slow
+def test_moe_eager_apply_runs_router_once_on_8_devices():
+    out = run_multidevice("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.models.moe import MoE, MoEConfig
+from repro.launch.mesh import make_mesh, set_ambient_mesh
+mesh = make_mesh((1, 8), ("data", "model"))
+set_ambient_mesh(mesh)
+calls = []
+orig = MoE._route
+MoE._route = lambda self, rw, x: (calls.append(1), orig(self, rw, x))[1]
+cfg = MoEConfig(d_model=32, d_ff=64, n_experts=8, top_k=2,
+                dispatch="nom", capacity_factor=4.0)
+moe = MoE(cfg)
+p = moe.init(jax.random.PRNGKey(0))
+x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+y, aux = moe.apply(p, x)
+assert len(calls) == 1, calls      # routed once, inside the traced body
+traced = moe.last_dispatch_report
+assert traced is not None and traced.n_requests > 0
+# the traced-blocks plan matches the host-side re-route exactly
+MoE._route = orig
+plan_host, host = moe.plan_dispatch(p, x)
+assert host.n_requests == traced.n_requests
+assert host.n_scheduled == traced.n_scheduled
+assert host.n_windows == traced.n_windows
+print("ROUTER_ONCE_OK")
+""")
+    assert "ROUTER_ONCE_OK" in out
