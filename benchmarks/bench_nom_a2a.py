@@ -8,10 +8,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.fabric import NomFabric
 from repro.core.nom_collectives import a2a_link_chunks, plan_transfers, \
     Transfer
-from repro.core.scheduler import schedule_transfers
-from repro.core.slot_alloc import TdmAllocator
 from repro.core.topology import Mesh3D
 
 from benchmarks.bench_slot_alloc import _stream
@@ -33,27 +32,26 @@ def run():
                      f"link_chunks nom={c['nom_right']:.0f}/dir "
                      f"bus={c['bus_serialized']:.0f} "
                      f"util={plan.link_utilization():.2f}"))
-    # arrival-order (CCU FIFO) policy through the unified scheduler entry
+    # arrival-order (CCU FIFO) policy through a device-level fabric session
     n = 16
     transfers = [Transfer((i,), (j,)) for i in range(n)
                  for j in range(n) if i != j]
     t0 = time.perf_counter()
-    plan, rep = schedule_transfers(transfers, shape=(n,), torus=True,
-                                   policy="arrival")
+    plan, rep = NomFabric(shape=(n,), torus=True,
+                          policy="arrival").schedule(transfers)
     us = (time.perf_counter() - t0) * 1e6
     rows.append((f"nom_a2a/ring_arrival_n={n}", us,
                  f"rounds={plan.n_rounds} "
                  f"inflight_avg={rep.avg_inflight:.1f} "
                  f"max={rep.max_inflight}"))
     # bank-level batched scenario: a random bulk transfer set on the
-    # paper's 8x8x4 mesh through the same entry point (TDM circuits)
+    # paper's 8x8x4 mesh through a bank-level fabric (TDM circuits)
     mesh = Mesh3D(8, 8, 4)
     reqs = _stream(np.random.default_rng(0), mesh, 64, nbytes=1024)
-    alloc = TdmAllocator(mesh, 16)
-    alloc.allocate_batch(reqs[:2], cycle=0)     # warm jit
-    alloc = TdmAllocator(mesh, 16)
+    NomFabric(mesh=mesh, n_slots=16).schedule(reqs[:2], cycle=0)  # warm jit
+    fab = NomFabric(mesh=mesh, n_slots=16)
     t0 = time.perf_counter()
-    _results, rep = schedule_transfers(reqs, allocator=alloc, cycle=0)
+    _results, rep = fab.schedule(reqs, cycle=0)
     us = (time.perf_counter() - t0) * 1e6
     rows.append((f"nom_a2a/tdm_batch_b={len(reqs)}", us,
                  f"committed={rep.n_scheduled}/{rep.n_requests} "

@@ -1,16 +1,18 @@
-"""Packing-quality comparison of the two `plan_transfers` policies —
-"longest_first" (sort by descending path length, best packing) vs
+"""Packing-quality comparison of the two registered fabric policies —
+"longest_first" (sort by descending route distance, best packing) vs
 "arrival" (the CCU's FIFO commit rule) — across the three traffic shapes
-that now ride `schedule_transfers`: checkpoint reshard, MoE expert
-dispatch, and serving cache movement.  Plus the CCU request-queue
-saturation sweep: IPC / backpressure stalls as `nom_ccu_queue_depth`
-shrinks (the bounded router buffering made observable)."""
+that ride `NomFabric` sessions: checkpoint reshard, MoE expert dispatch,
+and serving cache movement.  Plus the CCU request-queue saturation sweep:
+IPC / backpressure stalls as `nom_ccu_queue_depth` shrinks (the bounded
+router buffering made observable).  The `policy="auto"` comparison
+against these statics lives in `bench_fabric_autotune.py`."""
 import time
 
 import numpy as np
 
 from repro.checkpoint.reshard import reshard_plan_with_report
-from repro.core.scheduler import TransferRequest, schedule_transfers
+from repro.core.fabric import NomFabric
+from repro.core.scheduler import TransferRequest
 from repro.memsim import SimParams, WorkloadSpec, generate, simulate
 
 POLICIES = ("longest_first", "arrival")
@@ -41,8 +43,8 @@ def _moe_topology():
             reqs.append(TransferRequest((q,), (r,), nbytes,
                                         tag=("combine", q, r)))
     return [(f"moe_ep{ep}_a2a",
-             lambda policy: schedule_transfers(reqs, shape=(ep,), torus=True,
-                                               policy=policy))]
+             lambda policy: NomFabric(shape=(ep,), torus=True)
+             .schedule(reqs, policy=policy))]
 
 
 def _serving_topology():
@@ -52,8 +54,8 @@ def _serving_topology():
                             nbytes=(i % 3 + 1) * 2048, tag=f"leaf{i}")
             for i in range(24)]
     return [("serving_cache_8x4",
-             lambda policy: schedule_transfers(reqs, shape=(8, 4), torus=False,
-                                               policy=policy))]
+             lambda policy: NomFabric(shape=(8, 4), torus=False)
+             .schedule(reqs, policy=policy))]
 
 
 def run():

@@ -4,11 +4,11 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_ablations, bench_energy, bench_freq_scaling,
-                        bench_ipc, bench_nom_a2a, bench_roofline,
-                        bench_sched_policies, bench_serving_tenancy,
-                        bench_slot_alloc, bench_traffic_mix,
-                        bench_tsv_conflict)
+from benchmarks import (bench_ablations, bench_energy, bench_fabric_autotune,
+                        bench_freq_scaling, bench_ipc, bench_nom_a2a,
+                        bench_roofline, bench_sched_policies,
+                        bench_serving_tenancy, bench_slot_alloc,
+                        bench_traffic_mix, bench_tsv_conflict)
 
 ALL = [
     ("traffic_mix(Fig3)", bench_traffic_mix),
@@ -19,6 +19,7 @@ ALL = [
     ("slot_alloc", bench_slot_alloc),
     ("nom_a2a", bench_nom_a2a),
     ("sched_policies", bench_sched_policies),
+    ("fabric_autotune", bench_fabric_autotune),
     ("serving_tenancy", bench_serving_tenancy),
     ("ablations", bench_ablations),
     ("roofline", bench_roofline),
@@ -27,7 +28,7 @@ ALL = [
 # --quick: the CI smoke subset — the scheduler-centric benches that gate
 # the concurrent-transfer perf trajectory, fast enough for every PR.
 QUICK = ("tsv_conflict", "slot_alloc", "nom_a2a", "sched_policies",
-         "serving_tenancy")
+         "fabric_autotune", "serving_tenancy")
 
 
 def main() -> None:

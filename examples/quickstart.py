@@ -1,6 +1,7 @@
 """Quickstart: the paper's NoM in 60 seconds.
 
-1. Allocate TDM circuits on the 8x8x4 mesh and print the slot schedule.
+1. Open a `NomFabric` session on the 8x8x4 mesh, schedule a TDM circuit,
+   and print its slot schedule.
 2. Run the four memory configurations on a copy-heavy workload and
    reproduce the paper's IPC ordering.
 3. Plan a NOM-scheduled bulk transfer set (the TPU adaptation).
@@ -9,19 +10,19 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import (Mesh3D, TdmAllocator, Transfer, TransferRequest,
-                        plan_transfers, schedule_transfers)
+from repro.core import (Mesh3D, NomFabric, Transfer, TransferRequest,
+                        plan_transfers)
 from repro.memsim import SimParams, WorkloadSpec, generate, simulate
 
 
 def main():
     # --- 1. circuits ---------------------------------------------------------
     mesh = Mesh3D(8, 8, 4)
-    alloc = TdmAllocator(mesh, n_slots=16)
+    fabric = NomFabric(mesh=mesh, n_slots=16)
     src, dst = mesh.node_id(0, 0, 0), mesh.node_id(5, 3, 2)
-    results, report = schedule_transfers(
+    results, report = fabric.schedule(
         [TransferRequest(src, dst, nbytes=4096, max_extra_slots=3)],
-        allocator=alloc, cycle=0)
+        cycle=0)
     c = results[0].circuit
     print(f"circuit {mesh.coords(src)} -> {mesh.coords(dst)}: "
           f"start cycle {c.start_cycle}, {c.slots_per_window} slots/window, "

@@ -21,6 +21,10 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--policy", default="spread",
                     choices=("spread", "partition", "stall_feedback"))
+    ap.add_argument("--sched-policy", default="arrival",
+                    help="fabric packing policy for the per-step batches "
+                         "(a registered name, or 'auto' to pick from "
+                         "stall history)")
     ap.add_argument("--ring-slots", type=int, default=8,
                     help="ring capacity per KV leaf (token slots); decode "
                          "past it emits overwrite-eviction INITs")
@@ -32,7 +36,7 @@ def main():
     model = make_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     eng = Engine(model, cfg, max_len=64, placement_policy=args.policy,
-                 ring_slots=args.ring_slots)
+                 sched_policy=args.sched_policy, ring_slots=args.ring_slots)
     prompt = jax.random.randint(jax.random.PRNGKey(1),
                                 (args.batch, 6), 0, cfg.vocab)
     if cfg.arch_type == "encdec":
@@ -59,6 +63,11 @@ def main():
           f"conflicts={tel['conflicts']}")
     print(f"  tenancy: policy={args.policy} "
           f"peak_tenants={tel['peak_tenants']} repacks={tel['repacks']}")
+    print(f"  admission: mode={tel['admission']} "
+          f"queued={tel['queued_tenants']} shed={tel['shed_tenants']} "
+          f"idle_evictions={tel['idle_evictions']}")
+    print(f"  fabric: sched_policy={tel['sched_policy']} "
+          f"(engine fabric session: {eng.fabric.n_flushes} flushes)")
     print(f"  eviction/INIT: {tel['init_requests']}/{tel['requests']} "
           f"requests (ring wraps past {args.ring_slots} slots + teardown)")
 

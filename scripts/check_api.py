@@ -1,0 +1,67 @@
+#!/usr/bin/env python
+"""API gate for CI: all NoM traffic goes through `NomFabric` sessions.
+
+`schedule_transfers` is a deprecated shim and `TdmAllocator.allocate` is
+the serial baseline the batched scheduler is compared against — neither
+may gain new call sites outside `src/repro/core/` (production code,
+benchmarks, examples).  The deliberate exceptions are allowlisted with
+the reason they exist; everything else fails the build.
+
+Usage: python scripts/check_api.py [root]   (exit 1 on violations)
+"""
+import pathlib
+import re
+import sys
+
+SCAN_DIRS = ("src/repro", "benchmarks", "examples")
+EXCLUDE_PREFIXES = ("src/repro/core/",)
+# path -> why the legacy spelling is allowed to stay
+ALLOWLIST = {
+    "benchmarks/bench_slot_alloc.py":
+        "the serial-vs-batched baseline: TdmAllocator.allocate *is* the "
+        "one-request-at-a-time CCU being benchmarked against",
+}
+PATTERNS = (
+    # The deprecated one-shot shim.
+    ("schedule_transfers", re.compile(r"\bschedule_transfers\s*\(")),
+    # The serial allocator spelling (allocate_batch via a fabric is fine;
+    # `.allocate(` does not match `.allocate_batch(`).
+    ("TdmAllocator.allocate", re.compile(r"\.allocate\s*\(")),
+)
+
+
+def violations(root: pathlib.Path) -> list[str]:
+    out = []
+    for rel_dir in SCAN_DIRS:
+        base = root / rel_dir
+        if not base.is_dir():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            rel = path.relative_to(root).as_posix()
+            if rel.startswith(EXCLUDE_PREFIXES) or rel in ALLOWLIST:
+                continue
+            for lineno, line in enumerate(path.read_text().splitlines(), 1):
+                code = line.split("#", 1)[0]
+                for name, pat in PATTERNS:
+                    if pat.search(code):
+                        out.append(f"{rel}:{lineno}: direct {name} call "
+                                   f"(route through NomFabric)")
+    return out
+
+
+def main() -> None:
+    root = pathlib.Path(sys.argv[1]) if len(sys.argv) > 1 else \
+        pathlib.Path(__file__).resolve().parent.parent
+    bad = violations(root)
+    if bad:
+        print("check_api: FAIL — legacy scheduler call sites outside core/:")
+        for v in bad:
+            print(f"  {v}")
+        print("(hold a repro.core.fabric.NomFabric session instead; "
+              "deliberate baselines go in the ALLOWLIST with a reason)")
+        sys.exit(1)
+    print(f"check_api: OK ({len(ALLOWLIST)} allowlisted baseline file(s))")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,19 +1,21 @@
 #!/usr/bin/env python
 """Docs gate for CI: the documentation suite must exist, README /
-architecture python blocks must compile, docs/serving.md blocks must
-actually *run* (imports included), every path a doc references must exist
-in the tree, and every public method of the serving API (`Engine`,
-`BankPool`) must be mentioned in a doc page (stale docs fail the build)."""
+architecture python blocks must compile, docs/serving.md and
+docs/fabric.md blocks must actually *run* (imports included), every path
+a doc references must exist in the tree, and every public method of the
+serving + fabric API (`Engine`, `BankPool`, `NomFabric`) must be
+mentioned in a doc page (stale docs fail the build)."""
 import pathlib
 import re
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 REQUIRED = ("README.md", "docs/architecture.md", "docs/serving.md",
-            "PAPER.md", "ROADMAP.md", "CHANGES.md")
-DOC_PAGES = ("README.md", "docs/architecture.md", "docs/serving.md")
+            "docs/fabric.md", "PAPER.md", "ROADMAP.md", "CHANGES.md")
+DOC_PAGES = ("README.md", "docs/architecture.md", "docs/serving.md",
+             "docs/fabric.md")
 # Pages whose python blocks must execute end to end, not just compile.
-EXEC_PAGES = ("docs/serving.md",)
+EXEC_PAGES = ("docs/serving.md", "docs/fabric.md")
 
 
 def fail(msg: str) -> None:
@@ -38,10 +40,12 @@ def public_methods(cls) -> list[str]:
 
 
 def check_serving_api_documented() -> None:
-    """Every public Engine/BankPool method must appear in some doc page."""
+    """Every public Engine/BankPool/NomFabric method must appear in some
+    doc page (the fabric is the API every subsystem now holds)."""
+    from repro.core.fabric import NomFabric
     from repro.serving import BankPool, Engine
     corpus = "\n".join((ROOT / rel).read_text() for rel in DOC_PAGES)
-    for cls in (Engine, BankPool):
+    for cls in (Engine, BankPool, NomFabric):
         for m in public_methods(cls):
             # Word-boundary match: "release" must not satisfy "lease".
             if not re.search(rf"\b{re.escape(m)}\b", corpus):

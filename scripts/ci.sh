@@ -9,6 +9,9 @@ export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 echo "== docs: suite present + README blocks compile =="
 python scripts/check_docs.py
 
+echo "== api: no legacy scheduler call sites outside core/ =="
+python scripts/check_api.py
+
 echo "== tier-1: pytest =="
 python -m pytest -q "$@"
 

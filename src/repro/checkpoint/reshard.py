@@ -13,8 +13,9 @@ import dataclasses
 
 import numpy as np
 
+from repro.core.fabric import NomFabric
 from repro.core.nom_collectives import Transfer, TransferPlan
-from repro.core.scheduler import ScheduleReport, schedule_transfers
+from repro.core.scheduler import ScheduleReport
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,8 +51,9 @@ def reshard_plan_with_report(
         params_meta: dict[str, int], old_mesh: tuple, new_mesh: tuple,
         torus: bool = True,
         policy: str = "longest_first") -> tuple[TransferPlan, ScheduleReport]:
-    """Like :func:`reshard_plan` but routed through the unified NOM batch
-    scheduler, returning the concurrency report alongside the plan."""
+    """Like :func:`reshard_plan` but routed through a one-shot
+    :class:`~repro.core.fabric.NomFabric` session (device level),
+    returning the concurrency report alongside the plan."""
     old_n = int(np.prod(old_mesh))
     new_n = int(np.prod(new_mesh))
     shape = new_mesh if new_n >= old_n else old_mesh
@@ -64,5 +66,5 @@ def reshard_plan_with_report(
         if src != dst:
             transfers.append(Transfer(src=src, dst=dst, nbytes=nbytes,
                                       tag=name))
-    return schedule_transfers(transfers, shape=shape, torus=torus,
-                              policy=policy)
+    fabric = NomFabric(shape=shape, torus=torus, policy=policy)
+    return fabric.schedule(transfers)

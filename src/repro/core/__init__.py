@@ -2,6 +2,9 @@
 # transfer (slot allocation + CCU) and its TPU adaptation (scheduled
 # ppermute collectives + bulk-transfer planner).
 from .bitvec import bit_is_free, free_slots, full_mask, rotr, rotr_np
+from .fabric import (AdmissionQueue, FabricOverflow, NomFabric,
+                     PolicyContext, get_policy, register_policy,
+                     registered_policies, unregister_policy)
 from .nom_collectives import (Transfer, TransferPlan, a2a_link_chunks,
                               nom_all_gather, nom_all_to_all,
                               nom_reduce_scatter, plan_transfers,
@@ -13,6 +16,9 @@ from .slot_alloc import (AllocResult, BatchReport, Circuit, CopyRequest,
 from .topology import PAPER_MESH, Mesh3D, N_PORTS, PORT_LOCAL, port_for
 
 __all__ = [
+    "AdmissionQueue", "FabricOverflow", "NomFabric", "PolicyContext",
+    "get_policy", "register_policy", "registered_policies",
+    "unregister_policy",
     "bit_is_free", "free_slots", "full_mask", "rotr", "rotr_np",
     "Transfer", "TransferPlan", "a2a_link_chunks", "nom_all_gather",
     "nom_all_to_all", "nom_reduce_scatter", "plan_transfers", "ring_offsets",

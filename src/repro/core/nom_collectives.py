@@ -202,8 +202,8 @@ class TransferPlan:
 
 
 def plan_transfers(shape: tuple[int, ...], transfers: list[Transfer],
-                   torus: bool = True,
-                   policy: str = "longest_first") -> TransferPlan:
+                   torus: bool = True, policy: str = "longest_first",
+                   order: list[int] | None = None) -> TransferPlan:
     """Greedy TDM scheduling: earliest conflict-free start slot per
     transfer (the unrolled-time version of the CCU's slot allocation — a
     transfer that loses a slot to an earlier reservation retries at the
@@ -211,9 +211,14 @@ def plan_transfers(shape: tuple[int, ...], transfers: list[Transfer],
 
     ``policy``: "longest_first" sorts by descending path length (best
     packing); "arrival" keeps request order (the CCU's FIFO commit rule,
-    matching ``TdmAllocator.allocate_batch``)."""
+    matching ``TdmAllocator.allocate_batch``).  An explicit ``order``
+    (a permutation of the transfer indices — how
+    `repro.core.fabric.NomFabric` applies its registered policies)
+    overrides ``policy``."""
     paths = [_dor_path(t.src, t.dst, shape, torus) for t in transfers]
-    if policy == "longest_first":
+    if order is not None:
+        order = list(order)
+    elif policy == "longest_first":
         order = sorted(range(len(transfers)), key=lambda i: -len(paths[i]))
     elif policy == "arrival":
         order = list(range(len(transfers)))

@@ -1,32 +1,25 @@
-"""Single entry point for concurrent bulk-transfer setup.
+"""Transfer-request vocabulary + the deprecated one-shot entry point.
 
-Every subsystem that needs link-disjoint circuits — the memory simulator's
-CCU, checkpoint resharding, elastic shard migration, the serving engine's
-decode-cache movement, the MoE expert-dispatch planner, the benchmark
-harness — routes through :func:`schedule_transfers`, which dispatches to
-one of two backends sharing the same batched-commit discipline (search all
-requests at once, reserve in arrival order, retry losers at later slots):
+This module holds the *data layer* of the scheduler: the backend-agnostic
+:class:`TransferRequest`, the :class:`ScheduleReport` telemetry record,
+and the normalization helpers shared by both backends.  The *authority*
+that schedules them is :class:`repro.core.fabric.NomFabric` — a stateful
+session owning the topology, the allocator, the packing-policy registry,
+and a bounded admission queue; every production subsystem holds one.
 
-* **bank level** — a :class:`repro.core.slot_alloc.TdmAllocator` (or
-  Light variant): TDM circuits on the 3D bank mesh, one vectorized
-  wavefront pass per commit round.
-* **device level** — :func:`repro.core.nom_collectives.plan_transfers`:
-  DOR routes over a device mesh/torus packed into link-disjoint rounds.
-
-Callers describe their traffic with :class:`TransferRequest` — a
-backend-agnostic (src, dst, nbytes) record — and get back a
-:class:`ScheduleReport` with the concurrency profile (how many circuits
-are in flight per TDM window/round, how long requests stalled for slots)
-so every subsystem can assert the paper's headline property —
-*concurrent* transfer — uniformly.
+:func:`schedule_transfers`, the original kwargs-heavy free function,
+survives only as a thin deprecated shim over a one-shot fabric (each call
+emits ``DeprecationWarning``; ``scripts/check_api.py`` fails the build on
+new call sites outside ``core/``).
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 
-from .nom_collectives import Transfer, TransferPlan, plan_transfers
+from .nom_collectives import Transfer, TransferPlan, plan_transfers  # noqa: F401  (re-export)
 from .slot_alloc import AllocResult, CopyRequest, TdmAllocator
 
 
@@ -202,54 +195,30 @@ def schedule_transfers(transfers, *, allocator: TdmAllocator | None = None,
                        shape: tuple[int, ...] | None = None,
                        torus: bool = True, cycle: int = 0,
                        policy: str = "arrival"):
-    """Schedule a batch of bulk transfers concurrently.
+    """Deprecated: schedule a batch of bulk transfers through a one-shot
+    :class:`~repro.core.fabric.NomFabric`.
 
-    This is the single entry point for circuit setup (the CCU of paper
-    Section 2.2, generalized): *all* requests of a batch are searched in
-    one vectorized pass and committed in arrival order, so every granted
-    circuit is link/slot-disjoint from every other one it overlaps — the
-    transfers genuinely stream concurrently.
-
-    Exactly one of ``allocator=`` / ``shape=`` selects the backend:
-
-    * **Bank level** (``allocator`` given): ``transfers`` is a list of
-      :class:`TransferRequest` / :class:`CopyRequest` (or plain
-      ``(src, dst, nbytes)`` tuples) with int bank ids; ``cycle`` anchors
-      the batch in allocator time.  Returns
-      ``(list[AllocResult], ScheduleReport)`` in request order.
-    * **Device level** (``shape`` given): ``transfers`` is a list of
-      :class:`TransferRequest` / :class:`Transfer` with coordinate
-      endpoints on a device mesh of that shape; ``torus`` enables
-      wraparound links and ``policy`` picks the packing order —
-      ``"arrival"`` (FIFO, the CCU's rule) or ``"longest_first"``
-      (best packing; see ``benchmarks/bench_sched_policies.py``).
-      Returns ``(TransferPlan, ScheduleReport)``.
+    Construct a session fabric instead — ``NomFabric(mesh=...)`` /
+    ``NomFabric(allocator=...)`` (bank level) or ``NomFabric(shape=...)``
+    (device level) — and call its ``schedule``: same return shapes
+    (``(list[AllocResult], ScheduleReport)`` / ``(TransferPlan,
+    ScheduleReport)``), plus session telemetry, the policy registry, and
+    admission control.  This shim exists for out-of-tree callers and
+    emits ``DeprecationWarning``; production call sites are gated by
+    ``scripts/check_api.py``.
     """
+    warnings.warn(
+        "schedule_transfers is deprecated; hold a repro.core.fabric."
+        "NomFabric session and call fabric.schedule(...) instead",
+        DeprecationWarning, stacklevel=2)
+    from .fabric import NomFabric
     if (allocator is None) == (shape is None):
         raise ValueError("pass exactly one of allocator= or shape=")
-    transfers = list(transfers)     # validated + iterated more than once
-    for t in transfers:
-        if getattr(t, "op", "copy") == "init" and t.src != t.dst:
-            raise ValueError(f"init requires src == dst, got {t!r}")
     if allocator is not None:
-        reqs = _as_copy_requests(transfers)
-        results = allocator.allocate_batch(reqs, cycle)
-        return results, _tdm_report(allocator, reqs, results, cycle)
-    n_init = sum(1 for t in transfers if getattr(t, "op", "copy") == "init")
-    norm = _as_transfers(transfers)
-    plan = plan_transfers(shape, norm, torus=torus, policy=policy)
-    conc = plan.concurrency()
-    stall = sum(s for s, p in zip(plan.starts, plan.paths) if p)
-    # A src == dst transfer (e.g. an INIT scrub) is local: no route to
-    # grant, trivially "scheduled" rather than denied.
-    report = ScheduleReport(
-        backend="rounds", n_requests=len(plan.transfers),
-        n_scheduled=sum(1 for t, p in zip(norm, plan.paths)
-                        if p or t.src == t.dst),
-        n_windows=plan.n_rounds, max_inflight=int(conc["max_inflight"]),
-        avg_inflight=conc["avg_inflight"], stall_cycles=stall,
-        n_init=n_init)
-    return plan, report
+        fab = NomFabric(allocator=allocator)
+        return fab.schedule(transfers, cycle=cycle)
+    fab = NomFabric(shape=shape, torus=torus)
+    return fab.schedule(transfers, policy=policy)
 
 
 __all__ = ["CopyRequest", "ScheduleReport", "Transfer", "TransferPlan",

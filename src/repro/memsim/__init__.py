@@ -1,10 +1,11 @@
 """Faithful-reproduction substrate: HMC-like DRAM + workloads + simulator."""
 from .dram import Timing
-from .energy import EnergyParams, energy_pj
+from .energy import EnergyParams, energy_pj, init_energy_per_row
 from .simulator import CONFIGS, SimParams, SimResult, simulate
 from .workloads import (WORKLOADS, Op, Request, TrafficMix, WorkloadSpec,
                         generate, traffic_breakdown)
 
-__all__ = ["Timing", "EnergyParams", "energy_pj", "CONFIGS", "SimParams",
+__all__ = ["Timing", "EnergyParams", "energy_pj", "init_energy_per_row",
+           "CONFIGS", "SimParams",
            "SimResult", "simulate", "WORKLOADS", "Op", "Request",
            "TrafficMix", "WorkloadSpec", "generate", "traffic_breakdown"]

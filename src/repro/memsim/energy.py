@@ -25,19 +25,38 @@ class EnergyParams:
     e_bus_bit: float = 0.60         # long global shared-bus wire per bit
     e_router_static_per_cycle: float = 0.002  # per router (NoM overhead)
     n_routers: int = 256
+    # In-DRAM bulk initialization (RowClone-FPM zero): one activate of the
+    # all-zeros source row pattern + precharge per cleared row — no column
+    # I/O leaves the mats, so per-row cost sits at the ACT/PRE energy (the
+    # RowClone paper's FPM accounting; LISA adds hops only for *copies*).
+    e_init_row: float = 909.0
+
+
+def init_energy_per_row(params: EnergyParams = EnergyParams()) -> float:
+    """Energy to clear one DRAM row in place (pJ) — the INIT-class unit
+    cost charged per ``extra["init_rows"]`` by :func:`energy_pj`."""
+    return params.e_init_row
 
 
 def energy_pj(res: SimResult, params: EnergyParams = EnergyParams()) -> dict:
-    """Decompose total energy for a finished simulation."""
+    """Decompose total energy for a finished simulation.  INIT-class
+    in-DRAM zeroing is charged per cleared row (``dram_init``,
+    ``extra["init_rows"]`` × ``e_init_row``) on the configs that zero in
+    place — and those bytes (``extra["init_bytes"]``) are *excluded*
+    from the per-line column-I/O term, since no data leaves the mats.
+    The conventional config pays for initialization through its store
+    traffic instead (no ``init_bytes`` reported)."""
     p = params
-    accesses = res.copy_bytes // LINE + max(res.reqs, 1)
+    init_lines = res.extra.get("init_bytes", 0) // LINE
+    accesses = max(0, res.copy_bytes // LINE - init_lines) + max(res.reqs, 1)
     dram = accesses * (p.e_act_pre * 0.3 + p.e_rd_wr)
+    init = res.extra.get("init_rows", 0) * p.e_init_row
     offchip = res.offchip_bytes * 8 * p.e_offchip_bit
     nom = res.nom_hop_beats * 64 * p.e_hop_bit
     bus = res.bus_busy_cycles * 64 * p.e_bus_bit
     static = (res.cycles * p.e_router_static_per_cycle * p.n_routers
               if res.config.startswith("nom") else 0.0)
-    total = dram + offchip + nom + bus + static
-    return {"dram": dram, "offchip": offchip, "nom_links": nom,
-            "shared_bus": bus, "router_static": static, "total": total,
-            "per_access": total / max(1, accesses)}
+    total = dram + init + offchip + nom + bus + static
+    return {"dram": dram, "dram_init": init, "offchip": offchip,
+            "nom_links": nom, "shared_bus": bus, "router_static": static,
+            "total": total, "per_access": total / max(1, accesses)}

@@ -26,7 +26,7 @@ from collections import defaultdict
 
 import numpy as np
 
-from repro.core.scheduler import schedule_transfers
+from repro.core.fabric import AdmissionQueue, NomFabric
 from repro.core.slot_alloc import CopyRequest, TdmAllocator, TdmAllocatorLight
 from repro.core.topology import Mesh3D
 
@@ -94,44 +94,14 @@ class SimResult:
     extra: dict = dataclasses.field(default_factory=dict)
 
 
-@dataclasses.dataclass
-class CcuQueue:
-    """The CCU's bounded request queue — an explicit, observable resource.
-
-    Pending inter-bank copies sit here (with their arrival cycles) until
-    the CCU drains the queue through one batched circuit-setup pass.  The
-    queue is bounded by ``depth``: a copy issued while it is full stalls
-    the issuing core until the forced drain's pickup pipeline completes
-    (``busy_until``) — backpressure, replacing the old unbounded
-    ``pending`` list + ``ccu_free_at`` scalar approximation.
-    """
-    depth: int
-    items: list = dataclasses.field(default_factory=list)  # (cycle, Request)
-    busy_until: int = 0        # CCU front-end pickup pipeline drain time
-    stall_cycles: int = 0      # core cycles lost to queue-full backpressure
-    full_stalls: int = 0       # copies that hit a full queue
-    peak_occupancy: int = 0
-    # INIT-class occupancy, accounted separately: bulk initialization
-    # (page zeroing) shares the queue with copies but sets up zero-hop
-    # circuits — how much of the bounded buffer it eats is its own signal.
-    init_reqs: int = 0
-    peak_init: int = 0
-
-    def full(self) -> bool:
-        return len(self.items) >= self.depth
-
-    def push(self, at: int, r: "Request") -> None:
-        assert not self.full(), "push on a full CCU queue (drain first)"
-        self.items.append((at, r))
-        self.peak_occupancy = max(self.peak_occupancy, len(self.items))
-        if r.op == Op.INIT:
-            self.init_reqs += 1
-            n = sum(1 for _at, q in self.items if q.op == Op.INIT)
-            self.peak_init = max(self.peak_init, n)
-
-
 class MemorySystem:
-    """Shared geometry + per-config data paths."""
+    """Shared geometry + per-config data paths.
+
+    The NoM configs hold a :class:`~repro.core.fabric.NomFabric` session
+    (``self.fabric``): its :class:`~repro.core.fabric.AdmissionQueue` *is*
+    the CCU's bounded request queue (``self.ccu`` — sim and scheduler
+    share one implementation), and every circuit setup goes through
+    ``fabric.schedule`` against the config's allocator."""
 
     def __init__(self, p: SimParams):
         self.p = p
@@ -143,24 +113,39 @@ class MemorySystem:
                        for _ in range(n_vaults)]
         self.offchip = OffChipLink(t)
         self.shared_bus = SharedInternalBus()
-        self.alloc: TdmAllocator | None = None
+        alloc: TdmAllocator | None = None
         if p.config == "nom":
-            self.alloc = TdmAllocator(self.mesh, p.n_slots)
+            alloc = TdmAllocator(self.mesh, p.n_slots)
         elif p.config == "nom_light":
-            self.alloc = TdmAllocatorLight(self.mesh, p.n_slots)
-        if self.alloc is not None:
-            # Keep the zero-hop INIT circuit's window occupancy in sync
-            # with the modeled in-bank zeroing (one row per TDM window).
-            self.alloc.init_row_bytes = t.row_bytes
-        self.nom_hop_beats = 0
+            alloc = TdmAllocatorLight(self.mesh, p.n_slots)
+        # Calibration against the RowClone-FPM row-cycle timing: an
+        # in-bank zero costs t.rowclone_fpm logic cycles per row, i.e.
+        # ceil(rowclone_fpm / n_slots) TDM windows — so the zero-hop
+        # circuit's occupancy must cover that many windows per row, not
+        # the old 1 window/row optimism.
+        self.init_windows_per_row = max(1, -(-t.rowclone_fpm // p.n_slots))
+        if alloc is not None:
+            # ceil so a k-row INIT occupies exactly k * windows_per_row
+            # windows (floor would overshoot by one window per row).
+            alloc.init_row_bytes = max(
+                1, -(-t.row_bytes // self.init_windows_per_row))
         # Bounded CCU request queue, calibrated against the router-buffering
         # cap: a queue deeper than the in-flight circuit budget would only
         # park requests the mesh cannot admit, so the cap clamps the depth.
         depth = max(1, p.nom_ccu_queue_depth)
         if p.nom_max_inflight:
             depth = max(1, min(depth, p.nom_max_inflight))
-        self.ccu = CcuQueue(depth)
+        self.fabric: NomFabric | None = None
+        if alloc is not None:
+            self.fabric = NomFabric(allocator=alloc, queue_depth=depth,
+                                    overflow="block")
+            self.ccu = self.fabric.queue
+        else:
+            self.ccu = AdmissionQueue(depth)
+        self.nom_hop_beats = 0
         self.nom_init_windows = 0      # TDM windows held by zero-hop INITs
+        self.init_rows = 0             # rows cleared in-DRAM (INIT energy)
+        self.init_bytes = 0            # bytes zeroed in-DRAM (no column I/O)
         # stats for the TSV dual-use analysis (NoM-Light motivation)
         self.nom_vertical_cycles = 0
         # concurrent-transfer telemetry: circuits in flight per TDM window
@@ -171,6 +156,11 @@ class MemorySystem:
         self.nom_batched_reqs = 0
 
     # -- helpers -------------------------------------------------------------
+    @property
+    def alloc(self) -> TdmAllocator | None:
+        """The fabric's allocator (None on non-NoM configs)."""
+        return None if self.fabric is None else self.fabric.allocator
+
     def _vault_bank(self, bank: int) -> tuple[VaultController, int]:
         v = self.mesh.vault_of(bank)
         local = self.mesh.banks_of_vault(v).index(bank)
@@ -221,6 +211,9 @@ class MemorySystem:
         t = self.p.timing
         vc, b = self._vault_bank(r.src_bank)
         rows = max(1, r.nbytes // t.row_bytes)
+        if r.op == Op.INIT:
+            self.init_rows += rows
+            self.init_bytes += r.nbytes
         if r.same_subarray or r.op == Op.INIT:
             per_row = t.rowclone_fpm
         else:
@@ -320,8 +313,7 @@ class MemorySystem:
                 bumped.append(dataclasses.replace(
                     rq, cycle=max(rq.cycle, w * p.n_slots)))
             reqs = bumped
-        results, report = schedule_transfers(reqs, allocator=self.alloc,
-                                             cycle=batch_cycle)
+        results, report = self.fabric.schedule(reqs, cycle=batch_cycle)
         self.nom_alloc_conflicts += report.conflicts
         dones = []
         for rq, res, (_at, r) in zip(reqs, results, items):
@@ -330,9 +322,8 @@ class MemorySystem:
                 tries += 1
                 self.nom_setup_retries += 1
                 retry = dataclasses.replace(rq, cycle=None)
-                (res,), _rep = schedule_transfers(
-                    [retry], allocator=self.alloc,
-                    cycle=rq.cycle + tries * p.n_slots)
+                (res,), _rep = self.fabric.schedule(
+                    [retry], cycle=rq.cycle + tries * p.n_slots)
             c = res.circuit
             assert c is not None, "NoM mesh persistently saturated"
             w_start = c.start_cycle // p.n_slots   # actual streaming window
@@ -341,14 +332,16 @@ class MemorySystem:
             if rq.op == "init":
                 # Zero-hop circuit: the bank clears rows internally
                 # (RowClone-FPM) while the circuit holds its LOCAL port;
-                # nothing streams over mesh links.
+                # nothing streams over mesh links.  The circuit's window
+                # count is calibrated (init_windows_per_row windows per
+                # row) so occupancy covers the modeled zeroing latency.
                 self.nom_init_windows += c.n_windows
                 vc, b = self._vault_bank(r.src_bank)
-                # One cleared row per circuit window (init_row_bytes is
-                # pinned to t.row_bytes above, keeping occupancy and
-                # modeled zeroing work coupled).
+                rows = max(1, -(-r.nbytes // t.row_bytes))
+                self.init_rows += rows
+                self.init_bytes += r.nbytes
                 done = c.start_cycle
-                for _ in range(c.n_windows):
+                for _ in range(rows):
                     done = vc.bank_row_op(done, b, t.rowclone_fpm)
                 dones.append(done)
                 continue
@@ -479,8 +472,14 @@ def simulate(reqs: list[Request], p: SimParams, name: str = "") -> SimResult:
     hit = float(np.mean([v.row_hit_rate for v in sys.vaults]))
     inflight = [n for n in sys.window_inflight.values() if n > 0]
     extra = {}
+    if p.config != "conventional":
+        # In-DRAM zeroing (RowClone-FPM): rows cleared (charged e_init_row
+        # each by the energy model) and the bytes they covered (excluded
+        # from the per-line column-I/O energy — nothing left the mats).
+        extra["init_rows"] = sys.init_rows
+        extra["init_bytes"] = sys.init_bytes
     if nom:
-        extra = {
+        extra |= {
             "nom_inflight_avg": float(np.mean(inflight)) if inflight else 0.0,
             "nom_inflight_max": int(max(inflight, default=0)),
             "nom_alloc_conflicts": sys.nom_alloc_conflicts,

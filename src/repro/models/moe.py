@@ -32,8 +32,9 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.core.fabric import NomFabric
 from repro.core.nom_collectives import nom_all_to_all
-from repro.core.scheduler import TransferRequest, schedule_transfers
+from repro.core.scheduler import TransferRequest
 from repro.parallel.compat import get_ambient_mesh, shard_map
 
 from .common import AxesTree, Params, dense_init
@@ -159,9 +160,9 @@ class MoE:
         eagerly on the host, tokens are bucketed per source EP rank with
         the same capacity rule, and every non-empty (src_rank, dst_rank)
         block becomes a :class:`TransferRequest` — dispatch direction plus
-        the combine return path — scheduled through
-        :func:`schedule_transfers` on the ``(ep,)`` EP ring, the same
-        allocator discipline as reshard.  Returns
+        the combine return path — scheduled through the MoE's
+        :class:`~repro.core.fabric.NomFabric` session on the ``(ep,)``
+        EP ring, the same discipline as reshard.  Returns
         ``(TransferPlan, ScheduleReport)`` and stores them for
         :attr:`last_dispatch_report`.
 
@@ -209,6 +210,18 @@ class MoE:
                 blocks[r, expert // e_loc] += int(n_tok)
         return self._plan_from_blocks(blocks, d, itemsize, policy)
 
+    def _dispatch_fabric(self, ep: int) -> NomFabric:
+        """The MoE's dispatch-planning session: one rounds-backend
+        :class:`NomFabric` per EP-ring size, kept across forwards so the
+        dispatch telemetry accumulates (``fabric.telemetry()``)."""
+        fabrics = getattr(self, "_fabrics", None)
+        if fabrics is None:
+            fabrics = {}
+            object.__setattr__(self, "_fabrics", fabrics)
+        if ep not in fabrics:
+            fabrics[ep] = NomFabric(shape=(ep,), torus=True)
+        return fabrics[ep]
+
     def _plan_from_blocks(self, blocks: np.ndarray, d: int, itemsize: int,
                           policy: str = "arrival"):
         """Schedule the EP-ring a2a from a (ep, ep) kept-token block
@@ -225,8 +238,7 @@ class MoE:
                                             tag=("dispatch", r, q)))
                 reqs.append(TransferRequest(src=(q,), dst=(r,), nbytes=nbytes,
                                             tag=("combine", q, r)))
-        plan, report = schedule_transfers(reqs, shape=(ep,), torus=True,
-                                          policy=policy)
+        plan, report = self._dispatch_fabric(ep).schedule(reqs, policy=policy)
         object.__setattr__(self, "_last_dispatch", (plan, report))
         return plan, report
 

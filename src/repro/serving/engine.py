@@ -6,19 +6,23 @@ compiled program for both phases — the large-scale serving shapes
 (decode_32k / long_500k) are exercised via the dry-run on the production
 mesh, this engine is the functional path used by tests and examples.
 
-Decode-cache movement rides the NoM scheduler, multi-tenant: each
-``generate`` stream is a *tenant* that leases bank homes from a
-:class:`~repro.serving.placement.BankPool` (placement policies: strided
-spread, per-tenant column partitioning, stall-feedback repacking).  Every
-step's cache updates are emitted as
+Decode-cache movement rides one :class:`~repro.core.fabric.NomFabric`
+session, multi-tenant: each ``generate`` stream is a *tenant* that leases
+bank homes from a :class:`~repro.serving.placement.BankPool` (placement
+policies: strided spread, per-tenant column partitioning, stall-feedback
+repacking).  Every step's cache updates are emitted as
 :class:`~repro.core.scheduler.TransferRequest`s and scheduled in one
-batched :func:`~repro.core.scheduler.schedule_transfers` call; ring-buffer
-overwrites, stall-driven evictions, and tenant teardown ride the same
-batches as INIT-class requests (``op="init"``, zero-hop circuits) — the
-serving analogue of the paper's mixed copy/initialization traffic.
-Per-batch :class:`ScheduleReport`s accumulate on ``Engine.reports`` and
-aggregate into ``Engine.last_report``; ``Engine.transfer_telemetry()``
-summarizes both, including the INIT share.  See ``docs/serving.md``.
+batched ``fabric.schedule`` call; ring-buffer overwrites, stall-driven
+evictions, and tenant teardown ride the same batches as INIT-class
+requests (``op="init"``, zero-hop circuits) — the serving analogue of the
+paper's mixed copy/initialization traffic.  Tenant admission shares the
+fabric's overflow semantics: a stream that finds the pool exhausted is
+queued or shed (after idle-lease reclaim) instead of surfacing
+``BankPool.lease``'s RuntimeError.  Per-batch :class:`ScheduleReport`s
+accumulate on ``Engine.reports`` and aggregate into
+``Engine.last_report``; ``Engine.transfer_telemetry()`` summarizes both,
+including the INIT share and admission health.  See ``docs/serving.md``
+and ``docs/fabric.md``.
 """
 from __future__ import annotations
 
@@ -28,12 +32,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.scheduler import (ScheduleReport, schedule_transfers)
-from repro.core.slot_alloc import TdmAllocator
+from repro.core.fabric import AdmissionQueue, NomFabric
+from repro.core.scheduler import ScheduleReport
 from repro.core.topology import Mesh3D
 from repro.models.lm import CausalLM, EncDecLM
 from repro.serving.placement import (BankPool, LeafSpec, step_requests,
                                      teardown_requests)
+
+# Engine admission mode -> fabric/queue overflow behavior.
+_ADMISSION = {"queue": "block", "shed": "shed", "raise": "raise"}
 
 
 @dataclasses.dataclass
@@ -43,6 +50,7 @@ class _Tenant:
     leases: list
     pos: int = 0               # write position (ring wrap -> evictions)
     stall_mark: int = 0        # tenant's attributed stalls at last repack
+    last_active: int = 0       # engine tick of the last scheduled step
 
 
 @dataclasses.dataclass
@@ -52,14 +60,26 @@ class Engine:
     Functional path: ``generate`` (batched greedy prefill+decode with one
     jit'd step).  Scheduling path (``track_transfers=True``): every stream
     is a tenant of ``self.pool``; per-step cache movement and INIT-class
-    eviction traffic go through ``schedule_transfers`` against one shared
-    :class:`TdmAllocator` — so concurrent tenants' circuits genuinely
-    compete for (and share) TDM windows, the quantity
-    ``benchmarks/bench_serving_tenancy.py`` sweeps.
+    eviction traffic go through ``self.fabric`` — one
+    :class:`~repro.core.fabric.NomFabric` session — so concurrent
+    tenants' circuits genuinely compete for (and share) TDM windows, the
+    quantity ``benchmarks/bench_serving_tenancy.py`` sweeps.
 
     Attributes:
       placement_policy: ``"spread"`` | ``"partition"`` |
         ``"stall_feedback"`` (see ``repro/serving/placement.py``).
+      sched_policy: fabric packing policy for the per-step batches — a
+        registered name or ``"auto"`` (stall-driven pick).
+      admission: what happens when ``open_tenant`` finds the bank pool
+        exhausted *after* idle-lease reclaim — ``"queue"`` (park the
+        stream on a bounded admission queue; it is admitted when
+        capacity frees), ``"shed"`` (decline it, counted), or
+        ``"raise"`` (surface ``BankPool.lease``'s RuntimeError, the
+        pre-fabric behavior).
+      idle_evict_ticks: a tenant with no scheduled step for this many
+        engine ticks is *idle*; exhausted admissions reclaim idle
+        tenants' leases (teardown INIT scrubs ride the fabric) before
+        queueing or shedding.  0 disables reclaim.
       ring_slots: ring capacity per KV/ring leaf in token slots for the
         traffic model; ``None`` means ``max_len`` (no wrap within one
         ``generate``).  Smaller values exercise overwrite evictions.
@@ -80,23 +100,39 @@ class Engine:
     max_extra_slots: int = 3
     keep_reports: int = 256
     placement_policy: str = "spread"
+    sched_policy: str = "arrival"
+    admission: str = "queue"
+    tenant_queue_depth: int = 8
+    idle_evict_ticks: int = 4
     ring_slots: int | None = None
     repack_stall_threshold: int = 64
 
     def __post_init__(self):
+        if self.admission not in _ADMISSION:
+            raise ValueError(f"unknown admission mode {self.admission!r}; "
+                             f"choose from {tuple(_ADMISSION)}")
         self._step = jax.jit(self._decode_one)
-        self._alloc = (TdmAllocator(self.cache_mesh, self.n_slots)
+        self.fabric = (NomFabric(mesh=self.cache_mesh, n_slots=self.n_slots,
+                                 policy=self.sched_policy,
+                                 overflow=_ADMISSION[self.admission])
                        if self.track_transfers else None)
         self.pool = (BankPool(self.cache_mesh, self.placement_policy)
                      if self.track_transfers else None)
+        # Waiting streams, under the same bounded-queue semantics as the
+        # fabric's request admission (shed when this queue is full too).
+        self.tenant_queue = AdmissionQueue(
+            depth=self.tenant_queue_depth,
+            overflow=_ADMISSION[self.admission])
         self._tenants: dict[str, _Tenant] = {}
         self._tenant_stalls: dict[str, int] = {}   # per-tenant stall cycles
+        self._reclaimed: set[str] = set()  # idle-evicted, owner not yet told
         self._gen_seq = 0
-        self._next_cycle = 0       # scheduler-time anchor of the next batch
+        self._tick = 0             # schedule_tick counter (idle detection)
         self.reports: list[ScheduleReport] = []
         self.last_report: ScheduleReport | None = None
         self.n_sched_steps = 0
         self.n_repacks = 0
+        self.n_idle_evictions = 0
         self.peak_tenants = 0
 
     def _decode_one(self, params, token, caches, pos, memory=None):
@@ -142,27 +178,106 @@ class Engine:
         return out
 
     # -- tenancy ------------------------------------------------------------
-    def open_tenant(self, name: str, batch: int) -> list:
+    def _evict_idle_tenant(self) -> bool:
+        """Reclaim the most-idle tenant's leases (eviction machinery:
+        the vacated homes are scrubbed by an INIT batch through the
+        fabric).  Returns False when no tenant qualifies as idle."""
+        if not self.idle_evict_ticks:
+            return False
+        idle = [t for t in self._tenants.values()
+                if self._tick - t.last_active >= self.idle_evict_ticks]
+        if not idle:
+            return False
+        victim = min(idle, key=lambda t: (t.last_active, t.name))
+        self.n_idle_evictions += 1
+        self.close_tenant(victim.name)
+        # The owner still holds the name: its next close_tenant must be
+        # a quiet no-op (and schedule_tick must skip it), not an error.
+        self._reclaimed.add(victim.name)
+        return True
+
+    def _lease_with_reclaim(self, name: str, specs: list[LeafSpec]) -> list:
+        """``pool.lease`` with idle-lease reclaim on exhaustion: evict
+        one idle tenant at a time (scrubbing its homes) and retry until
+        the lease fits or no idle tenant remains."""
+        while True:
+            try:
+                return self.pool.lease(name, specs)
+            except RuntimeError:
+                if not self._evict_idle_tenant():
+                    raise
+
+    def open_tenant(self, name: str, batch: int,
+                    queue: bool = True) -> list | None:
         """Lease bank homes for a new serving stream.
 
         One tenant per concurrent ``generate`` stream; ``batch`` sizes the
         leaf footprints.  Returns the leases (also kept internally until
-        :meth:`close_tenant`).  Raises if the name is already active or
-        the pool is exhausted."""
+        :meth:`close_tenant`).  Raises ``ValueError`` if the name is
+        already active.
+
+        When the pool is exhausted (after reclaiming idle tenants'
+        leases), the engine's ``admission`` mode decides: ``"queue"``
+        parks the stream on ``tenant_queue`` and returns None — it is
+        admitted automatically when :meth:`close_tenant` frees capacity;
+        ``"shed"`` counts the decline and returns None; ``"raise"``
+        surfaces the pool's RuntimeError.  ``queue=False`` downgrades
+        ``"queue"`` to shed-on-full for callers (like ``generate``) that
+        cannot come back for a deferred admission."""
         if self.pool is None:
             raise RuntimeError("track_transfers=False engine has no pool")
         if name in self._tenants:
             raise ValueError(f"tenant {name!r} already active")
-        leases = self.pool.lease(name, self._leaf_specs(batch))
-        self._tenants[name] = _Tenant(name=name, leases=leases)
+        if any(n == name for _at, (n, _b) in self.tenant_queue.items):
+            raise ValueError(f"tenant {name!r} already queued for admission")
+        self._reclaimed.discard(name)      # the name is being reused afresh
+        try:
+            leases = self._lease_with_reclaim(name, self._leaf_specs(batch))
+        except RuntimeError:
+            q = self.tenant_queue
+            if self.admission == "raise":
+                raise
+            if self.admission == "shed" or not queue or q.full():
+                q.n_shed += 1
+                return None
+            q.push(self._tick, (name, batch))
+            return None
+        self._register_tenant(name, leases)
+        return leases
+
+    def _register_tenant(self, name: str, leases: list) -> None:
+        self._tenants[name] = _Tenant(name=name, leases=leases,
+                                      last_active=self._tick)
         self._tenant_stalls[name] = 0
         self.peak_tenants = max(self.peak_tenants, len(self._tenants))
-        return leases
+
+    def _admit_waiting(self) -> None:
+        """Drain the tenant admission queue head-first while leases fit
+        (FIFO — a stream that still does not fit keeps its place and
+        blocks later arrivals, so admission order is preserved)."""
+        while self.tenant_queue.items:
+            _at, (name, batch) = self.tenant_queue.items[0]
+            try:
+                leases = self.pool.lease(name, self._leaf_specs(batch))
+            except RuntimeError:
+                return
+            self.tenant_queue.items.pop(0)
+            self._register_tenant(name, leases)
+
+    def tenants(self) -> list[str]:
+        """Names of the currently active (admitted) tenants."""
+        return list(self._tenants)
 
     def close_tenant(self, name: str) -> ScheduleReport | None:
         """Tear a stream down: schedule one INIT scrub per vacated home
-        (through the same scheduler batch), release the leases, and
-        return that final batch's report."""
+        (through the same fabric batch), release the leases, admit any
+        waiting streams that now fit, and return that final batch's
+        report.  A tenant whose leases were already reclaimed by idle
+        eviction closes as a quiet no-op (returns None) — the revocation
+        happened behind the owner's back."""
+        if name in self._reclaimed:
+            self._reclaimed.discard(name)
+            return None
         if name not in self._tenants:
             raise ValueError(f"tenant {name!r} is not active "
                              "(never opened, or already closed)")
@@ -170,9 +285,9 @@ class Engine:
         self._tenant_stalls.pop(name, None)
         reqs = teardown_requests(ten.leases)
         self.pool.release(name)
-        if not reqs:
-            return None
-        return self._schedule_batch(reqs)
+        report = self._schedule_batch(reqs) if reqs else None
+        self._admit_waiting()
+        return report
 
     def schedule_tick(self, tenants: list[str] | None = None
                       ) -> ScheduleReport | None:
@@ -182,8 +297,11 @@ class Engine:
         calls it once per model step for its own tenant; the tenancy
         benchmark drives many tenants through it without a model."""
         names = list(self._tenants) if tenants is None else tenants
+        self._tick += 1
         reqs = []
         for name in names:
+            if name in self._reclaimed:
+                continue               # idle-evicted: nothing left to move
             if name not in self._tenants:
                 raise ValueError(f"tenant {name!r} is not active "
                                  "(never opened, or already closed)")
@@ -191,11 +309,13 @@ class Engine:
             reqs += step_requests(ten.leases, ten.pos,
                                   max_extra_slots=self.max_extra_slots)
             ten.pos += 1
+            ten.last_active = self._tick
         if not reqs:
             return None
         report = self._schedule_batch(reqs)
         for name in names:
-            self._maybe_repack(self._tenants[name])
+            if name in self._tenants:      # reclaimed names have no state
+                self._maybe_repack(self._tenants[name])
         return report
 
     def _maybe_repack(self, ten: _Tenant) -> None:
@@ -217,13 +337,14 @@ class Engine:
 
     # -- scheduling ----------------------------------------------------------
     def _schedule_batch(self, reqs) -> ScheduleReport:
-        """Run one transfer batch through the shared allocator and fold
+        """Run one transfer batch through the fabric session and fold
         its report into the aggregates; per-request queueing delay is
         attributed to the owning tenant (the first tag element) for the
-        stall-feedback policy."""
-        cycle = self._next_cycle
-        results, report = schedule_transfers(reqs, allocator=self._alloc,
-                                             cycle=cycle)
+        stall-feedback policy.  The fabric's clock advances past the
+        batch's drain (a model-forward pass dwarfs the cache-flush
+        streaming time)."""
+        results, report = self.fabric.schedule(reqs)
+        cycle = self.fabric.last_cycle
         for rq, res in zip(reqs, results):
             if res.circuit is None or not isinstance(rq.tag, tuple):
                 continue
@@ -236,11 +357,6 @@ class Engine:
         self.n_sched_steps += 1
         self.last_report = (report if self.last_report is None
                             else self.last_report.merge(report))
-        # The next step starts after this batch's circuits drained (a
-        # model-forward pass dwarfs the cache-flush streaming time).
-        end = max((r.circuit.end_cycle for r in results
-                   if r.circuit is not None), default=self._next_cycle)
-        self._next_cycle = ((end // self.n_slots) + 1) * self.n_slots
         return report
 
     # -- decoding -------------------------------------------------------------
@@ -253,17 +369,24 @@ class Engine:
         auto-generated when None): leases open before prefill, every
         prefill/decode step emits its cache movement through
         :meth:`schedule_tick`, and completion tears the tenant down with
-        INIT scrubs (unless ``track_transfers=False``).  Telemetry lands
-        on ``self.reports`` / ``self.last_report`` /
+        INIT scrubs (unless ``track_transfers=False``).  A stream the
+        pool cannot admit (exhausted even after idle-lease reclaim) is
+        *shed from tracking* — tokens still stream, but its cache
+        movement is not scheduled (counted in ``shed_tenants``); under
+        ``admission="raise"`` the exhaustion raises instead.  Telemetry
+        lands on ``self.reports`` / ``self.last_report`` /
         :meth:`transfer_telemetry`.
         """
         b, plen = prompt.shape
         caches = self.model.init_caches(b, self.max_len)
         name = None
-        if self._alloc is not None:
+        if self.fabric is not None:
             name = tenant or f"gen{self._gen_seq}"
             self._gen_seq += 1
-            self.open_tenant(name, b)
+            # queue=False: generate cannot return for a deferred
+            # admission, so "queue" mode degrades to shed-on-full here.
+            if self.open_tenant(name, b, queue=False) is None:
+                name = None
         logits = None
         try:
             # Prefill token by token (one compiled program for both phases).
@@ -283,7 +406,8 @@ class Engine:
                 if name is not None:
                     self.schedule_tick([name])
         finally:
-            if name is not None and name in self._tenants:
+            if name is not None and (name in self._tenants
+                                     or name in self._reclaimed):
                 self.close_tenant(name)
         return jnp.concatenate(out, axis=1)
 
@@ -294,8 +418,10 @@ class Engine:
         / ``scheduled`` / ``batch_avg``, ``init_requests`` (eviction +
         teardown INITs), concurrency (``max_inflight`` /
         ``avg_inflight``), ``stall_cycles``, ``search_rounds`` /
-        ``conflicts``, and tenancy (``active_tenants`` /
-        ``peak_tenants`` / ``repacks``)."""
+        ``conflicts``, tenancy (``active_tenants`` / ``peak_tenants`` /
+        ``repacks``), and admission health (``admission`` /
+        ``sched_policy`` — the fabric's live policy pick —
+        ``queued_tenants`` / ``shed_tenants`` / ``idle_evictions``)."""
         if not self.n_sched_steps:
             return {}
         agg = self.last_report
@@ -313,4 +439,9 @@ class Engine:
             "active_tenants": len(self._tenants),
             "peak_tenants": self.peak_tenants,
             "repacks": self.n_repacks,
+            "admission": self.admission,
+            "sched_policy": self.fabric.effective_policy,
+            "queued_tenants": len(self.tenant_queue.items),
+            "shed_tenants": self.tenant_queue.n_shed,
+            "idle_evictions": self.n_idle_evictions,
         }

@@ -23,10 +23,13 @@ placement policy, and turns cache-lifecycle events into scheduler traffic:
   long is re-homed onto the least-loaded columns, and the vacated homes
   are scrubbed with INITs (eviction traffic through the same scheduler).
 
-All of it rides the same batched
-:func:`~repro.core.scheduler.schedule_transfers` calls as the copy
-traffic, so copy and INIT circuits compete for (and are reported over)
-one TDM fabric — the paper's mixed copy/initialization workload.
+All of it rides the same batched :class:`~repro.core.fabric.NomFabric`
+session (``Engine.fabric``) as the copy traffic, so copy and INIT
+circuits compete for (and are reported over) one TDM fabric — the
+paper's mixed copy/initialization workload.  On exhaustion the engine
+routes tenant admission through the fabric's overflow semantics
+(queue/shed/raise with idle-lease reclaim) rather than surfacing this
+module's ``RuntimeError``.
 
 Placement policies (:data:`PLACEMENT_POLICIES`):
 
@@ -277,7 +280,7 @@ class BankPool:
 
 
 # ---------------------------------------------------------------------------
-# Lifecycle events -> TransferRequests (all through schedule_transfers)
+# Lifecycle events -> TransferRequests (all through the engine's NomFabric)
 # ---------------------------------------------------------------------------
 def step_requests(leases: list[Lease], pos: int,
                   max_extra_slots: int = 0) -> list[TransferRequest]:

@@ -1,0 +1,471 @@
+"""NomFabric: policy registry, admission control, auto-tuning, the
+deprecated shim, engine tenant admission, and the INIT-row calibration."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Mesh3D, NomFabric, TransferRequest
+from repro.core.fabric import (AdmissionQueue, FabricOverflow, get_policy,
+                               register_policy, registered_policies,
+                               unregister_policy)
+from repro.core.scheduler import schedule_transfers
+from repro.core.slot_alloc import TdmAllocator
+from repro.memsim import (EnergyParams, SimParams, WorkloadSpec, energy_pj,
+                          generate, init_energy_per_row, simulate)
+from repro.memsim.simulator import MemorySystem
+
+MESH = Mesh3D(4, 4, 2)
+
+
+def _bank_reqs(n=6, nbytes=256):
+    return [TransferRequest(src=i, dst=16 + (i * 3) % 16, nbytes=nbytes,
+                            tag=f"r{i}") for i in range(n)]
+
+
+# The two bench mixes with *different* static winners (see
+# benchmarks/bench_fabric_autotune.py): skewed MoE a2a -> "arrival",
+# serving edge fan-out -> "longest_first".
+def _moe_mix():
+    rng = np.random.default_rng(7)
+    ep, reqs = 8, []
+    for r in range(ep):
+        for q in range(ep):
+            if r == q:
+                continue
+            nbytes = int(rng.integers(1, 9)) * (3 if q < 2 else 1) * 512
+            reqs.append(TransferRequest((r,), (q,), nbytes))
+            reqs.append(TransferRequest((q,), (r,), nbytes))
+    return (ep,), True, reqs
+
+
+def _serving_mix():
+    return (8, 4), False, [
+        TransferRequest((0, i % 4), ((1 + (i * 3) % 7), i % 4),
+                        nbytes=(i % 3 + 1) * 2048) for i in range(24)]
+
+
+# --- policy registry ----------------------------------------------------------
+def test_unknown_policy_raises_with_registry_listing():
+    with pytest.raises(ValueError, match="arrival"):
+        get_policy("roulette")
+    with pytest.raises(ValueError, match="unknown policy"):
+        NomFabric(shape=(4,), policy="roulette")
+    fab = NomFabric(shape=(4,))
+    with pytest.raises(ValueError, match="unknown policy"):
+        fab.schedule([TransferRequest((0,), (1,))], policy="roulette")
+
+
+def test_custom_policy_roundtrip():
+    @register_policy("widest_first")
+    def widest_first(reqs, ctx):
+        return sorted(range(len(reqs)), key=lambda i: -reqs[i].nbytes)
+
+    try:
+        assert "widest_first" in registered_policies()
+        with pytest.raises(ValueError, match="already registered"):
+            register_policy("widest_first")(widest_first)
+        fab = NomFabric(shape=(8,), policy="widest_first")
+        reqs = [TransferRequest((i,), ((i + 1) % 8,), nbytes=1 << i)
+                for i in range(6)]
+        _plan, rep = fab.schedule(reqs)
+        assert rep.n_scheduled == 6
+    finally:
+        unregister_policy("widest_first")
+    assert "widest_first" not in registered_policies()
+    with pytest.raises(ValueError, match="not registered"):
+        unregister_policy("widest_first")
+    with pytest.raises(ValueError, match="built-in"):
+        unregister_policy("arrival")
+
+
+def test_policy_must_return_permutation():
+    @register_policy("broken")
+    def broken(reqs, ctx):
+        return [0] * len(reqs)
+
+    try:
+        with pytest.raises(ValueError, match="permutation"):
+            NomFabric(shape=(4,), policy="broken").schedule(
+                [TransferRequest((0,), (1,)), TransferRequest((1,), (2,))])
+    finally:
+        unregister_policy("broken")
+
+
+def test_exactly_one_backend():
+    with pytest.raises(ValueError, match="exactly one"):
+        NomFabric()
+    with pytest.raises(ValueError, match="exactly one"):
+        NomFabric(mesh=MESH, shape=(4,))
+
+
+# --- the deprecated shim ------------------------------------------------------
+def test_shim_warns_and_matches_fabric():
+    reqs = _bank_reqs()
+    with pytest.warns(DeprecationWarning, match="NomFabric"):
+        legacy, rep_l = schedule_transfers(reqs,
+                                           allocator=TdmAllocator(MESH, 16),
+                                           cycle=0)
+    results, rep_f = NomFabric(mesh=MESH, n_slots=16).schedule(reqs, cycle=0)
+    assert [r.circuit.hops for r in legacy] == \
+        [r.circuit.hops for r in results]
+    assert rep_l == rep_f
+
+    with pytest.warns(DeprecationWarning):
+        plan_l, rrep_l = schedule_transfers(
+            [TransferRequest((0,), (3,)), TransferRequest((2,), (5,))],
+            shape=(8,), policy="longest_first")
+    plan_f, rrep_f = NomFabric(shape=(8,), policy="longest_first").schedule(
+        [TransferRequest((0,), (3,)), TransferRequest((2,), (5,))])
+    assert plan_l.starts == plan_f.starts and rrep_l == rrep_f
+
+
+def test_longest_first_matches_legacy_plan_transfers():
+    """The registered policy reproduces plan_transfers' built-in sort
+    exactly (stable ties included)."""
+    from repro.core.nom_collectives import Transfer, plan_transfers
+    rng = np.random.default_rng(3)
+    transfers = []
+    for _ in range(30):
+        s = (int(rng.integers(4)), int(rng.integers(4)))
+        d = (int(rng.integers(4)), int(rng.integers(4)))
+        transfers.append(Transfer(src=s, dst=d, nbytes=64))
+    legacy = plan_transfers((4, 4), transfers, policy="longest_first")
+    plan, _rep = NomFabric(shape=(4, 4), policy="longest_first").schedule(
+        transfers)
+    assert plan.starts == legacy.starts
+
+
+# --- admission queue: shed / block / raise ------------------------------------
+def test_overflow_shed_drops_and_counts():
+    fab = NomFabric(mesh=MESH, queue_depth=2, overflow="shed")
+    admitted = [fab.submit(r) for r in _bank_reqs(5)]
+    assert admitted == [True, True, False, False, False]
+    assert fab.telemetry()["shed"] == 3 and fab.pending == 2
+    _results, rep = fab.flush()
+    assert rep.n_requests == 2
+    assert fab.flush() is None          # queue drained
+
+
+def test_overflow_block_flushes_inline_and_stalls():
+    fab = NomFabric(mesh=MESH, queue_depth=2, overflow="block")
+    for r in _bank_reqs(5):
+        assert fab.submit(r)
+    tel = fab.telemetry()
+    assert tel["full_stalls"] == 2 and tel["flushes"] == 2
+    assert tel["queue_stall_cycles"] > 0     # pickup-pipeline backpressure
+    assert fab.pending == 1
+
+
+def test_overflow_raise():
+    fab = NomFabric(mesh=MESH, queue_depth=1, overflow="raise")
+    assert fab.submit(_bank_reqs(1)[0])
+    with pytest.raises(FabricOverflow):
+        fab.submit(_bank_reqs(2)[1])
+
+
+def test_admission_queue_rejects_unknown_overflow():
+    with pytest.raises(ValueError, match="overflow"):
+        AdmissionQueue(depth=2, overflow="explode")
+
+
+def test_flush_models_pickup_pipeline():
+    fab = NomFabric(mesh=MESH, queue_depth=8)
+    for r in _bank_reqs(4):
+        fab.submit(r, at=10)
+    fab.flush()
+    # 3-cycle fill + 1/request after the head's arrival
+    assert fab.queue.busy_until == 10 + 3 + 3
+
+
+# --- telemetry ----------------------------------------------------------------
+def test_session_telemetry_accumulates():
+    fab = NomFabric(mesh=MESH)
+    fab.schedule(_bank_reqs(4))
+    fab.schedule([TransferRequest(src=20, dst=20, nbytes=8192, op="init")])
+    tel = fab.telemetry()
+    assert tel["flushes"] == 2 and tel["requests"] == 5
+    assert tel["init_requests"] == 1 and tel["scheduled"] == 5
+    assert len(fab.history) == 2
+    assert fab.report.n_requests == 5
+    # the second batch anchored after the first drained
+    assert fab.clock > 0 and fab.last_cycle > 0
+
+
+def test_init_requires_src_eq_dst_in_fabric():
+    fab = NomFabric(mesh=MESH)
+    with pytest.raises(ValueError, match="src == dst"):
+        fab.schedule([TransferRequest(src=0, dst=1, op="init")])
+
+
+# --- auto-tuning --------------------------------------------------------------
+def test_auto_is_deterministic():
+    def run():
+        shape, torus, reqs = _moe_mix()
+        fab = NomFabric(shape=shape, torus=torus, policy="auto")
+        for _ in range(6):
+            fab.schedule(reqs)
+        return fab.telemetry(), [r.stall_cycles for r in fab.history]
+    assert run() == run()
+
+
+@pytest.mark.parametrize("mix,winner", [(_moe_mix, "arrival"),
+                                        (_serving_mix, "longest_first")])
+def test_auto_adapts_policy_to_the_mix(mix, winner):
+    """After probing, auto settles on the static winner of each mix and
+    its steady-state per-flush cost matches it; the session total never
+    loses to the *worst* static by more than the 5% acceptance bound."""
+    shape, torus, reqs = mix()
+    n_flushes = 8
+
+    def cost(rep):
+        return rep.stall_cycles + rep.n_windows
+
+    static = {}
+    for policy in ("arrival", "longest_first"):
+        fab = NomFabric(shape=shape, torus=torus, policy=policy)
+        static[policy] = sum(cost(fab.schedule(reqs)[1])
+                             for _ in range(n_flushes))
+    assert min(static, key=static.get) == winner, static
+
+    auto = NomFabric(shape=shape, torus=torus, policy="auto")
+    costs = [cost(auto.schedule(reqs)[1]) for _ in range(n_flushes)]
+    assert auto.effective_policy == winner
+    # steady state (post-probe) == the winner's per-flush cost
+    assert costs[-1] == static[winner] / n_flushes
+    assert sum(costs) <= max(static.values()) * 1.05
+
+
+def test_auto_queue_depth_grows_on_backpressure_and_shrinks_when_calm():
+    fab = NomFabric(mesh=MESH, n_slots=16, policy="auto", queue_depth=2,
+                    overflow="block")
+    assert fab.effective_queue_depth == 2
+    for _ in range(3):                       # bursts overflow the queue
+        for r in _bank_reqs(12):
+            fab.submit(r)
+        fab.flush()
+    grown = fab.effective_queue_depth
+    assert grown > 2
+    for _ in range(12):                      # trickle: under-filled drains
+        fab.submit(_bank_reqs(1)[0])
+        fab.flush()
+    assert fab.effective_queue_depth < grown
+
+
+def test_static_policy_fabric_never_retunes():
+    fab = NomFabric(mesh=MESH, policy="arrival", queue_depth=4)
+    for _ in range(6):
+        fab.schedule(_bank_reqs(2))
+    assert fab.effective_policy == "arrival"
+    assert fab.telemetry()["policy_switches"] == 0
+    assert fab.effective_queue_depth == 4    # depth tuning is auto-only
+
+
+# --- engine tenant admission --------------------------------------------------
+class _CacheStub:
+    """Two leaves per stream -> two banks per tenant; Mesh3D(2, 2, 2)'s
+    leasable pool is 4 banks, so the third tenant exhausts it."""
+
+    def init_caches(self, batch, max_len):
+        return {"kv": jnp.zeros((batch, max_len, 8), jnp.int8),
+                "state": jnp.zeros((batch, 16), jnp.int8)}
+
+
+def _engine(**kw):
+    from repro.serving import Engine
+    return Engine(model=_CacheStub(), cfg=None, max_len=16,
+                  cache_mesh=Mesh3D(2, 2, 2), ring_slots=4, **kw)
+
+
+def test_open_tenant_queues_on_exhaustion_and_admits_on_close():
+    eng = _engine(admission="queue", idle_evict_ticks=0)
+    assert eng.open_tenant("a", batch=1) is not None
+    assert eng.open_tenant("b", batch=1) is not None
+    assert eng.open_tenant("c", batch=1) is None      # parked, not raised
+    eng.schedule_tick()
+    assert eng.transfer_telemetry()["queued_tenants"] == 1
+    assert sorted(eng.tenants()) == ["a", "b"]
+    eng.close_tenant("a")                             # frees 2 banks -> admit c
+    assert sorted(eng.tenants()) == ["b", "c"]
+    assert eng.transfer_telemetry()["queued_tenants"] == 0
+    eng.schedule_tick()                               # c's traffic schedules
+    eng.close_tenant("b")
+    eng.close_tenant("c")
+    assert eng.pool.free_banks() == 4
+
+
+def test_open_tenant_sheds_when_configured():
+    eng = _engine(admission="shed", idle_evict_ticks=0)
+    eng.open_tenant("a", batch=1)
+    eng.open_tenant("b", batch=1)
+    assert eng.open_tenant("c", batch=1) is None
+    assert eng.open_tenant("d", batch=1) is None
+    eng.schedule_tick()
+    tel = eng.transfer_telemetry()
+    assert tel["shed_tenants"] == 2 and tel["queued_tenants"] == 0
+
+
+def test_open_tenant_raise_mode_keeps_legacy_error():
+    eng = _engine(admission="raise", idle_evict_ticks=0)
+    eng.open_tenant("a", batch=1)
+    eng.open_tenant("b", batch=1)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        eng.open_tenant("c", batch=1)
+
+
+def test_exhaustion_reclaims_idle_leases_first():
+    eng = _engine(admission="queue", idle_evict_ticks=2)
+    eng.open_tenant("idle", batch=1)
+    eng.open_tenant("busy", batch=1)
+    for _ in range(3):
+        eng.schedule_tick(["busy"])       # "idle" never ticks
+    fresh = eng.open_tenant("fresh", batch=1)
+    assert fresh is not None              # admitted by evicting "idle"
+    tel = eng.transfer_telemetry()
+    assert tel["idle_evictions"] == 1
+    assert sorted(eng.tenants()) == ["busy", "fresh"]
+    assert tel["init_requests"] > 0       # the reclaim scrubbed the homes
+
+
+def test_double_open_still_rejected():
+    eng = _engine()
+    eng.open_tenant("a", batch=1)
+    with pytest.raises(ValueError, match="already active"):
+        eng.open_tenant("a", batch=1)
+
+
+def test_queued_name_cannot_queue_twice():
+    """A name parked on the admission queue must not be queueable again
+    (a duplicate would later double-lease under one tenant record and
+    leave the first grant's homes unscrubbed at close)."""
+    eng = _engine(admission="queue", idle_evict_ticks=0)
+    eng.open_tenant("a", batch=1)
+    eng.open_tenant("b", batch=1)
+    assert eng.open_tenant("c", batch=1) is None      # parked
+    with pytest.raises(ValueError, match="already queued"):
+        eng.open_tenant("c", batch=1)
+    eng.close_tenant("a")                             # admits the single c
+    assert "c" in eng.tenants()
+    eng.close_tenant("b")
+    eng.close_tenant("c")
+    assert eng.pool.free_banks() == 4
+
+
+def test_idle_evicted_handle_stays_usable():
+    """The evicted owner's handle goes inert, not invalid: its ticks are
+    skipped and its close is a quiet no-op."""
+    eng = _engine(admission="queue", idle_evict_ticks=2)
+    eng.open_tenant("idle", batch=1)
+    eng.open_tenant("busy", batch=1)
+    for _ in range(3):
+        eng.schedule_tick(["busy"])
+    assert eng.open_tenant("fresh", batch=1) is not None  # evicts "idle"
+    rep = eng.schedule_tick(["idle", "busy"])         # skipped, not raised
+    assert rep is not None and rep.n_requests > 0
+    assert eng.close_tenant("idle") is None           # quiet no-op
+    with pytest.raises(ValueError, match="not active"):
+        eng.close_tenant("idle")                      # double close still errs
+    eng.close_tenant("busy")
+    eng.close_tenant("fresh")
+
+
+def test_blocked_submit_stall_does_not_grow_with_session_age():
+    """flush() advances the fabric clock past its drain, so a blocked
+    submit is charged only the pickup-pipeline wait — not the whole
+    session's elapsed time."""
+    fab = NomFabric(mesh=MESH, queue_depth=2, overflow="block")
+    for r in _bank_reqs(12, nbytes=64):
+        fab.submit(r)
+    tel = fab.telemetry()
+    assert tel["full_stalls"] == 5
+    # each overflow waits <= one pickup pipeline (3 + depth-1 = 4 cycles)
+    assert tel["queue_stall_cycles"] <= tel["full_stalls"] * 4
+
+
+def test_generate_sheds_tracking_when_pool_is_full(mesh1):
+    """`generate` on an exhausted pool streams tokens untracked instead
+    of raising (the stream is counted as shed)."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import make_model
+
+    cfg = get_config("qwen1.5-4b", smoke=True)
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.serving import Engine
+    eng = Engine(model, cfg, max_len=32, cache_mesh=Mesh3D(2, 2, 2),
+                 idle_evict_ticks=0)
+    n_leaves = len(eng._leaf_specs(1))
+    hogs = 0
+    while eng.pool.free_banks() >= n_leaves:
+        eng.open_tenant(f"hog{hogs}", batch=1)
+        hogs += 1
+    before = eng.n_sched_steps
+    out = eng.generate(params, jax.random.randint(
+        jax.random.PRNGKey(1), (1, 3), 0, cfg.vocab), n_new=3)
+    assert out.shape == (1, 6)                       # tokens still stream
+    assert eng.n_sched_steps == before               # but nothing scheduled
+    assert eng.tenant_queue.n_shed == 1
+    assert sorted(eng.tenants()) == sorted(f"hog{i}" for i in range(hogs))
+
+
+# --- memsim calibration + INIT energy ----------------------------------------
+def test_init_row_bytes_calibrated_to_rowclone_timing():
+    p = SimParams(config="nom", mesh=Mesh3D(4, 4, 2))
+    sys = MemorySystem(p)
+    t = p.timing
+    per_row = -(-t.rowclone_fpm // p.n_slots)
+    assert sys.init_windows_per_row == per_row > 1
+    assert sys.alloc.init_row_bytes == -(-t.row_bytes // per_row)
+    # a one-row INIT circuit now holds its LOCAL port for the zeroing time
+    results, _rep = sys.fabric.schedule(
+        [TransferRequest(src=20, dst=20, nbytes=t.row_bytes, op="init")],
+        cycle=0)
+    assert results[0].circuit.n_windows == per_row
+
+
+def test_memsim_counts_init_rows_and_energy_charges_them():
+    reqs = generate(WorkloadSpec("fork", n_requests=400, seed=3))
+    r = simulate(reqs, SimParams(config="nom"))
+    assert r.extra["init_rows"] > 0
+    e = energy_pj(r)
+    assert e["dram_init"] == r.extra["init_rows"] * EnergyParams().e_init_row
+    assert e["dram_init"] > 0 and e["total"] > e["dram_init"]
+    assert init_energy_per_row() == EnergyParams().e_init_row
+    # no double charge: the zeroed bytes are excluded from the per-line
+    # column-I/O term (in-DRAM zeroing moves nothing through the mats)
+    from repro.memsim.workloads import LINE
+    lines = (r.copy_bytes - r.extra["init_bytes"]) // LINE
+    assert e["dram"] == pytest.approx(
+        (lines + max(r.reqs, 1))
+        * (EnergyParams().e_act_pre * 0.3 + EnergyParams().e_rd_wr))
+    conv = simulate(reqs, SimParams(config="conventional"))
+    assert "init_rows" not in conv.extra             # pays via stores instead
+    assert energy_pj(conv)["dram_init"] == 0
+
+
+def test_memsim_ccu_is_a_fabric_admission_queue():
+    p = SimParams(config="nom", mesh=Mesh3D(4, 4, 2))
+    sys = MemorySystem(p)
+    assert sys.ccu is sys.fabric.queue               # one implementation
+    assert isinstance(sys.ccu, AdmissionQueue)
+
+
+# --- the API gate -------------------------------------------------------------
+def test_check_api_gate_passes_and_detects_violations(tmp_path):
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "scripts"))
+    try:
+        import check_api
+    finally:
+        sys.path.pop(0)
+    assert check_api.violations(
+        pathlib.Path(__file__).parent.parent) == []
+    bad = tmp_path / "src" / "repro" / "serving"
+    bad.mkdir(parents=True)
+    (bad / "rogue.py").write_text(
+        "from repro.core.scheduler import schedule_transfers\n"
+        "def f(reqs, alloc):\n"
+        "    return schedule_transfers(reqs, allocator=alloc)  # no!\n")
+    hits = check_api.violations(tmp_path)
+    assert len(hits) == 1 and "rogue.py:3" in hits[0]
