@@ -3,16 +3,31 @@ path in one 500ps cycle; here we measure the JAX implementation's batched
 search throughput, plus the end-to-end allocation rate of the concurrent
 batched scheduler (``allocate_batch``) against the serial one-request-at-
 a-time CCU loop — the paper's "many circuits per setup" claim as a
-benchmark."""
+benchmark.
+
+Besides the CSV rows, ``run()`` writes ``BENCH_alloc.json`` at the repo
+root — the machine-readable perf record tracked across PRs (alloc rate by
+batch size, circuits/window, CCU stall cycles, and the conflict-scoped
+re-search evidence: one conflict costs one extra search, independent of
+how many requests trail it).  ``scripts/ci.sh`` asserts the file is
+produced and well-formed.
+"""
+import json
+import pathlib
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.fabric import NomFabric
+from repro.core.scheduler import TransferRequest
 from repro.core.slot_alloc import (CopyRequest, TdmAllocator,
                                    wavefront_search_batch)
 from repro.core.topology import Mesh3D
+
+RECORD_PATH = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_alloc.json"
 
 
 def _stream(rng, mesh, n, nbytes=512):
@@ -25,15 +40,16 @@ def _stream(rng, mesh, n, nbytes=512):
     return reqs
 
 
-def run():
-    rows = []
-    mesh = Mesh3D(8, 8, 4)
-    alloc = TdmAllocator(mesh, 16)
-    rng = np.random.default_rng(0)
-    for i in range(32):
-        s, d = rng.integers(mesh.n_nodes, size=2)
-        if s != d:
-            alloc.allocate(int(s), int(d), 512, cycle=i)
+def _median(fn, reps):
+    samples = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        samples.append(time.perf_counter() - t0)
+    return sorted(samples)[len(samples) // 2]
+
+
+def _bench_search(rows, mesh, alloc, rng):
     occ = jnp.asarray(alloc.table.busy_masks(0))
     for batch in (1, 16, 64):
         srcs = jnp.asarray(rng.integers(mesh.n_nodes, size=batch), jnp.int32)
@@ -51,46 +67,152 @@ def run():
         us = (time.perf_counter() - t0) / reps * 1e6
         rows.append((f"slot_alloc/search_batch={batch}", us,
                      f"{us/batch:.1f}us/request (hw target: 1 cycle)"))
-    # end-to-end allocation rate (search + traceback + reserve)
-    alloc2 = TdmAllocator(mesh, 16)
-    t0 = time.perf_counter()
-    n = 100
-    done = 0
-    for i in range(n):
-        s, d = rng.integers(mesh.n_nodes, size=2)
-        if s != d and alloc2.allocate(int(s), int(d), 512,
-                                      cycle=i * 8).circuit:
-            done += 1
-    us = (time.perf_counter() - t0) / n * 1e6
-    rows.append(("slot_alloc/allocate_e2e", us, f"alloc_rate={done}/{n}"))
 
-    # batched vs serial end-to-end rate on identical request streams: one
-    # vectorized wavefront pass + arrival-order commit vs one search per
-    # request.  Fresh allocator per rep so table state is comparable.
-    batch = 64
-    reqs = _stream(np.random.default_rng(1), mesh, batch)
-    TdmAllocator(mesh, 16).allocate_batch(reqs, cycle=0)       # warm jit
-    a = TdmAllocator(mesh, 16)
-    for r in reqs[:4]:
-        a.allocate(r.src, r.dst, r.nbytes, 0)                  # warm B=1
-    reps = 5
-    t0 = time.perf_counter()
-    for _ in range(reps):
+
+# Pre-PR (tail-wide re-search, per-request Python commit) allocate_batch
+# cost, measured on the PR-5 development container: the perf target this
+# PR's pipeline is tracked against.  Absolute microseconds are container-
+# specific — on other hardware read `batched_vs_serial` (measured in-run)
+# and treat `speedup_vs_pr4` as indicative only, or re-measure the
+# baseline at the PR-4 commit on that machine.
+_PR4_BASELINE_US = {"64": 123.6, "128": 202.2, "256": 239.9}
+_PR4_BASELINE_NOTE = ("pr4_baseline_us measured on the PR-5 development "
+                      "container; absolute us are machine-specific — "
+                      "batched_vs_serial is the portable in-run metric")
+
+
+def _bench_e2e(rows, mesh, record):
+    """Serial one-at-a-time CCU loop vs one concurrent batched setup, on
+    identical request streams (fresh allocator per rep so table state is
+    comparable; results are bit-identical by construction)."""
+    for batch in (64, 128, 256):
+        reqs = _stream(np.random.default_rng(1), mesh, batch)
+        TdmAllocator(mesh, 16).allocate_batch(reqs, cycle=0)       # warm jit
         a = TdmAllocator(mesh, 16)
-        for i, r in enumerate(reqs):
-            a.allocate(r.src, r.dst, r.nbytes, cycle=0)
-    us_serial = (time.perf_counter() - t0) / (reps * batch) * 1e6
-    t0 = time.perf_counter()
-    committed = rounds = 0
-    for _ in range(reps):
+        for r in reqs[:4]:
+            a.allocate(r.src, r.dst, r.nbytes, 0)                  # warm B=1
+
+        def serial():
+            a = TdmAllocator(mesh, 16)
+            for r in reqs:
+                a.allocate(r.src, r.dst, r.nbytes, cycle=0)
+        us_serial = _median(serial, 5) / batch * 1e6
+
+        state = {}
+
+        def batched():
+            a = TdmAllocator(mesh, 16)
+            res = a.allocate_batch(reqs, cycle=0)
+            state["committed"] = sum(r.circuit is not None for r in res)
+            state["report"] = a.last_report
+        us_batch = _median(batched, 11) / batch * 1e6
+        rep = state["report"]
+        speed = us_serial / us_batch
+        vs_pr4 = _PR4_BASELINE_US[str(batch)] / us_batch
+        rows.append((f"slot_alloc/allocate_serial_b={batch}", us_serial,
+                     f"{1e6/us_serial:.0f} alloc/s"))
+        rows.append((f"slot_alloc/allocate_batch_b={batch}", us_batch,
+                     f"batched_vs_serial={speed:.1f}x "
+                     f"vs_pr4_batch={vs_pr4:.1f}x "
+                     f"committed={state['committed']}/{batch} "
+                     f"rounds={rep.search_rounds} "
+                     f"searched={rep.n_searched}"))
+        record["alloc"][str(batch)] = {
+            "us_serial": round(us_serial, 1),
+            "us_batch": round(us_batch, 1),
+            "batched_vs_serial": round(speed, 2),
+            "pr4_baseline_us": _PR4_BASELINE_US[str(batch)],
+            "speedup_vs_pr4": round(vs_pr4, 2),
+            "alloc_rate_per_s": round(1e6 / us_batch),
+            "search_rounds": rep.search_rounds,
+            "conflicts": rep.conflicts,
+            "n_searched": rep.n_searched,
+        }
+
+
+def _bench_single_conflict(rows, mesh, record):
+    """One contended pair in front of a growing tail of link-disjoint
+    row transfers: conflict-scoped re-search must pay exactly one extra
+    search (rounds - base waves == 1) no matter the tail length — the
+    old tail-wide retry re-searched the whole remainder."""
+    wave = TdmAllocator.search_wave
+    for tail in (7, 14, 28):      # 28 = every disjoint row lane of the mesh
+        reqs = [CopyRequest(mesh.node_id(0, 0, 0), mesh.node_id(1, 0, 0), 256),
+                CopyRequest(mesh.node_id(0, 0, 0), mesh.node_id(1, 0, 0), 256)]
+        lanes = [(y, z) for z in range(mesh.Z) for y in range(1, mesh.Y)]
+        for y, z in lanes[:tail]:
+            reqs.append(CopyRequest(mesh.node_id(0, y, z),
+                                    mesh.node_id(mesh.X - 1, y, z), 256))
         a = TdmAllocator(mesh, 16)
         res = a.allocate_batch(reqs, cycle=0)
-        committed = sum(r.circuit is not None for r in res)
-        rounds = a.last_report.search_rounds
-    us_batch = (time.perf_counter() - t0) / (reps * batch) * 1e6
-    rows.append((f"slot_alloc/allocate_serial_b={batch}", us_serial,
-                 f"{1e6/us_serial:.0f} alloc/s"))
-    rows.append((f"slot_alloc/allocate_batch_b={batch}", us_batch,
-                 f"batched_vs_serial={us_serial/us_batch:.1f}x "
-                 f"committed={committed}/{batch} rounds={rounds}"))
+        rep = a.last_report
+        base = -(-len(reqs) // wave)          # search waves sans conflicts
+        extra = rep.search_rounds - base
+        rows.append((f"slot_alloc/single_conflict_tail={tail}", 0.0,
+                     f"rounds={rep.search_rounds} extra_rounds={extra} "
+                     f"conflicts={rep.conflicts} "
+                     f"searched={rep.n_searched} "
+                     f"committed={sum(r.circuit is not None for r in res)}"))
+        record["single_conflict"][str(tail)] = {
+            "search_rounds": rep.search_rounds,
+            "extra_rounds_beyond_waves": extra,
+            "conflicts": rep.conflicts,
+            "n_searched": rep.n_searched,
+        }
+
+
+def _bench_fabric(rows, mesh, record):
+    """Circuits per TDM window + CCU queue stalls through a fabric
+    session — the controller-side arbitration telemetry."""
+    fab = NomFabric(mesh=mesh, n_slots=16)
+    reqs = [TransferRequest(src=r.src, dst=r.dst, nbytes=r.nbytes)
+            for r in _stream(np.random.default_rng(3), mesh, 128)]
+    _res, rep = fab.schedule(reqs)
+    rows.append(("slot_alloc/circuits_per_window", rep.avg_inflight,
+                 f"max_inflight={rep.max_inflight} over "
+                 f"{rep.n_windows} windows"))
+    record["circuits_per_window"] = {
+        "avg_inflight": round(rep.avg_inflight, 2),
+        "max_inflight": rep.max_inflight,
+    }
+    qfab = NomFabric(mesh=mesh, n_slots=16, queue_depth=4, overflow="block")
+    for r in _stream(np.random.default_rng(4), mesh, 48):
+        qfab.submit(TransferRequest(src=r.src, dst=r.dst, nbytes=2048))
+    qfab.flush()
+    tel = qfab.telemetry()
+    rows.append(("slot_alloc/ccu_stall_cycles",
+                 float(tel["queue_stall_cycles"]),
+                 f"full_stalls={tel['full_stalls']} depth=4"))
+    record["ccu"] = {
+        "stall_cycles": tel["queue_stall_cycles"],
+        "full_stalls": tel["full_stalls"],
+        "queue_depth": 4,
+    }
+
+
+def run():
+    rows = []
+    mesh = Mesh3D(8, 8, 4)
+    alloc = TdmAllocator(mesh, 16)
+    rng = np.random.default_rng(0)
+    for i in range(32):
+        s, d = rng.integers(mesh.n_nodes, size=2)
+        if s != d:
+            alloc.allocate(int(s), int(d), 512, cycle=i)
+    record = {
+        "schema": "nom/bench-alloc/v1",
+        "mesh": [mesh.X, mesh.Y, mesh.Z],
+        "n_slots": 16,
+        "search_wave": TdmAllocator.search_wave,
+        "baseline_note": _PR4_BASELINE_NOTE,
+        "alloc": {},
+        "single_conflict": {},
+    }
+    _bench_search(rows, mesh, alloc, rng)
+    _bench_e2e(rows, mesh, record)
+    _bench_single_conflict(rows, mesh, record)
+    _bench_fabric(rows, mesh, record)
+    RECORD_PATH.write_text(json.dumps(record, indent=2) + "\n")
+    rows.append(("slot_alloc/perf_record", 0.0,
+                 f"wrote {RECORD_PATH.name}"))
     return rows

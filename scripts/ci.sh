@@ -16,4 +16,29 @@ echo "== tier-1: pytest =="
 python -m pytest -q "$@"
 
 echo "== smoke: benchmarks (quick subset) =="
+rm -f BENCH_alloc.json   # the gate below must see THIS run's record
 python benchmarks/run.py --quick
+
+echo "== perf record: BENCH_alloc.json =="
+python - <<'EOF'
+import json, pathlib, sys
+path = pathlib.Path("BENCH_alloc.json")
+if not path.is_file():
+    sys.exit("BENCH_alloc.json missing: benchmarks/run.py --quick must write it")
+rec = json.loads(path.read_text())
+required = ("schema", "mesh", "n_slots", "alloc", "single_conflict",
+            "circuits_per_window", "ccu")
+missing = [k for k in required if k not in rec]
+if missing:
+    sys.exit(f"BENCH_alloc.json missing keys: {missing}")
+for batch, entry in rec["alloc"].items():
+    for k in ("us_serial", "us_batch", "batched_vs_serial", "speedup_vs_pr4",
+              "alloc_rate_per_s", "search_rounds", "conflicts", "n_searched"):
+        if k not in entry:
+            sys.exit(f"BENCH_alloc.json alloc[{batch}] missing {k}")
+for tail, entry in rec["single_conflict"].items():
+    if entry["extra_rounds_beyond_waves"] > entry["conflicts"]:
+        sys.exit(f"single_conflict[{tail}]: re-search not conflict-scoped")
+print(f"BENCH_alloc.json OK: batches={sorted(rec['alloc'])} "
+      f"tails={sorted(rec['single_conflict'])}")
+EOF

@@ -431,7 +431,8 @@ class NomFabric:
     def telemetry(self) -> dict:
         """Cumulative session stats: scheduling (``flushes``,
         ``requests``/``scheduled``, ``init_requests``, concurrency,
-        ``stall_cycles``, search/conflict counters), the live knobs
+        ``stall_cycles``, search/conflict counters incl.
+        ``searched_requests``), the live knobs
         (``policy``, ``queue_depth``), and admission health
         (``pending``, ``shed``, ``full_stalls``,
         ``queue_stall_cycles``, ``policy_switches``)."""
@@ -447,6 +448,7 @@ class NomFabric:
             "stall_cycles": 0 if agg is None else agg.stall_cycles,
             "search_rounds": 0 if agg is None else agg.search_rounds,
             "conflicts": 0 if agg is None else agg.conflicts,
+            "searched_requests": 0 if agg is None else agg.n_searched,
             "policy": self.effective_policy,
             "queue_depth": self.queue.depth,
             "pending": self.pending,

@@ -84,6 +84,10 @@ class ScheduleReport:
         because slots/links were taken — queueing delay under contention.
       search_rounds: vectorized wavefront passes issued (tdm backend).
       conflicts: stale-snapshot commit retries (tdm backend).
+      n_searched: per-request searches summed over all passes (tdm
+        backend) — with conflict-scoped re-search this stays near
+        ``n_requests + conflicts``; tail-wide retries would grow it
+        quadratically with the batch.
       n_init: INIT-class requests (``op="init"``) in this batch — the
         eviction/initialization share of the traffic.
     """
@@ -96,6 +100,7 @@ class ScheduleReport:
     stall_cycles: int = 0      # waits beyond the earliest possible start
     search_rounds: int = 0     # vectorized search passes (tdm backend)
     conflicts: int = 0         # stale-snapshot retries (tdm backend)
+    n_searched: int = 0        # per-request searches over all passes (tdm)
     n_init: int = 0            # INIT-class (op="init") requests in the batch
     agg_windows: int = 0       # windows folded into avg_inflight by merge()
     #   (0 on a fresh report: its own n_windows is the weight)
@@ -120,6 +125,7 @@ class ScheduleReport:
             stall_cycles=self.stall_cycles + other.stall_cycles,
             search_rounds=self.search_rounds + other.search_rounds,
             conflicts=self.conflicts + other.conflicts,
+            n_searched=self.n_searched + other.n_searched,
             n_init=self.n_init + other.n_init,
             agg_windows=wa + wb)
 
@@ -188,6 +194,7 @@ def _tdm_report(alloc: TdmAllocator, reqs: list[CopyRequest],
         avg_inflight=float(busy.mean()) if busy.size else 0.0,
         stall_cycles=stall,
         search_rounds=rep.search_rounds, conflicts=rep.conflicts,
+        n_searched=rep.n_searched,
         n_init=sum(1 for rq in reqs if rq.op == "init"))
 
 

@@ -14,9 +14,15 @@ Implementation layout (mirrors the hardware split):
   (``vmap``-able over a batch of requests; the Pallas TPU kernel in
   ``repro.kernels.slot_alloc`` implements the same contract).
 * :class:`SlotTable` — the CCU's occupancy bookkeeping (host-side numpy):
-  per (router, port, slot) reservation expiry in TDM-window units.
-* :func:`traceback` — walks the converged vectors backwards to extract the
-  hop list, as the paper's "tracing back the path towards the source PE".
+  per (router, port, slot) reservation expiry in TDM-window units, with
+  *incrementally maintained* packed busy masks (reservations set bits
+  eagerly, an expiry-bucket map clears them lazily as the query window
+  advances) and a device-resident copy for the search.
+* :func:`traceback` / :func:`traceback_batch` — walk the converged
+  vectors backwards to extract the hop lists, as the paper's "tracing
+  back the path towards the source PE"; the batch variant steps every
+  requested (request, arrival-slot) job in lockstep with vectorized
+  per-dimension upstream selection.
 
 Slot/cycle accounting (paper Fig. 2): a circuit of distance D injected at
 source slot ``s`` uses slot ``s+i (mod n)`` at the i-th router on the path
@@ -121,6 +127,67 @@ def _search_batch_jit(occ, srcs, dsts, init_vecs, *, mesh, n_slots):
                                   n_slots=n_slots)
 
 
+def _pow2_pad(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+_SMALL_SEARCH = 8     # at/below this batch, the host evaluation wins
+
+
+def _wavefront_host(occ: np.ndarray, mesh: Mesh3D, n_slots: int, src: int,
+                    dst: int, init_vec: int) -> np.ndarray:
+    """Scalar twin of :func:`wavefront_search` for tiny batches.
+
+    The shortest-path lattice is a DAG ordered by distance from the
+    source, so one pass in topological (upstream-first) order computes
+    the exact fixpoint the accelerator reaches after ``max_dist`` sweeps
+    — bit-identical, without a device round-trip.  Used for
+    conflict-scoped re-search rounds and small serial batches, where the
+    dispatch overhead of the vectorized path dwarfs its compute.
+    """
+    fm = full_mask(n_slots)
+    vec = np.full(mesh.n_nodes, fm, np.uint32)
+    vec[src] = np.uint32(init_vec & fm)
+    if src == dst:
+        return vec
+    coords = mesh.coord_array
+    sx, sy, sz = (int(c) for c in coords[src])
+    dx, dy, dz = (int(c) for c in coords[dst])
+    spans = (abs(dx - sx), abs(dy - sy), abs(dz - sz))
+    sgn = (1 if dx >= sx else -1, 1 if dy >= sy else -1,
+           1 if dz >= sz else -1)
+    strides = (1, mesh.X, mesh.X * mesh.Y)
+    step = tuple(sgn[d] * strides[d] for d in range(3))
+    ports = tuple(2 * d + (1 if sgn[d] < 0 else 0) for d in range(3))
+    n1 = n_slots - 1
+    offsets = sorted(
+        ((ox, oy, oz) for ox in range(spans[0] + 1)
+         for oy in range(spans[1] + 1) for oz in range(spans[2] + 1)
+         if ox or oy or oz), key=lambda o: o[0] + o[1] + o[2])
+    vals = {src: int(init_vec) & fm}
+    nodes, out = [], []
+    for off in offsets:
+        v = src + off[0] * step[0] + off[1] * step[1] + off[2] * step[2]
+        acc = fm
+        first = True
+        for d in range(3):
+            if not off[d]:
+                continue
+            u = v - step[d]
+            val = vals[u] | int(occ[u, ports[d]])
+            val = ((val << 1) | (val >> n1)) & fm
+            acc = val if first else acc & val
+            first = False
+        vals[v] = acc
+        nodes.append(v)
+        out.append(acc)
+    vec[nodes] = out
+    return vec
+
+
 # ---------------------------------------------------------------------------
 # Host-side CCU bookkeeping
 # ---------------------------------------------------------------------------
@@ -150,6 +217,74 @@ class Circuit:
     _n_slots_hint: int = 16
 
 
+class _PackedExpiry:
+    """Expiry table with incrementally maintained packed busy masks.
+
+    ``expiry[*prefix, slot]`` is the TDM window until which the slot is
+    reserved (exclusive).  ``masks_at(w)`` returns the packed uint32 busy
+    masks (bit s set iff ``expiry[..., s] > w``) *without* recomputing the
+    full reduction each call: reservations set bits eagerly, and an
+    expiry-bucket map clears them lazily as the query window advances.
+    A backward window jump (rare: re-anchored benchmarks/tests) falls back
+    to a from-scratch rebuild.  ``version`` bumps on every mask change —
+    the device-resident occupancy re-uploads only when it moved.
+    """
+
+    def __init__(self, prefix_shape: tuple[int, ...], n_slots: int):
+        self.n_slots = n_slots
+        self.expiry = np.zeros((*prefix_shape, n_slots), np.int64)
+        self.masks = np.zeros(prefix_shape, np.uint32)
+        self.window = 0                     # the window `masks` is valid for
+        self._weights = np.uint32(1) << np.arange(n_slots, dtype=np.uint32)
+        self._buckets: dict[int, list] = {}  # until -> [tuple of idx arrays]
+        self.version = 0
+
+    def _recompute(self, window: int) -> None:
+        live = self.expiry > window
+        self.masks = (live * self._weights).sum(-1, dtype=np.uint64) \
+            .astype(np.uint32)
+        idx = np.nonzero(live)
+        untils = self.expiry[idx]
+        self._buckets = {}
+        for u in np.unique(untils).tolist():
+            m = untils == u
+            self._buckets[int(u)] = [tuple(a[m] for a in idx)]
+        self.window = window
+        self.version += 1
+
+    def masks_at(self, window: int) -> np.ndarray:
+        """Packed busy masks as of ``window`` (the live cache — callers
+        must treat the returned array as read-only)."""
+        if window == self.window:
+            return self.masks
+        if window < self.window:
+            self._recompute(window)
+            return self.masks
+        changed = False
+        for u in [u for u in self._buckets if u <= window]:
+            for idx in self._buckets.pop(u):
+                still = self.expiry[idx] <= window
+                if not still.any():      # re-reserved: lives in a later bucket
+                    continue
+                pidx = tuple(a[still] for a in idx[:-1])
+                np.bitwise_and.at(self.masks, pidx,
+                                  ~self._weights[idx[-1][still]])
+                changed = True
+        self.window = window
+        if changed:
+            self.version += 1
+        return self.masks
+
+    def reserve_arrays(self, idx: tuple[np.ndarray, ...], until: int) -> None:
+        """Reserve every ``(*prefix, slot)`` in the index arrays until
+        ``until`` (exclusive), keeping the packed masks in sync."""
+        self.expiry[idx] = until
+        if until > self.window:
+            np.bitwise_or.at(self.masks, idx[:-1], self._weights[idx[-1]])
+        self._buckets.setdefault(int(until), []).append(idx)
+        self.version += 1
+
+
 class SlotTable:
     """Occupancy state of every router port (and NoM-Light vertical buses).
 
@@ -158,26 +293,55 @@ class SlotTable:
     ``w`` iff ``expiry > w`` — conservative for circuits that would start
     after an existing reservation expires, which matches the paper's CCU (it
     services requests in FIFO order against current state).
+
+    The packed busy masks are maintained *incrementally* (bits set on
+    ``reserve``, cleared lazily as the query window advances past each
+    reservation's expiry — see :class:`_PackedExpiry`) and mirrored into a
+    device-resident array (:meth:`device_busy_masks`) that the vectorized
+    wavefront search consumes without a host->device upload per pass.
     """
 
     def __init__(self, mesh: Mesh3D, n_slots: int = 16):
         self.mesh = mesh
         self.n_slots = n_slots
-        self.expiry = np.zeros((mesh.n_nodes, N_PORTS, n_slots), np.int64)
+        self._ports = _PackedExpiry((mesh.n_nodes, N_PORTS), n_slots)
         # One vertical bus resource per (x, y) column (NoM-Light).
-        self.bus_expiry = np.zeros((mesh.X * mesh.Y, n_slots), np.int64)
+        self._bus = _PackedExpiry((mesh.X * mesh.Y,), n_slots)
+        self._dev: jax.Array | None = None
+        self._dev_version = -1
+
+    # The underlying expiry arrays stay addressable under their original
+    # names (tests and telemetry read them directly).
+    @property
+    def expiry(self) -> np.ndarray:
+        return self._ports.expiry
+
+    @property
+    def bus_expiry(self) -> np.ndarray:
+        return self._bus.expiry
 
     # -- masks ---------------------------------------------------------------
     def busy_masks(self, window: int) -> np.ndarray:
         """(n_nodes, N_PORTS) uint32 busy masks as of TDM window `window`."""
-        busy = self.expiry > window
-        weights = (np.uint32(1) << np.arange(self.n_slots, dtype=np.uint32))
-        return (busy * weights).sum(axis=2).astype(np.uint32)
+        return self._ports.masks_at(window).copy()
 
     def bus_busy_masks(self, window: int) -> np.ndarray:
-        busy = self.bus_expiry > window
-        weights = (np.uint32(1) << np.arange(self.n_slots, dtype=np.uint32))
-        return (busy * weights).sum(axis=1).astype(np.uint32)
+        return self._bus.masks_at(window).copy()
+
+    def device_busy_masks(self, window: int) -> jax.Array:
+        """Device-resident twin of :meth:`busy_masks`.
+
+        The occupancy stays on device across search rounds and is
+        re-uploaded only when the incremental cache's version moved — a
+        run of searches against an unchanged table (or with only window
+        advances that expired nothing) pays no host->device transfer at
+        all.  (At this table size — a few KB — one full upload beats a
+        scatter of the changed rows, so a version bump re-uploads.)"""
+        masks = self._ports.masks_at(window)
+        if self._dev is None or self._dev_version != self._ports.version:
+            self._dev = jnp.asarray(masks)
+            self._dev_version = self._ports.version
+        return self._dev
 
     # -- validation -----------------------------------------------------------
     def can_reserve(self, hops: list[tuple[int, int, int]],
@@ -187,27 +351,34 @@ class SlotTable:
         batched scheduler's commit check against circuits reserved after
         the search snapshot was taken."""
         seen: set[tuple[int, int, int]] = set()
+        expiry = self._ports.expiry
         for hop in hops:
             node, port, slot = hop
-            if hop in seen or self.expiry[node, port, slot] > window:
+            if hop in seen or expiry[node, port, slot] > window:
                 return False
             seen.add(hop)
         return True
 
     def can_reserve_bus(self, column: int, slot: int, window: int) -> bool:
-        return bool(self.bus_expiry[column, slot] <= window)
+        return bool(self._bus.expiry[column, slot] <= window)
 
     # -- reservation ----------------------------------------------------------
+    @staticmethod
+    def _hops_idx(hops) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        h = np.asarray(hops, np.int64).reshape(-1, 3)
+        return h[:, 0], h[:, 1], h[:, 2]
+
     def reserve(self, circuit: Circuit, window: int) -> None:
-        until = window + circuit.n_windows
-        for node, port, slot in circuit.hops:
-            assert self.expiry[node, port, slot] <= window, "double booking"
-            self.expiry[node, port, slot] = until
+        idx = self._hops_idx(circuit.hops)
+        assert (self.expiry[idx] <= window).all() \
+            and len(circuit.hops) == len(set(circuit.hops)), "double booking"
+        self._ports.reserve_arrays(idx, window + circuit.n_windows)
 
     def reserve_bus(self, column: int, slot: int, window: int,
                     n_windows: int) -> None:
-        assert self.bus_expiry[column, slot] <= window, "bus double booking"
-        self.bus_expiry[column, slot] = window + n_windows
+        assert self._bus.expiry[column, slot] <= window, "bus double booking"
+        self._bus.reserve_arrays((np.asarray([column]), np.asarray([slot])),
+                                 window + n_windows)
 
     def utilization(self, window: int) -> float:
         return float((self.expiry > window).mean())
@@ -224,7 +395,6 @@ def traceback(vec: np.ndarray, occ: np.ndarray, mesh: Mesh3D, n_slots: int,
     (numpy), ``occ`` the (n_nodes, N_PORTS) busy masks used for the search.
     """
     coords = mesh.coord_array
-    sx, sy, sz = coords[src]
     hops: list[tuple[int, int, int]] = [(dst, PORT_LOCAL, arrival_slot)]
     v, j = int(dst), int(arrival_slot)
     strides = (1, mesh.X, mesh.X * mesh.Y)
@@ -251,6 +421,136 @@ def traceback(vec: np.ndarray, occ: np.ndarray, mesh: Mesh3D, n_slots: int,
                 f"no free upstream at node {v} slot {j} (inconsistent search)")
     hops.reverse()
     return hops
+
+
+def traceback_batch(vecs: np.ndarray, vec_rows: np.ndarray, occ: np.ndarray,
+                    mesh: Mesh3D, n_slots: int, srcs: np.ndarray,
+                    dsts: np.ndarray, arrival_slots: np.ndarray):
+    """Vectorized :func:`traceback` over a batch of (request, slot) jobs.
+
+    Every job walks upstream in lockstep: one iteration per remaining hop,
+    with the per-dimension candidate masks (validity: still displaced from
+    the source along d; feasibility: the upstream busy bit is clear)
+    evaluated for the whole batch at once and the first free dimension
+    selected in the same x->y->z priority order as the serial walk.
+
+    Args:
+      vecs: (R, n_nodes) uint32 converged busy vectors.
+      vec_rows: (J,) row of ``vecs`` each job reads.
+      occ: (n_nodes, N_PORTS) uint32 busy masks the search ran against.
+      srcs, dsts, arrival_slots: (J,) per-job endpoints + arrival slot.
+
+    Returns:
+      ``(hop_nodes, hop_ports, hop_slots, dists, ok)`` where the hop arrays
+      are (J, max_dist+1) with job j's forward hop list in ``[:dists[j]+1]``
+      (last entry = (dst, LOCAL, arrival)), and ``ok[j]`` is False when the
+      walk found no free upstream (infeasible arrival slot — the batched
+      twin of the serial walk's RuntimeError).
+    """
+    J = srcs.size
+    coords = mesh.coord_array
+    dists = np.abs(coords[srcs] - coords[dsts]).sum(1)
+    L = int(dists.max()) + 1 if J else 1
+    hop_n = np.zeros((J, L), np.int64)
+    hop_p = np.zeros((J, L), np.int64)
+    hop_s = np.zeros((J, L), np.int64)
+    rows = np.arange(J)
+    hop_n[rows, dists] = dsts
+    hop_p[rows, dists] = PORT_LOCAL
+    hop_s[rows, dists] = arrival_slots
+    src_c = coords[srcs]                                        # (J, 3)
+    sign = np.sign(coords[dsts] - src_c).astype(np.int64)       # (J, 3)
+    strides = np.asarray([1, mesh.X, mesh.X * mesh.Y], np.int64)
+    dims = np.arange(3)
+    ports = np.where(sign < 0, 2 * dims + 1, 2 * dims)          # (J, 3)
+    v = dsts.astype(np.int64).copy()
+    j = np.asarray(arrival_slots, np.int64).copy()
+    widx = dists - 1                    # next (backward) write position
+    ok = np.ones(J, bool)
+    active = v != srcs
+    while active.any():
+        jp = (j - 1) % n_slots
+        u = np.clip(v[:, None] - sign * strides[None], 0, mesh.n_nodes - 1)
+        valid = (sign != 0) & (coords[v] != src_c)              # (J, 3)
+        busy = vecs[vec_rows[:, None], u] | occ[u, ports]
+        cand = valid & (((busy >> jp[:, None]) & 1) == 0)
+        has = cand.any(1)
+        ok[active & ~has] = False
+        move = np.nonzero(active & has)[0]
+        d = cand[move].argmax(1)        # first free dim: x -> y -> z priority
+        uu = u[move, d]
+        hop_n[move, widx[move]] = uu
+        hop_p[move, widx[move]] = ports[move, d]
+        hop_s[move, widx[move]] = jp[move]
+        v[move] = uu
+        j[move] = jp[move]
+        widx[move] -= 1
+        active = np.zeros(J, bool)
+        active[move] = v[move] != srcs[move]
+    return hop_n, hop_p, hop_s, dists, ok
+
+
+def _hops_list(hop_n, hop_p, hop_s, job: int, length: int):
+    """Forward hop-tuple list of one traceback job (Python ints)."""
+    return list(zip(hop_n[job, :length].tolist(), hop_p[job, :length].tolist(),
+                    hop_s[job, :length].tolist()))
+
+
+_SMALL_TRACE = 24     # below this many jobs the scalar walk wins
+
+
+def _traceback_jobs(vecs, vec_rows, occ, mesh, n_slots, srcs, dsts,
+                    arrival_slots):
+    """Hop lists + feasibility for a batch of (request, slot) jobs.
+
+    Dispatches between the scalar walk (per-job Python, cheaper below
+    ~:data:`_SMALL_TRACE` jobs — e.g. a conflict-scoped re-search round)
+    and :func:`traceback_batch` (lockstep numpy, amortizes over large
+    rounds).  Both produce identical paths: same x->y->z upstream
+    priority, same slot arithmetic.
+
+    Returns ``(hops, ok)`` — per job the forward hop-tuple list (None
+    when infeasible) and the feasibility flag.
+    """
+    J = len(srcs)
+    if J < _SMALL_TRACE:
+        hops: list = []
+        ok = np.ones(J, bool)
+        for k in range(J):
+            try:
+                hops.append(traceback(vecs[vec_rows[k]], occ, mesh, n_slots,
+                                      int(srcs[k]), int(dsts[k]),
+                                      int(arrival_slots[k])))
+            except RuntimeError:
+                hops.append(None)
+                ok[k] = False
+        return hops, ok
+    hop_n, hop_p, hop_s, dists, ok = traceback_batch(
+        vecs, vec_rows, occ, mesh, n_slots, srcs, dsts, arrival_slots)
+    return [_hops_list(hop_n, hop_p, hop_s, k, int(dists[k]) + 1)
+            if ok[k] else None for k in range(J)], ok
+
+
+_FAR = np.int64(2 ** 62)
+
+
+def _best_slots_np(avail: np.ndarray, dists: np.ndarray,
+                   t_readys: np.ndarray, n_slots: int):
+    """Vectorized slot choice: earliest (start_cycle, arrival_slot) over
+    the free arrival slots of each row's availability vector, for circuits
+    of ``dists`` hops ready at ``t_readys``.
+
+    Returns ``(start_cycles, arrival_slots, free, denied)``; ties on the
+    start cycle resolve to the lowest arrival slot, exactly like the
+    serial ascending scan."""
+    slots = np.arange(n_slots, dtype=np.int64)
+    free = ((avail.astype(np.int64)[:, None] >> slots[None, :]) & 1) == 0
+    s_inj = (slots[None, :] - dists[:, None]) % n_slots
+    c = t_readys[:, None] + ((s_inj - t_readys[:, None]) % n_slots)
+    cost = np.where(free, c, _FAR)
+    a = cost.argmin(1)
+    rows = np.arange(len(avail))
+    return cost[rows, a], a, free, ~free.any(1)
 
 
 # ---------------------------------------------------------------------------
@@ -293,23 +593,35 @@ class BatchReport:
     n_denied: int = 0          # no feasible circuit even after re-search
     search_rounds: int = 0     # vectorized wavefront passes issued
     conflicts: int = 0         # stale-snapshot commits that forced a re-search
+    n_searched: int = 0        # per-request searches summed over all passes
+    #   (conflict-scoped re-search keeps this near n_requests; the old
+    #   tail-wide retry made it grow ~quadratically with the tail length)
 
 
 _CONFLICT = object()   # sentinel: stale search, re-run against fresh state
 
 
 @dataclasses.dataclass
-class _Search:
-    """Converged search state for one request (full-mesh NoM)."""
-    occ: np.ndarray
-    vec: np.ndarray
-
-
-def _pow2_pad(n: int) -> int:
-    p = 1
-    while p < n:
-        p *= 2
-    return p
+class _Prepared:
+    """One request's fully prepared commit: slot choice, traced hop
+    bundle and reservation indices, derived from a (possibly stale)
+    converged search.  Everything here is a pure function of the search
+    snapshot, so committing only needs the live-table freshness check."""
+    denied: bool = False
+    conflict: bool = False     # prepared state is unusable: force re-search
+    dup: bool = False          # bundle internally double-books (defensive)
+    src: int = 0
+    dst: int = 0
+    start_cycle: int = 0
+    w_res: int = 0
+    n_win: int = 1
+    slots_per_window: int = 1
+    distance: int = 0
+    hops: list | None = None
+    idx: tuple | None = None           # (nodes, ports, slots) index arrays
+    uses_bus: bool = False
+    bus_column: int = -1
+    bus_slots: list | None = None      # [(column, slot)] (NoM-Light)
 
 
 class TdmAllocator:
@@ -318,13 +630,17 @@ class TdmAllocator:
     The paper's CCU sets up *many* link-disjoint circuits that stream
     concurrently; :meth:`allocate_batch` is the corresponding entry point:
     one vectorized :func:`wavefront_search_batch` pass over every pending
-    request, then a host-side commit loop that reserves circuits in arrival
-    order.  A commit can discover that an earlier circuit from the *same*
-    batch claimed one of its hops (the search snapshot is per-round, not
-    per-request); the loser and everything after it are retried against a
-    fresh search — at later source slots, the paper's increasing-slot
-    fallback — so the results are bit-identical to servicing the stream
-    through :meth:`allocate` one request at a time.
+    request, a *vectorized* post-search pipeline (batch slot choice +
+    :func:`traceback_batch` over every needed arrival slot, extra-slot
+    bundles included), then a host-side commit loop that reserves circuits
+    in arrival order.  A commit can discover that an earlier circuit from
+    the *same* batch claimed one of its hops (the search snapshot is
+    per-round, not per-request); the loser is re-searched against fresh
+    state together with only the still-pending requests whose
+    shortest-path boxes intersect the resources claimed so far —
+    everything else commits from its existing converged vectors — so the
+    results are bit-identical to servicing the stream through
+    :meth:`allocate` one request at a time.
 
     ``allocate`` (the serial spelling) implements the paper's 3-cycle
     setup: the request picked at cycle t searches at t (1 cycle), programs
@@ -339,6 +655,9 @@ class TdmAllocator:
         self.link_bytes = link_bytes  # 64-bit links => 8 bytes/slot-cycle
         self.table = SlotTable(mesh, n_slots)
         self.last_report = BatchReport()
+        # use_pallas routes every search through the kernel (no host
+        # small-batch shortcut), so kernel tests exercise it end to end.
+        self._host_small = not use_pallas
         if use_pallas:  # pragma: no cover - exercised in kernel tests
             from repro.kernels.slot_alloc import ops as _ops
             self._search_batch = partial(_ops.wavefront_search_pallas_batch,
@@ -351,6 +670,12 @@ class TdmAllocator:
     # the bank; no bytes cross the mesh), so its zero-hop circuit holds the
     # LOCAL port for ceil(nbytes / init_row_bytes) windows.
     init_row_bytes: int = 8192
+
+    # Requests searched per vectorized wavefront pass.  The accelerator's
+    # cost is linear in the wave size, so waves cost no extra search time,
+    # and a fresher snapshot per wave keeps stale-commit conflicts flat as
+    # the batch grows (results are bit-identical regardless of the value).
+    search_wave: int = 64
 
     def n_windows_for(self, nbytes: int, slots: int = 1) -> int:
         per_window = self.link_bytes * slots
@@ -374,13 +699,17 @@ class TdmAllocator:
 
         This is the CCU's concurrent circuit establishment (paper Section
         2.2): every request of the batch is searched in one vectorized
-        wavefront pass, then committed in arrival (FIFO) order against the
-        live slot table, so each granted circuit is (router, port, slot)-
-        disjoint from every other circuit live in its TDM windows.  A
-        commit that finds its hops claimed by an earlier commit of the
-        same batch triggers a fresh search for it and everything after it
-        (the paper's increasing-slot fallback) — results are bit-identical
-        to streaming the requests through :meth:`allocate` one at a time.
+        wavefront pass, prepared by the vectorized commit pipeline (batch
+        slot choice + batched trace-back), then committed in arrival
+        (FIFO) order against the live slot table, so each granted circuit
+        is (router, port, slot)-disjoint from every other circuit live in
+        its TDM windows.  A commit that finds its hops claimed by an
+        earlier commit of the same batch triggers a fresh search for it —
+        plus, in the same vectorized pass, any still-pending request whose
+        shortest-path box intersects the claimed resources (the
+        conflict-scoped invalidation); the rest of the batch commits from
+        its existing converged vectors — results are bit-identical to
+        streaming the requests through :meth:`allocate` one at a time.
 
         Args:
           requests: list of :class:`CopyRequest` (or bare
@@ -405,123 +734,274 @@ class TdmAllocator:
                 for r in requests]
         report = BatchReport(n_requests=len(reqs))
         results: list[AllocResult | None] = [None] * len(reqs)
+        if not reqs:
+            self.last_report = report
+            return results
         window = (cycle + 3) // self.n_slots
-        pending = list(range(len(reqs)))
-        while pending:
+        t_readys = np.fromiter(
+            (max(r.cycle if r.cycle is not None else cycle, cycle) + 3
+             for r in reqs), np.int64, len(reqs))
+        # The batch is searched in *waves* (one vectorized pass each): the
+        # accelerator's cost is linear in the wave size, so splitting
+        # costs nothing, while each wave's snapshot already contains every
+        # earlier commit — stale-snapshot conflicts only arise *within* a
+        # wave, which keeps their count flat as the batch grows.
+        #
+        # Within a wave, conflict-scoped invalidation: bitmaps of the
+        # nodes / bus columns claimed by commits since the wave's search.
+        # A pending request whose shortest-path box contains no claimed
+        # resource is *clean*: its converged vectors are provably
+        # identical to a fresh search's, so it commits without even
+        # touching the live table.  A box-hit state is validated against
+        # the live table, and only an actual claim of one of its chosen
+        # hops forces a re-search — of that request alone, on the host
+        # fast path, not the whole tail.  (A state re-searched after a
+        # conflict commits immediately, so the bitmaps never need
+        # per-state sequencing.)
+        n_cols = self.mesh.X * self.mesh.Y
+        for lo in range(0, len(reqs), self.search_wave):
+            hi = min(lo + self.search_wave, len(reqs))
+            wave = reqs[lo:hi]
+            states = self._prepare_states(wave, t_readys[lo:hi], window)
             report.search_rounds += 1
-            states = self._search_states([reqs[i] for i in pending], window)
-            stalled: int | None = None
-            for k, i in enumerate(pending):
-                req = reqs[i]
-                t_ready = max(req.cycle if req.cycle is not None else cycle,
-                              cycle) + 3
-                out = self._commit_one(req, states[k], window, t_ready)
+            report.n_searched += len(wave)
+            in_box, col_box = self._scope_boxes(wave)
+            touched = np.zeros(self.mesh.n_nodes, bool)
+            touched_cols = np.zeros(n_cols, bool)
+            any_nodes = any_cols = False
+            for k, req in enumerate(wave):
+                st = states[k]
+                hit = (any_nodes and bool(np.any(touched & in_box[k]))) or \
+                    (any_cols and col_box is not None
+                     and bool(np.any(touched_cols & col_box[k])))
+                out = self._commit_prepared(st, window, validate=hit)
                 if out is _CONFLICT:
-                    # The snapshot this round searched against went stale
-                    # (an earlier commit claimed a hop).  The very first
-                    # commit of a round can never conflict, so the loop
-                    # always makes progress.
-                    assert k > 0, "fresh search conflicted with itself"
                     report.conflicts += 1
-                    stalled = k
-                    break
-                results[i] = AllocResult(out, cycle)
-                report.n_committed += out is not None
-                report.n_denied += out is None
-            pending = pending[stalled:] if stalled is not None else []
+                    st = self._prepare_states([req],
+                                              t_readys[lo + k:lo + k + 1],
+                                              window)[0]
+                    report.search_rounds += 1
+                    report.n_searched += 1
+                    out = self._commit_prepared(st, window, validate=False)
+                    assert out is not _CONFLICT, \
+                        "fresh search conflicted with itself"
+                if out is None:
+                    report.n_denied += 1
+                else:
+                    report.n_committed += 1
+                    touched[st.idx[0]] = True
+                    any_nodes = True
+                    for col, _s in st.bus_slots or ():
+                        touched_cols[col] = True
+                        any_cols = True
+                results[lo + k] = AllocResult(out, cycle)
         self.last_report = report
         return results
 
-    # -- search (one vectorized pass per round) -------------------------------
-    def _run_search(self, occ: np.ndarray,
-                    entries: list[tuple[int, int, int]]) -> np.ndarray:
-        """Run ``entries`` = [(src, dst, init_vec), ...] through one batched
-        wavefront pass, padded to a power of two so jit retraces stay rare.
-        Returns (len(entries), n_nodes) uint32 busy vectors (numpy)."""
-        pad = _pow2_pad(len(entries))
-        srcs = np.zeros(pad, np.int32)
-        dsts = np.zeros(pad, np.int32)
-        inits = np.zeros(pad, np.uint32)
-        for j, (s, d, iv) in enumerate(entries):
-            srcs[j], dsts[j], inits[j] = s, d, iv
-        vecs = self._search_batch(jnp.asarray(occ), srcs, dsts, inits)
-        return np.asarray(vecs)[:len(entries)]
+    # -- conflict scoping -----------------------------------------------------
+    def _scope_boxes(self, reqs):
+        """Per-request membership masks for the conservative invalidation
+        test: ``in_box[i, v]`` iff node v lies in request i's
+        shortest-path box.  The second return is the bus-column twin for
+        cross-layer NoM-Light routes (None on the full mesh, which has no
+        shared vertical-bus resource)."""
+        coords = self.mesh.coord_array
+        srcs = np.fromiter((r.src for r in reqs), np.int64, len(reqs))
+        dsts = np.fromiter((r.dst for r in reqs), np.int64, len(reqs))
+        sc, dc = coords[srcs], coords[dsts]
+        lo = np.minimum(sc, dc)
+        hi = np.maximum(sc, dc)
+        in_box = np.ones((len(reqs), self.mesh.n_nodes), bool)
+        for d in range(3):
+            cd = coords[:, d]
+            in_box &= (cd[None] >= lo[:, d:d + 1]) \
+                & (cd[None] <= hi[:, d:d + 1])
+        return in_box, None
 
-    def _search_states(self, reqs: list[CopyRequest],
-                       window: int) -> list[_Search]:
-        occ = self.table.busy_masks(window)
-        vecs = self._run_search(occ, [(r.src, r.dst, 0) for r in reqs])
-        return [_Search(occ=occ, vec=vecs[j]) for j in range(len(reqs))]
+    # -- search + vectorized post-search pipeline -----------------------------
+    def _run_search(self, occ, window, srcs, dsts, inits) -> np.ndarray:
+        """One wavefront pass over ``srcs``/``dsts``/``inits`` (numpy
+        arrays) against the host busy masks ``occ`` valid at ``window``.
 
-    # -- commit (host-side, arrival order) ------------------------------------
-    def _best_slot(self, avail: int, dist: int, t_ready: int):
-        """Earliest (start_cycle, arrival_slot) over the free arrival slots
-        of ``avail`` for a circuit of ``dist`` hops."""
+        Large batches ride the accelerator (one vectorized pass over the
+        device-resident occupancy, padded to a power of two so jit
+        retraces stay rare); at or below :data:`_SMALL_SEARCH` requests —
+        a conflict-scoped re-search round, a serial ``allocate`` — the
+        host topological evaluation is cheaper than the dispatch.
+        Returns (len(srcs), n_nodes) uint32 busy vectors (numpy)."""
+        m = len(srcs)
+        if self._host_small and m <= _SMALL_SEARCH:
+            return np.stack([
+                _wavefront_host(occ, self.mesh, self.n_slots, int(s),
+                                int(d), int(iv))
+                for s, d, iv in zip(srcs, dsts, inits)])
+        occ_dev = self.table.device_busy_masks(window)
+        pad = _pow2_pad(m)
+        s = np.zeros(pad, np.int32)
+        d = np.zeros(pad, np.int32)
+        iv = np.zeros(pad, np.uint32)
+        s[:m], d[:m], iv[:m] = srcs, dsts, inits
+        vecs = self._search_batch(occ_dev, s, d, iv)
+        return np.asarray(vecs)[:m]
+
+    def _prepare_states(self, reqs: list[CopyRequest], t_readys: np.ndarray,
+                        window: int) -> list[_Prepared]:
+        if not reqs:
+            return []
+        occ = self.table._ports.masks_at(window)
+        srcs = np.fromiter((r.src for r in reqs), np.int64, len(reqs))
+        dsts = np.fromiter((r.dst for r in reqs), np.int64, len(reqs))
+        vecs = self._run_search(occ, window, srcs, dsts,
+                                np.zeros(len(reqs), np.uint32))
+        return self._prepare_full(reqs, t_readys, vecs,
+                                  np.arange(len(reqs)), occ, window,
+                                  srcs=srcs, dsts=dsts)
+
+    def _prepare_one(self, r: CopyRequest, t_ready: int, vec: np.ndarray,
+                     occ: np.ndarray, window: int) -> _Prepared:
+        """Scalar spelling of :meth:`_prepare_full` for a single request —
+        the conflict re-search / serial-allocate fast path (same slot
+        choice, same trace-back order, same bundle assembly)."""
+        n = self.n_slots
+        avail = int(vec[r.dst]) | int(occ[r.dst, PORT_LOCAL])
+        dist = self.mesh.manhattan(r.src, r.dst)
         best = None
-        for a in range(self.n_slots):
-            if not bit_is_free(avail, a):
+        for a in range(n):
+            if (avail >> a) & 1:
                 continue
-            s = (a - dist) % self.n_slots
-            # earliest injection cycle >= t_ready with cycle % n == s
-            c = t_ready + ((s - t_ready) % self.n_slots)
+            s = (a - dist) % n
+            c = t_ready + ((s - t_ready) % n)
             if best is None or c < best[0]:
                 best = (c, a)
-        return best
-
-    def _commit_one(self, req: CopyRequest, st: _Search, window: int,
-                    t_ready: int):
-        """Reserve the earliest circuit for ``req`` from its search state.
-        Returns the Circuit, None (mesh saturated), or _CONFLICT when the
-        state predates a commit that claimed one of the chosen hops.
-
-        Validation runs against the snapshot ``window`` (conservative: it
-        is never later than the request's own window), but the reservation
-        anchors at the request's ``t_ready`` window so a cycle-anchored
-        request holds its slots for its actual streaming interval — exactly
-        what serial ``allocate`` at that cycle would reserve."""
-        occ, vec = st.occ, st.vec
-        w_res = t_ready // self.n_slots
-        avail = int(vec[req.dst]) | int(occ[req.dst, PORT_LOCAL])
-        dist = self.mesh.manhattan(req.src, req.dst)
-        best = self._best_slot(avail, dist, t_ready)
         if best is None:
-            return None
-        start_cycle, a = best
-        hops = traceback(vec, occ, self.mesh, self.n_slots, req.src, req.dst,
-                         a)
-        # Optionally accelerate with extra free slots (paper Section 2.1).
-        # INIT never streams over links, so extra slots cannot help it.
-        extra = 0
-        if req.max_extra_slots and req.op != "init":
-            for a2 in range(self.n_slots):
-                if extra >= req.max_extra_slots:
+            return _Prepared(denied=True, src=r.src, dst=r.dst)
+        start, a = best
+        hops = traceback(vec, occ, self.mesh, n, r.src, r.dst, a)
+        k = 1
+        if r.max_extra_slots and r.op != "init":
+            for a2 in range(n):
+                if k >= 1 + r.max_extra_slots:
                     break
-                if a2 != a and bit_is_free(avail, a2):
-                    try:
-                        hops2 = traceback(vec, occ, self.mesh, self.n_slots,
-                                          req.src, req.dst, a2)
-                    except RuntimeError:
-                        continue
-                    hops = hops + hops2
-                    extra += 1
-        if not self.table.can_reserve(hops, window):
+                if a2 == a or not bit_is_free(avail, a2):
+                    continue
+                try:
+                    hops = hops + traceback(vec, occ, self.mesh, n, r.src,
+                                            r.dst, a2)
+                except RuntimeError:
+                    continue
+                k += 1
+        n_win = (self.n_windows_for_init(r.nbytes) if r.op == "init"
+                 else self.n_windows_for(r.nbytes, slots=k))
+        return _Prepared(
+            src=r.src, dst=r.dst, start_cycle=start, w_res=t_ready // n,
+            n_win=n_win, slots_per_window=k, distance=dist, hops=hops,
+            idx=SlotTable._hops_idx(hops))
+
+    def _prepare_full(self, reqs, t_readys, vecs, rows, occ, window,
+                      srcs=None, dsts=None) -> list[_Prepared]:
+        """The full-mesh post-search pipeline over one round's converged
+        vectors: vectorized slot choice, batched trace-back of the chosen
+        arrival slot *and* every extra-slot candidate, bundle assembly."""
+        n = self.n_slots
+        B = len(reqs)
+        if B == 1:
+            return [self._prepare_one(reqs[0], int(t_readys[0]),
+                                      vecs[int(rows[0])], occ, window)]
+        coords = self.mesh.coord_array
+        if srcs is None:
+            srcs = np.fromiter((r.src for r in reqs), np.int64, B)
+            dsts = np.fromiter((r.dst for r in reqs), np.int64, B)
+        dists = np.abs(coords[srcs] - coords[dsts]).sum(1)
+        avail = vecs[rows, dsts] | occ[dsts, PORT_LOCAL]
+        starts, arr, free, denied = _best_slots_np(avail, dists, t_readys, n)
+        want = np.fromiter(
+            (0 if (r.op == "init" or denied[k]) else r.max_extra_slots
+             for k, r in enumerate(reqs)), np.int64, B)
+        main_rows = np.nonzero(~denied)[0]
+        slots_ix = np.arange(n, dtype=np.int64)
+        er, ec = np.nonzero(free & (want > 0)[:, None]
+                            & (slots_ix[None, :] != arr[:, None]))
+        job_req = np.concatenate([main_rows, er])
+        job_slot = np.concatenate([arr[main_rows], ec])
+        jobs_hops, ok = _traceback_jobs(
+            vecs, rows[job_req], occ, self.mesh, n,
+            srcs[job_req], dsts[job_req], job_slot)
+        main_pos = {int(r): k for k, r in enumerate(main_rows)}
+        states: list[_Prepared] = []
+        n_main = len(main_rows)
+        epos = 0                   # cursor into the extra jobs (row-major)
+        for i, r in enumerate(reqs):
+            if denied[i]:
+                states.append(_Prepared(denied=True, src=r.src, dst=r.dst))
+                continue
+            mj = main_pos[i]
+            if not ok[mj]:
+                raise RuntimeError(
+                    f"no free upstream for request {r.src}->{r.dst} "
+                    f"slot {int(arr[i])} (inconsistent search)")
+            hops = jobs_hops[mj]
+            k = 1
+            while epos < len(er) and er[epos] == i:
+                jid = n_main + epos
+                if k < 1 + want[i] and ok[jid]:
+                    hops = hops + jobs_hops[jid]
+                    k += 1
+                epos += 1
+            # A shortest-path bundle cannot double-book itself: nodes are
+            # distinct along one path, and two paths at the same (node,
+            # port) sit at the same distance from dst, so distinct arrival
+            # slots give distinct slots there — no dup check needed.
+            n_win = (self.n_windows_for_init(r.nbytes) if r.op == "init"
+                     else self.n_windows_for(r.nbytes, slots=k))
+            states.append(_Prepared(
+                src=r.src, dst=r.dst, start_cycle=int(starts[i]),
+                w_res=int(t_readys[i]) // n, n_win=n_win, slots_per_window=k,
+                distance=int(dists[i]), hops=hops,
+                idx=SlotTable._hops_idx(hops)))
+        return states
+
+    # -- commit (host-side, arrival order) ------------------------------------
+    def _commit_prepared(self, st: _Prepared, window: int,
+                         validate: bool = True):
+        """Reserve one prepared circuit against the live table.  Returns
+        the Circuit, None (mesh saturated), or _CONFLICT when a commit
+        made after the state's search claimed one of its resources.
+
+        ``validate=False`` skips the live-table freshness check — sound
+        when the state is *clean* (no resource claimed since its search
+        intersects its shortest-path box, so its chosen hops are
+        untouched) or freshly re-searched.  Validation runs against the
+        snapshot ``window`` (conservative: it is never later than the
+        request's own window), but the reservation anchors at the
+        request's ready window (``w_res``) so a cycle-anchored request
+        holds its slots for its actual streaming interval — exactly what
+        serial ``allocate`` at that cycle would reserve."""
+        if st.denied:
+            return None
+        if st.conflict or st.dup:
             return _CONFLICT
-        n_win = (self.n_windows_for_init(req.nbytes) if req.op == "init"
-                 else self.n_windows_for(req.nbytes, slots=1 + extra))
-        circ = Circuit(src=req.src, dst=req.dst, start_cycle=start_cycle,
-                       n_windows=n_win, hops=hops, slots_per_window=1 + extra,
-                       distance=dist, _n_slots_hint=self.n_slots)
-        self.table.reserve(circ, w_res)
-        return circ
-
-
-@dataclasses.dataclass
-class _SearchLight(_Search):
-    """Cross-layer NoM-Light search state: two phase orders, shared bus."""
-    bus: np.ndarray = None
-    w: int = -1                # order A: XY target on the source layer
-    w2: int = -1               # order B: bus landing on the dest layer
-    vec_b: np.ndarray = None   # order B converged vectors (vec is order A)
+        table = self.table
+        if validate:
+            if (table.expiry[st.idx] > window).any():
+                return _CONFLICT
+            if st.bus_slots:
+                for col, bslot in st.bus_slots:
+                    if table.bus_expiry[col, bslot] > window:
+                        return _CONFLICT
+        else:
+            # Backstop for the analytical clean-commit invariant: a chosen
+            # hop outside a request's shortest-path box (impossible today)
+            # must fail loudly, not silently double-book.
+            assert (table.expiry[st.idx] <= window).all(), "double booking"
+        table._ports.reserve_arrays(st.idx, st.w_res + st.n_win)
+        if st.bus_slots:
+            for col, bslot in st.bus_slots:
+                table.reserve_bus(col, bslot, st.w_res, st.n_win)
+        return Circuit(src=st.src, dst=st.dst, start_cycle=st.start_cycle,
+                       n_windows=st.n_win, hops=st.hops,
+                       slots_per_window=st.slots_per_window,
+                       uses_bus=st.uses_bus, bus_column=st.bus_column,
+                       distance=st.distance, _n_slots_hint=self.n_slots)
 
 
 class TdmAllocatorLight(TdmAllocator):
@@ -531,109 +1011,174 @@ class TdmAllocatorLight(TdmAllocator):
 
     Routes are XY-monotone on one layer plus at most one bus hop.  We search
     both phase orders (XY-then-bus, bus-then-XY) — both ride the same
-    vectorized pass as the rest of the batch — and keep the earlier."""
+    vectorized pass as the rest of the batch — and keep the earlier.  The
+    post-search pipeline is shared with the full-mesh allocator: same-layer
+    requests go through :meth:`_prepare_full` unchanged, and cross-layer
+    requests batch every candidate arrival slot of both phase orders
+    through the same :func:`traceback_batch` call."""
 
-    def _search_states(self, reqs, window):
+    def _scope_boxes(self, reqs):
+        """Adds the bus-column membership masks: a claimed vertical-bus
+        column invalidates a cross-layer request whose XY box contains it
+        (the bus hop could have ridden it).  Same-layer requests never use
+        the bus, so their column mask is empty."""
+        in_box, _ = super()._scope_boxes(reqs)
+        mesh = self.mesh
+        coords = mesh.coord_array
+        sc = coords[[r.src for r in reqs]]
+        dc = coords[[r.dst for r in reqs]]
+        lo = np.minimum(sc, dc)
+        hi = np.maximum(sc, dc)
+        cross = sc[:, 2] != dc[:, 2]
+        cols = np.arange(mesh.X * mesh.Y)
+        cx, cy = cols % mesh.X, cols // mesh.X
+        col_box = (cross[:, None]
+                   & (cx[None] >= lo[:, :1]) & (cx[None] <= hi[:, :1])
+                   & (cy[None] >= lo[:, 1:2]) & (cy[None] <= hi[:, 1:2]))
+        return in_box, col_box
+
+    def _prepare_states(self, reqs, t_readys, window):
+        if not reqs:
+            return []
         mesh, n = self.mesh, self.n_slots
-        occ = self.table.busy_masks(window)
-        bus = self.table.bus_busy_masks(window)
-        entries: list[tuple[int, int, int]] = []
-        metas = []
+        occ = self.table._ports.masks_at(window)
+        bus = self.table._bus.masks_at(window)
+        coords = mesh.coord_array
+        # One search entry per same-layer request; two (order A: src->w on
+        # the source layer; order B: w2->dst on the dest layer, injected
+        # through the source column's bus availability) per cross-layer one.
+        e_src, e_dst, e_init = [], [], []
+        meta = []                 # per request: row (same-layer) | (rowA, rowB)
         for r in reqs:
-            sx, sy, sz = mesh.coords(r.src)
-            dx, dy, dz = mesh.coords(r.dst)
+            sx, sy, sz = coords[r.src]
+            dx, dy, dz = coords[r.dst]
             if sz == dz:
-                metas.append((len(entries), None, None))
-                entries.append((r.src, r.dst, 0))
+                meta.append(int(len(e_src)))
+                e_src.append(r.src)
+                e_dst.append(r.dst)
+                e_init.append(0)
             else:
-                w = mesh.node_id(dx, dy, sz)     # order A: XY first
-                w2 = mesh.node_id(sx, sy, dz)    # order B: bus first
+                w = mesh.node_id(int(dx), int(dy), int(sz))   # A: XY first
+                w2 = mesh.node_id(int(sx), int(sy), int(dz))  # B: bus first
                 init = rotr_np(np.uint32(int(bus[mesh.column_of(r.src)])), n)
-                metas.append((len(entries), w, w2))
-                entries.append((r.src, w, 0))
-                entries.append((w2, r.dst, int(init)))
-        vecs = self._run_search(occ, entries)
-        states = []
-        for j, w, w2 in metas:
-            if w is None:
-                states.append(_Search(occ=occ, vec=vecs[j]))
-            else:
-                states.append(_SearchLight(occ=occ, vec=vecs[j], bus=bus,
-                                           w=w, w2=w2, vec_b=vecs[j + 1]))
-        return states
+                meta.append((len(e_src), w, w2))
+                e_src += [r.src, w2]
+                e_dst += [w, r.dst]
+                e_init += [0, int(init)]
+        vecs = self._run_search(occ, window, np.asarray(e_src, np.int64),
+                                np.asarray(e_dst, np.int64),
+                                np.asarray(e_init, np.uint32))
+        # Same-layer subset: the full-mesh pipeline on its own vec rows.
+        same_ix = [i for i, m in enumerate(meta) if isinstance(m, int)]
+        same_states = iter(self._prepare_full(
+            [reqs[i] for i in same_ix], t_readys[same_ix], vecs,
+            np.asarray([meta[i] for i in same_ix], np.int64), occ, window,
+            ) if same_ix else [])
 
-    def _commit_one(self, req, st, window, t_ready):
-        if not isinstance(st, _SearchLight):   # same-layer: full-mesh rules
-            return super()._commit_one(req, st, window, t_ready)
+        # Cross-layer subset, vectorized over requests.
+        cross_ix = [i for i, m in enumerate(meta) if not isinstance(m, int)]
+        cross = self._prepare_cross(reqs, t_readys, meta, cross_ix, vecs,
+                                    occ, bus, window)
+        return [next(same_states) if isinstance(m, int) else cross[i]
+                for i, m in enumerate(meta)]
+
+    def _prepare_cross(self, reqs, t_readys, meta, cross_ix, vecs, occ, bus,
+                       window) -> dict[int, _Prepared]:
         mesh, n = self.mesh, self.n_slots
-        w_res = t_ready // n
-        occ, bus = st.occ, st.bus
-        vecA, vecB, w, w2 = st.vec, st.vec_b, st.w, st.w2
-        sx, sy, _sz = mesh.coords(req.src)
-        dx, dy, _dz = mesh.coords(req.dst)
-        dist_xy = abs(sx - dx) + abs(sy - dy)
-
-        availA = rotr_np(np.uint32(int(vecA[w]) | int(bus[mesh.column_of(w)])),
-                         n)
-        availA = int(availA) | int(occ[req.dst, PORT_LOCAL])
-        availB = int(vecB[req.dst]) | int(occ[req.dst, PORT_LOCAL])
-
-        total_hops = dist_xy + 1  # bus counts as one slot regardless of layers
-        best = None  # (start_cycle, arrival_slot, order)
-        for order, avail in (("A", availA), ("B", availB)):
-            got = self._best_slot(avail, total_hops, t_ready)
-            if got is not None and (best is None or got[0] < best[0]):
-                best = (got[0], got[1], order)
-        if best is None:
-            return None
-        start_cycle, a0, order = best
-
-        def hops_for(order: str, a: int):
-            """Hop list + bus (column, slot) for an arrival slot, or None."""
-            if order == "A":
-                bus_slot = (a - 1) % n
-                try:
-                    hops_xy = (traceback(vecA, occ, mesh, n, req.src, w,
-                                         bus_slot)[:-1] if dist_xy else [])
-                except RuntimeError:
-                    return None
-                return (hops_xy + [(req.dst, PORT_LOCAL, a)],
-                        (mesh.column_of(w), bus_slot))
-            s = (a - total_hops) % n              # injection slot = bus slot
-            try:
-                hops_xy = (traceback(vecB, occ, mesh, n, w2, req.dst, a)
-                           if dist_xy else [(req.dst, PORT_LOCAL, a)])
-            except RuntimeError:
-                return None
-            return hops_xy, (mesh.column_of(req.src), s)
-
-        # Bundle extra free slots to accelerate the transfer (Section 2.1).
-        picked = []
-        avail = availA if order == "A" else availB
-        for a in [a0] + [x for x in range(n) if x != a0]:
-            if len(picked) >= 1 + req.max_extra_slots:
-                break
-            if not bit_is_free(avail, a):
+        out: dict[int, _Prepared] = {}
+        if not cross_ix:
+            return out
+        coords = mesh.coord_array
+        B = len(cross_ix)
+        srcs = np.fromiter((reqs[i].src for i in cross_ix), np.int64, B)
+        dsts = np.fromiter((reqs[i].dst for i in cross_ix), np.int64, B)
+        rowsA = np.fromiter((meta[i][0] for i in cross_ix), np.int64, B)
+        w_nodes = np.fromiter((meta[i][1] for i in cross_ix), np.int64, B)
+        w2_nodes = np.fromiter((meta[i][2] for i in cross_ix), np.int64, B)
+        dist_xy = (np.abs(coords[srcs][:, :2] - coords[dsts][:, :2])).sum(1)
+        total = dist_xy + 1       # bus = one slot regardless of layer count
+        colw = np.fromiter((mesh.column_of(int(w)) for w in w_nodes),
+                           np.int64, B)
+        cols = np.fromiter((mesh.column_of(int(s)) for s in srcs),
+                           np.int64, B)
+        t_sub = t_readys[cross_ix]
+        availA = (rotr_np(vecs[rowsA, w_nodes] | bus[colw], n)
+                  | occ[dsts, PORT_LOCAL])
+        availB = vecs[rowsA + 1, dsts] | occ[dsts, PORT_LOCAL]
+        cA, aA, freeA, denA = _best_slots_np(availA, total, t_sub, n)
+        cB, aB, freeB, denB = _best_slots_np(availB, total, t_sub, n)
+        useB = cB < cA            # strict: order A wins ties, as the serial scan
+        a0 = np.where(useB, aB, aA)
+        starts = np.where(useB, cB, cA)
+        denied = denA & denB
+        free = np.where(useB[:, None], freeB, freeA)
+        # Candidate arrival slots per request: the chosen slot first, then
+        # every other free slot ascending (the serial bundle order);
+        # trace-back jobs only exist for XY distance > 0.
+        jobs_src, jobs_dst, jobs_slot, jobs_row = [], [], [], []
+        cand_jobs: list[list] = []   # per request: [(slot, job_id | None)]
+        for k in range(B):
+            cands = []
+            if not denied[k]:
+                # Every free slot stays a candidate (chosen slot first, the
+                # rest ascending): a trace-back can fail on any of them, and
+                # the bundle takes the first 1+max_extra that succeed.
+                order = [int(a0[k])] + [s for s in range(n)
+                                        if s != a0[k] and free[k, s]]
+                for a in order:
+                    jid = None
+                    if dist_xy[k]:
+                        jid = len(jobs_src)
+                        if useB[k]:
+                            jobs_src.append(int(w2_nodes[k]))
+                            jobs_dst.append(int(dsts[k]))
+                            jobs_slot.append(a)
+                            jobs_row.append(int(rowsA[k] + 1))
+                        else:
+                            jobs_src.append(int(srcs[k]))
+                            jobs_dst.append(int(w_nodes[k]))
+                            jobs_slot.append((a - 1) % n)
+                            jobs_row.append(int(rowsA[k]))
+                    cands.append((a, jid))
+            cand_jobs.append(cands)
+        jobs_hops, ok = _traceback_jobs(
+            vecs, np.asarray(jobs_row, np.int64), occ, mesh, n,
+            np.asarray(jobs_src, np.int64), np.asarray(jobs_dst, np.int64),
+            np.asarray(jobs_slot, np.int64))
+        for k, i in enumerate(cross_ix):
+            r = reqs[i]
+            if denied[k]:
+                out[i] = _Prepared(denied=True, src=r.src, dst=r.dst)
                 continue
-            got = hops_for(order, a)
-            if got is not None:
-                picked.append(got)
-        if not picked:
-            return _CONFLICT
-        hops = [h for hs, _bus in picked for h in hs]
-        bus_slots = [b for _h, b in picked]
-        if (not self.table.can_reserve(hops, window)
-                or len({b for b in bus_slots}) < len(bus_slots)
-                or not all(self.table.can_reserve_bus(col, bslot, window)
-                           for col, bslot in bus_slots)):
-            return _CONFLICT
-        n_win = self.n_windows_for(req.nbytes, slots=len(picked))
-        circ = Circuit(src=req.src, dst=req.dst, start_cycle=start_cycle,
-                       n_windows=n_win, hops=hops,
-                       slots_per_window=len(picked), uses_bus=True,
-                       bus_column=picked[0][1][0], distance=total_hops,
-                       _n_slots_hint=n)
-        self.table.reserve(circ, w_res)
-        for col, bslot in bus_slots:
-            self.table.reserve_bus(col, bslot, w_res, n_win)
-        return circ
+            picked = []           # [(hops, (bus_col, bus_slot))]
+            for a, jid in cand_jobs[k]:
+                if len(picked) >= 1 + r.max_extra_slots:
+                    break
+                if jid is not None and not ok[jid]:
+                    continue
+                if useB[k]:
+                    hops = (jobs_hops[jid] if jid is not None
+                            else [(int(dsts[k]), PORT_LOCAL, a)])
+                    buspair = (int(cols[k]), (a - int(total[k])) % n)
+                else:
+                    hops_xy = (jobs_hops[jid][:-1] if jid is not None else [])
+                    hops = hops_xy + [(int(dsts[k]), PORT_LOCAL, a)]
+                    buspair = (int(colw[k]), (a - 1) % n)
+                picked.append((hops, buspair))
+            if not picked:
+                out[i] = _Prepared(conflict=True, src=r.src, dst=r.dst)
+                continue
+            hops = [h for hs, _b in picked for h in hs]
+            bus_slots = [b for _h, b in picked]
+            idx = SlotTable._hops_idx(hops)
+            keys = (idx[0] * N_PORTS + idx[1]) * n + idx[2]
+            dup = (np.unique(keys).size < keys.size
+                   or len({b for b in bus_slots}) < len(bus_slots))
+            out[i] = _Prepared(
+                src=r.src, dst=r.dst, start_cycle=int(starts[k]),
+                w_res=int(t_sub[k]) // n,
+                n_win=self.n_windows_for(r.nbytes, slots=len(picked)),
+                slots_per_window=len(picked), distance=int(total[k]),
+                hops=hops, idx=idx, dup=dup, uses_bus=True,
+                bus_column=picked[0][1][0], bus_slots=bus_slots)
+        return out

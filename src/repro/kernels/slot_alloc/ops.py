@@ -1,5 +1,14 @@
 """jit'd wrapper matching the core allocator contract: packed-uint32 in,
-packed-uint32 out; the kernel works on int32 bit-planes internally."""
+packed-uint32 out; the kernel works on int32 bit-planes internally.
+
+Post-search contract (PR 5): ``TdmAllocator(use_pallas=True)`` feeds this
+batch entry the same inputs as the jit path — ``occ_packed`` may be the
+table's *device-resident* occupancy (`SlotTable.device_busy_masks`), and
+the returned vectors flow through the same vectorized commit pipeline
+(batch slot choice, ``traceback_batch``, conflict-scoped re-search).
+With ``use_pallas=True`` every search rides the kernel — the host
+small-batch shortcut is disabled so kernel tests exercise it end to end.
+"""
 from __future__ import annotations
 
 from functools import partial

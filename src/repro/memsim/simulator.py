@@ -26,7 +26,7 @@ from collections import defaultdict
 
 import numpy as np
 
-from repro.core.fabric import AdmissionQueue, NomFabric
+from repro.core.fabric import AdmissionQueue, FabricOverflow, NomFabric
 from repro.core.slot_alloc import CopyRequest, TdmAllocator, TdmAllocatorLight
 from repro.core.topology import Mesh3D
 
@@ -148,8 +148,14 @@ class MemorySystem:
         self.init_bytes = 0            # bytes zeroed in-DRAM (no column I/O)
         # stats for the TSV dual-use analysis (NoM-Light motivation)
         self.nom_vertical_cycles = 0
-        # concurrent-transfer telemetry: circuits in flight per TDM window
-        self.window_inflight: dict[int, int] = defaultdict(int)
+        # Concurrent-transfer telemetry: circuits in flight per TDM window.
+        # Only windows at or past the live-circuit horizon stay in the
+        # dict; fully-past windows are folded into the _inflight_* stats
+        # by _prune_inflight so a long run's footprint stays bounded.
+        self.window_inflight: dict[int, int] = {}
+        self._inflight_sum = 0         # pruned windows: sum of counts
+        self._inflight_windows = 0     # pruned windows: non-empty count
+        self._inflight_max = 0         # pruned windows: peak count
         self.nom_alloc_conflicts = 0   # stale-search commit retries
         self.nom_setup_retries = 0     # saturated-mesh re-allocations
         self.nom_batches = 0
@@ -165,6 +171,48 @@ class MemorySystem:
         v = self.mesh.vault_of(bank)
         local = self.mesh.banks_of_vault(v).index(bank)
         return self.vaults[v], local
+
+    # -- window-inflight bookkeeping ------------------------------------------
+    def _record_inflight(self, spans: list[tuple[int, int]]) -> None:
+        """Fold one batch's ``(start_window, n_windows)`` spans into the
+        per-window concurrency map with a single difference-array pass
+        instead of one dict update per (circuit, window)."""
+        if not spans:
+            return
+        w0 = min(s for s, _n in spans)
+        w1 = max(s + n for s, n in spans)
+        diff = np.zeros(w1 - w0 + 1, np.int64)
+        for s, n in spans:
+            diff[s - w0] += 1
+            diff[s - w0 + n] -= 1
+        counts = np.cumsum(diff[:-1])
+        get = self.window_inflight.get
+        for off in np.nonzero(counts)[0].tolist():
+            w = w0 + off
+            self.window_inflight[w] = get(w, 0) + int(counts[off])
+
+    def _prune_inflight(self, horizon_w: int) -> None:
+        """Drop windows strictly before ``horizon_w`` — the CCU pickup
+        horizon is monotone, so nothing can increment or query them again
+        — folding their counts into the running stats so the reported
+        telemetry is unchanged while the map stays bounded."""
+        stale = [w for w in self.window_inflight if w < horizon_w]
+        for w in stale:
+            n = self.window_inflight.pop(w)
+            if n > 0:
+                self._inflight_sum += n
+                self._inflight_windows += 1
+                self._inflight_max = max(self._inflight_max, n)
+
+    def inflight_stats(self) -> tuple[float, int]:
+        """(mean over non-empty TDM windows, peak) concurrent circuits,
+        pruned and live windows combined — exactly what a full
+        ``window_inflight`` map would report."""
+        live = [n for n in self.window_inflight.values() if n > 0]
+        total = self._inflight_sum + sum(live)
+        count = self._inflight_windows + len(live)
+        peak = max([self._inflight_max] + live)
+        return (total / count if count else 0.0), peak
 
     def line_access(self, at: int, bank: int, row: int, is_write: bool,
                     priority: bool = False, offchip: bool = True) -> int:
@@ -270,6 +318,9 @@ class MemorySystem:
         self.ccu.busy_until = pick0 + 3 + (len(items) - 1)
         self.nom_batches += 1
         self.nom_batched_reqs += len(items)
+        # The pickup horizon is monotone across batches, so every window
+        # before it is settled history — fold it out of the live map.
+        self._prune_inflight((pick0 + 3) // p.n_slots)
         # 2) source reads (row-granularity into the bank's CS buffer) via
         #    the high-priority copy queue.  An INIT has no source read:
         #    the CCU issues an in-bank RowClone-FPM zero, and its zero-hop
@@ -303,7 +354,7 @@ class MemorySystem:
                         else self.alloc.n_windows_for(rq.nbytes, slots=1)) + 1
                 w = (rq.cycle + 3) // p.n_slots
                 for _ in range(4096):   # bounded: circuits always expire
-                    if all(self.window_inflight[u] + planned[u]
+                    if all(self.window_inflight.get(u, 0) + planned[u]
                            < p.nom_max_inflight
                            for u in range(w, w + span)):
                         break
@@ -316,6 +367,7 @@ class MemorySystem:
         results, report = self.fabric.schedule(reqs, cycle=batch_cycle)
         self.nom_alloc_conflicts += report.conflicts
         dones = []
+        spans: list[tuple[int, int]] = []
         for rq, res, (_at, r) in zip(reqs, results, items):
             tries = 0
             while res.circuit is None and tries < 64:
@@ -325,10 +377,24 @@ class MemorySystem:
                 (res,), _rep = self.fabric.schedule(
                     [retry], cycle=rq.cycle + tries * p.n_slots)
             c = res.circuit
-            assert c is not None, "NoM mesh persistently saturated"
+            if c is None:
+                self._record_inflight(spans)
+                err = FabricOverflow(
+                    f"NoM mesh persistently saturated: no circuit for "
+                    f"{r.op.name} {rq.src}->{rq.dst} ({rq.nbytes}B) after "
+                    f"{tries} retry windows from cycle {rq.cycle}")
+                err.request = r
+                err.retries = tries
+                err.telemetry = {
+                    "queue_depth": self.ccu.depth,
+                    "queue_stall_cycles": self.ccu.stall_cycles,
+                    "setup_retries": self.nom_setup_retries,
+                    "table_utilization": self.alloc.table.utilization(
+                        (rq.cycle + 3) // p.n_slots),
+                }
+                raise err
             w_start = c.start_cycle // p.n_slots   # actual streaming window
-            for w in range(w_start, w_start + c.n_windows):
-                self.window_inflight[w] += 1
+            spans.append((w_start, c.n_windows))
             if rq.op == "init":
                 # Zero-hop circuit: the bank clears rows internally
                 # (RowClone-FPM) while the circuit holds its LOCAL port;
@@ -367,6 +433,7 @@ class MemorySystem:
             # 4) destination write via the copy queue.
             dvc, db = self._vault_bank(r.dst_bank)
             dones.append(dvc.bank_row_op(xfer_done, db, t.tRCD + t.tWR))
+        self._record_inflight(spans)
         return dones
 
 
@@ -470,7 +537,7 @@ def simulate(reqs: list[Request], p: SimParams, name: str = "") -> SimResult:
     # the observation motivating NoM-Light (Section 2.3).
     conflict = (sys.nom_vertical_cycles / max(cycles, 1)) * tsv_frac
     hit = float(np.mean([v.row_hit_rate for v in sys.vaults]))
-    inflight = [n for n in sys.window_inflight.values() if n > 0]
+    inflight_avg, inflight_max = sys.inflight_stats()
     extra = {}
     if p.config != "conventional":
         # In-DRAM zeroing (RowClone-FPM): rows cleared (charged e_init_row
@@ -480,8 +547,8 @@ def simulate(reqs: list[Request], p: SimParams, name: str = "") -> SimResult:
         extra["init_bytes"] = sys.init_bytes
     if nom:
         extra |= {
-            "nom_inflight_avg": float(np.mean(inflight)) if inflight else 0.0,
-            "nom_inflight_max": int(max(inflight, default=0)),
+            "nom_inflight_avg": inflight_avg,
+            "nom_inflight_max": int(inflight_max),
             "nom_alloc_conflicts": sys.nom_alloc_conflicts,
             "nom_setup_retries": sys.nom_setup_retries,
             "nom_batches": sys.nom_batches,

@@ -80,6 +80,17 @@ class Engine:
         engine ticks is *idle*; exhausted admissions reclaim idle
         tenants' leases (teardown INIT scrubs ride the fabric) before
         queueing or shedding.  0 disables reclaim.
+      deadline_ticks: how many engine ticks a *queued* stream may wait
+        for admission.  ``schedule_tick`` sheds waiters older than this
+        (counted in ``transfer_telemetry()["tenant_queue_expired"]``,
+        with a ``waiter_callback`` notification) — a production engine
+        must age out streams whose client has long since timed out
+        instead of parking them forever.  0 disables aging.
+      waiter_callback: optional ``fn(name, event)`` observer for queued
+        streams — called with ``"admitted"`` when a waiter gets its
+        lease, ``"expired"`` when aged out by ``deadline_ticks``, and
+        ``"shed"`` when a stream is declined without ever queueing
+        (admission ``"shed"`` or a full tenant queue).
       ring_slots: ring capacity per KV/ring leaf in token slots for the
         traffic model; ``None`` means ``max_len`` (no wrap within one
         ``generate``).  Smaller values exercise overwrite evictions.
@@ -104,6 +115,8 @@ class Engine:
     admission: str = "queue"
     tenant_queue_depth: int = 8
     idle_evict_ticks: int = 4
+    deadline_ticks: int = 0
+    waiter_callback: object = None
     ring_slots: int | None = None
     repack_stall_threshold: int = 64
 
@@ -133,6 +146,7 @@ class Engine:
         self.n_sched_steps = 0
         self.n_repacks = 0
         self.n_idle_evictions = 0
+        self.n_queue_expired = 0
         self.peak_tenants = 0
 
     def _decode_one(self, params, token, caches, pos, memory=None):
@@ -239,6 +253,7 @@ class Engine:
                 raise
             if self.admission == "shed" or not queue or q.full():
                 q.n_shed += 1
+                self._notify_waiter(name, "shed")
                 return None
             q.push(self._tick, (name, batch))
             return None
@@ -250,6 +265,10 @@ class Engine:
                                       last_active=self._tick)
         self._tenant_stalls[name] = 0
         self.peak_tenants = max(self.peak_tenants, len(self._tenants))
+
+    def _notify_waiter(self, name: str, event: str) -> None:
+        if self.waiter_callback is not None:
+            self.waiter_callback(name, event)
 
     def _admit_waiting(self) -> None:
         """Drain the tenant admission queue head-first while leases fit
@@ -263,6 +282,26 @@ class Engine:
                 return
             self.tenant_queue.items.pop(0)
             self._register_tenant(name, leases)
+            self._notify_waiter(name, "admitted")
+
+    def _expire_waiters(self) -> None:
+        """Age the tenant queue: a stream that has waited longer than
+        ``deadline_ticks`` is shed (its client has given up; holding its
+        place would only block younger arrivals behind a corpse)."""
+        if not self.deadline_ticks:
+            return
+        kept = []
+        for at, (name, batch) in self.tenant_queue.items:
+            if self._tick - at >= self.deadline_ticks:
+                self.n_queue_expired += 1
+                self._notify_waiter(name, "expired")
+            else:
+                kept.append((at, (name, batch)))
+        if len(kept) < len(self.tenant_queue.items):
+            self.tenant_queue.items[:] = kept
+            # An expired head may have been the only thing blocking a
+            # smaller waiter that already fits the pool.
+            self._admit_waiting()
 
     def tenants(self) -> list[str]:
         """Names of the currently active (admitted) tenants."""
@@ -298,6 +337,7 @@ class Engine:
         benchmark drives many tenants through it without a model."""
         names = list(self._tenants) if tenants is None else tenants
         self._tick += 1
+        self._expire_waiters()
         reqs = []
         for name in names:
             if name in self._reclaimed:
@@ -421,7 +461,8 @@ class Engine:
         ``conflicts``, tenancy (``active_tenants`` / ``peak_tenants`` /
         ``repacks``), and admission health (``admission`` /
         ``sched_policy`` — the fabric's live policy pick —
-        ``queued_tenants`` / ``shed_tenants`` / ``idle_evictions``)."""
+        ``queued_tenants`` / ``shed_tenants`` / ``tenant_queue_expired``
+        / ``idle_evictions``)."""
         if not self.n_sched_steps:
             return {}
         agg = self.last_report
@@ -443,5 +484,6 @@ class Engine:
             "sched_policy": self.fabric.effective_policy,
             "queued_tenants": len(self.tenant_queue.items),
             "shed_tenants": self.tenant_queue.n_shed,
+            "tenant_queue_expired": self.n_queue_expired,
             "idle_evictions": self.n_idle_evictions,
         }

@@ -1,0 +1,283 @@
+"""The vectorized CCU commit pipeline (PR 5 invariants).
+
+* incremental ``SlotTable`` busy masks == a from-scratch expiry recompute
+  across random reserve/expire sequences (property, hypothesis shim);
+* conflict-scoped re-search commits bit-identically to the serial
+  ``allocate`` stream — the same contract the old tail-wide re-search
+  satisfied — for every search-wave size;
+* memsim saturation raises ``FabricOverflow`` (with telemetry) instead of
+  an ``assert`` that vanishes under ``python -O``;
+* ``window_inflight`` pruning bounds the map without changing telemetry;
+* engine tenant-queue aging: ``deadline_ticks`` sheds expired waiters,
+  ``waiter_callback`` observes admit/expire/shed.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fabric import FabricOverflow, NomFabric
+from repro.core.scheduler import TransferRequest
+from repro.core.slot_alloc import (Circuit, CopyRequest, SlotTable,
+                                   TdmAllocator, TdmAllocatorLight)
+from repro.core.topology import Mesh3D
+
+MESH = Mesh3D(8, 8, 4)
+N_SLOTS = 16
+
+
+def _reference_masks(table: SlotTable, window: int) -> np.ndarray:
+    """From-scratch expiry reduction — the old ``busy_masks`` spelling."""
+    busy = table.expiry > window
+    weights = np.uint32(1) << np.arange(table.n_slots, dtype=np.uint32)
+    return (busy * weights).sum(axis=2).astype(np.uint32)
+
+
+def _reference_bus_masks(table: SlotTable, window: int) -> np.ndarray:
+    busy = table.bus_expiry > window
+    weights = np.uint32(1) << np.arange(table.n_slots, dtype=np.uint32)
+    return (busy * weights).sum(axis=1).astype(np.uint32)
+
+
+# --- incremental slot table --------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31))
+def test_incremental_masks_match_recompute_property(seed):
+    """Random interleavings of reserve / bus-reserve / window queries
+    (forward advances and occasional backward jumps, re-reservation of
+    expired slots included) keep the incremental packed masks equal to a
+    from-scratch recompute of the expiry arrays."""
+    rng = np.random.default_rng(seed)
+    mesh = Mesh3D(4, 4, 2)
+    table = SlotTable(mesh, 8)
+    window = 0
+    for _ in range(60):
+        roll = rng.random()
+        if roll < 0.45:       # reserve a free (node, port, slot) bundle
+            free = np.argwhere(table.expiry <= window)
+            if len(free):
+                pick = free[rng.integers(len(free))]
+                circ = Circuit(src=int(pick[0]), dst=int(pick[0]),
+                               start_cycle=0,
+                               n_windows=int(rng.integers(1, 6)),
+                               hops=[tuple(int(v) for v in pick)])
+                table.reserve(circ, window)
+        elif roll < 0.6:      # reserve a free bus (column, slot)
+            free = np.argwhere(table.bus_expiry <= window)
+            if len(free):
+                col, slot = (int(v) for v in free[rng.integers(len(free))])
+                table.reserve_bus(col, slot, window,
+                                  int(rng.integers(1, 6)))
+        elif roll < 0.9:      # advance the query window
+            window += int(rng.integers(0, 4))
+        else:                 # backward jump (re-anchored batch)
+            window = max(0, window - int(rng.integers(1, 5)))
+        np.testing.assert_array_equal(table.busy_masks(window),
+                                      _reference_masks(table, window))
+        np.testing.assert_array_equal(table.bus_busy_masks(window),
+                                      _reference_bus_masks(table, window))
+        np.testing.assert_array_equal(
+            np.asarray(table.device_busy_masks(window)),
+            _reference_masks(table, window))
+
+
+def _rand_reqs(rng, n, with_extras=True):
+    reqs = []
+    for _ in range(n):
+        s, d = rng.integers(MESH.n_nodes, size=2)
+        while s == d:
+            d = rng.integers(MESH.n_nodes)
+        reqs.append(CopyRequest(
+            int(s), int(d), int(rng.integers(64, 4096)),
+            max_extra_slots=int(rng.integers(0, 4)) if with_extras else 0))
+    return reqs
+
+
+# --- conflict-scoped re-search ----------------------------------------------
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**31), st.integers(8, 80))
+def test_scoped_researche_matches_serial_property(seed, n):
+    """The conflict-scoped pipeline must yield exactly what the old
+    tail-wide re-search yielded — both are defined by bit-identity with
+    the serial allocate stream — on randomized contended batches."""
+    reqs = _rand_reqs(np.random.default_rng(seed), n)
+    for cls in (TdmAllocator, TdmAllocatorLight):
+        serial, batched = cls(MESH, N_SLOTS), cls(MESH, N_SLOTS)
+        want = [serial.allocate(r.src, r.dst, r.nbytes, 0, r.max_extra_slots)
+                for r in reqs]
+        got = batched.allocate_batch(reqs, cycle=0)
+        for w, g in zip(want, got):
+            assert (w.circuit is None) == (g.circuit is None)
+            if w.circuit is not None:
+                assert w.circuit.start_cycle == g.circuit.start_cycle
+                assert w.circuit.hops == g.circuit.hops
+        np.testing.assert_array_equal(serial.table.expiry,
+                                      batched.table.expiry)
+        np.testing.assert_array_equal(serial.table.bus_expiry,
+                                      batched.table.bus_expiry)
+
+
+@pytest.mark.parametrize("wave", [4, 16, 64, 1024])
+def test_results_invariant_under_search_wave(wave):
+    """The wave split is a scheduling detail: any wave size commits the
+    same circuits (all bit-identical to serial)."""
+    reqs = _rand_reqs(np.random.default_rng(11), 48)
+    ref_alloc = TdmAllocator(MESH, N_SLOTS)
+    ref = ref_alloc.allocate_batch(reqs, cycle=0)
+    alloc = TdmAllocator(MESH, N_SLOTS)
+    alloc.search_wave = wave
+    got = alloc.allocate_batch(reqs, cycle=0)
+    for r, g in zip(ref, got):
+        assert (r.circuit is None) == (g.circuit is None)
+        if r.circuit is not None:
+            assert r.circuit.hops == g.circuit.hops
+    np.testing.assert_array_equal(ref_alloc.table.expiry, alloc.table.expiry)
+
+
+def test_single_conflict_searches_only_the_conflictor():
+    """One contended pair ahead of a disjoint tail: exactly one extra
+    search beyond the wave passes, however long the tail."""
+    extras = {}
+    for tail in (7, 28):
+        reqs = [CopyRequest(MESH.node_id(0, 0, 0), MESH.node_id(1, 0, 0), 256),
+                CopyRequest(MESH.node_id(0, 0, 0), MESH.node_id(1, 0, 0), 256)]
+        lanes = [(y, z) for z in range(MESH.Z) for y in range(1, MESH.Y)]
+        for y, z in lanes[:tail]:
+            reqs.append(CopyRequest(MESH.node_id(0, y, z),
+                                    MESH.node_id(MESH.X - 1, y, z), 256))
+        alloc = TdmAllocator(MESH, N_SLOTS)
+        res = alloc.allocate_batch(reqs, cycle=0)
+        rep = alloc.last_report
+        assert all(r.circuit is not None for r in res)
+        assert rep.conflicts == 1
+        waves = -(-len(reqs) // alloc.search_wave)
+        extras[tail] = (rep.search_rounds - waves, rep.n_searched - len(reqs))
+    # one conflict == one extra (round, request-search), tail-independent
+    assert extras[7] == extras[28] == (1, 1)
+
+
+def test_report_n_searched_flows_to_fabric_telemetry():
+    fab = NomFabric(mesh=MESH, n_slots=N_SLOTS)
+    reqs = [TransferRequest(src=r.src, dst=r.dst, nbytes=r.nbytes)
+            for r in _rand_reqs(np.random.default_rng(5), 24, False)]
+    _res, rep = fab.schedule(reqs)
+    assert rep.n_searched >= rep.n_requests
+    merged = rep.merge(rep)
+    assert merged.n_searched == 2 * rep.n_searched
+    assert fab.telemetry()["searched_requests"] == rep.n_searched
+
+
+# --- memsim: FabricOverflow + window_inflight pruning ------------------------
+def _saturating_items():
+    from repro.memsim.workloads import Op, Request
+    # 16 slots on the 0->1 link hold ~64KB transfers for thousands of
+    # windows; the 17th request cannot find a circuit within 64 retry
+    # windows -> the mesh is persistently saturated.
+    r = Request(op=Op.COPY, src_bank=0, src_row=0, dst_bank=1, dst_row=1,
+                nbytes=1 << 16)
+    return [(i, r) for i in range(N_SLOTS + 1)]
+
+
+def test_memsim_saturation_raises_fabric_overflow():
+    from repro.memsim import SimParams
+    from repro.memsim.simulator import MemorySystem
+    sys_ = MemorySystem(SimParams(config="nom"))
+    with pytest.raises(FabricOverflow) as exc:
+        sys_.copy_nom_batch(_saturating_items())
+    err = exc.value
+    assert err.retries == 64
+    assert err.request.nbytes == 1 << 16
+    assert err.telemetry["table_utilization"] > 0
+    assert "saturated" in str(err)
+
+
+def test_window_inflight_pruning_keeps_telemetry_exact():
+    from repro.memsim import SimParams, WorkloadSpec, generate, simulate
+    from repro.memsim.simulator import MemorySystem
+    reqs = generate(WorkloadSpec("fileCopy60", n_requests=600, seed=3))
+    pruned = simulate(reqs, SimParams(config="nom", window=64))
+    unpruned_prune = MemorySystem._prune_inflight
+    try:
+        MemorySystem._prune_inflight = lambda self, horizon: None
+        full = simulate(reqs, SimParams(config="nom", window=64))
+    finally:
+        MemorySystem._prune_inflight = unpruned_prune
+    assert pruned.extra["nom_inflight_avg"] == full.extra["nom_inflight_avg"]
+    assert pruned.extra["nom_inflight_max"] == full.extra["nom_inflight_max"]
+    assert pruned.ipc == full.ipc
+
+
+def test_window_inflight_map_stays_bounded():
+    from repro.memsim import SimParams
+    from repro.memsim.simulator import MemorySystem
+    from repro.memsim.workloads import Op, Request
+    sys_ = MemorySystem(SimParams(config="nom"))
+    at = 0
+    for i in range(200):
+        r = Request(op=Op.COPY, src_bank=(2 * i) % 250,
+                    src_row=0, dst_bank=(2 * i) % 250 + 1, dst_row=1,
+                    nbytes=4096)
+        sys_.copy_nom_batch([(at, r)])
+        at += 600      # long quiet gaps: old code kept every window forever
+    stats = sys_.inflight_stats()
+    assert stats[0] > 0 and stats[1] >= 1
+    # live map only holds windows at/past the last pickup horizon
+    assert len(sys_.window_inflight) < 200
+
+
+# --- engine tenant-queue aging ----------------------------------------------
+class _CacheStub:
+    def init_caches(self, batch, max_len):
+        return {"kv": jnp.zeros((batch, max_len, 8), jnp.int8),
+                "state": jnp.zeros((batch, 16), jnp.int8)}
+
+
+def _engine(**kw):
+    from repro.serving import Engine
+    return Engine(model=_CacheStub(), cfg=None, max_len=16,
+                  cache_mesh=Mesh3D(2, 2, 2), ring_slots=4, **kw)
+
+
+def test_deadline_ticks_sheds_expired_waiters():
+    events = []
+    eng = _engine(admission="queue", idle_evict_ticks=0, deadline_ticks=2,
+                  waiter_callback=lambda name, ev: events.append((name, ev)))
+    eng.open_tenant("a", batch=1)
+    eng.open_tenant("b", batch=1)
+    assert eng.open_tenant("c", batch=1) is None          # parked
+    eng.schedule_tick()
+    assert len(eng.tenant_queue.items) == 1               # still waiting
+    eng.schedule_tick()                                   # age 2 -> expired
+    assert len(eng.tenant_queue.items) == 0
+    tel = eng.transfer_telemetry()
+    assert tel["tenant_queue_expired"] == 1
+    assert ("c", "expired") in events
+    # the expired waiter is gone: closing "a" admits nobody
+    eng.close_tenant("a")
+    assert sorted(eng.tenants()) == ["b"]
+
+
+def test_waiter_callback_sees_admission_and_shed():
+    events = []
+    eng = _engine(admission="queue", idle_evict_ticks=0, deadline_ticks=0,
+                  tenant_queue_depth=1,
+                  waiter_callback=lambda name, ev: events.append((name, ev)))
+    eng.open_tenant("a", batch=1)
+    eng.open_tenant("b", batch=1)
+    eng.open_tenant("c", batch=1)          # queued (no event yet)
+    eng.open_tenant("d", batch=1)          # queue full -> shed
+    assert events == [("d", "shed")]
+    eng.close_tenant("a")                  # frees capacity -> c admitted
+    assert ("c", "admitted") in events
+    assert "c" in eng.tenants()
+
+
+def test_deadline_zero_never_expires():
+    eng = _engine(admission="queue", idle_evict_ticks=0, deadline_ticks=0)
+    eng.open_tenant("a", batch=1)
+    eng.open_tenant("b", batch=1)
+    eng.open_tenant("c", batch=1)
+    for _ in range(6):
+        eng.schedule_tick()
+    assert len(eng.tenant_queue.items) == 1
+    assert eng.transfer_telemetry()["tenant_queue_expired"] == 0
