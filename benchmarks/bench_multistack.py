@@ -1,0 +1,156 @@
+"""Multi-stack fabric: the intra- vs cross-stack gap, and tenant migration.
+
+Two measurements on a 2-cube `StackedTopology` (4x4x2 meshes, ring SerDes
+links):
+
+* **circuits/window** — the same random copy stream scheduled once with
+  both endpoints in one stack (pure TDM mesh traffic) and once spanning
+  the stacks (two-phase SerDes circuits).  The cross column must come in
+  *lower*: every cross circuit serializes on the two bridge nodes and the
+  shared SerDes channels, and streams at the bottleneck link width — the
+  quantified reason placement keeps per-step traffic stack-local
+  (`docs/multistack.md`).
+* **tenant migration** — a stacked serving `Engine` opens N tenants
+  pinned to stack 0, then `migrate_tenant`s every one to stack 1: the
+  cross-stack COPY + teardown-INIT batch per tenant, swept over N.
+
+Besides the CSV rows, ``run()`` writes ``BENCH_multistack.json`` at the
+repo root (schema, topology, both circuits/window records, the migration
+sweep); ``scripts/ci.sh`` asserts the file is produced and well-formed.
+"""
+import json
+import pathlib
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fabric import FabricCluster
+from repro.core.scheduler import TransferRequest
+from repro.core.topology import make_topology
+from repro.serving.engine import Engine
+
+RECORD_PATH = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_multistack.json"
+
+MESH = (4, 4, 2)
+N_STACKS = 2
+LINK_LATENCY = 8
+LINK_BYTES = 4
+N_REQS = 48
+NBYTES = 256
+
+
+def _topology():
+    return make_topology(N_STACKS, mesh=MESH, link="ring",
+                         link_latency=LINK_LATENCY, link_bytes=LINK_BYTES)
+
+
+def _pairs(rng, n_nodes, n):
+    out = []
+    for _ in range(n):
+        s, d = rng.integers(n_nodes, size=2)
+        while s == d:
+            d = rng.integers(n_nodes)
+        out.append((int(s), int(d)))
+    return out
+
+
+def _schedule(topo, pairs, cross: bool):
+    """One batch through a fresh cluster; endpoints are (stack, node)
+    tuples — same stack 0 for intra, stack 0 -> 1 for cross."""
+    cluster = FabricCluster(topology=topo)
+    reqs = [TransferRequest(src=s, dst=d, nbytes=NBYTES,
+                            src_stack=0, dst_stack=1 if cross else 0)
+            for s, d in pairs]
+    t0 = time.perf_counter()
+    results, report = cluster.schedule(reqs)
+    us = (time.perf_counter() - t0) * 1e6
+    per_window = (report.n_scheduled / report.n_windows
+                  if report.n_windows else 0.0)
+    return us, {
+        "n_scheduled": report.n_scheduled,
+        "n_requests": report.n_requests,
+        "n_windows": report.n_windows,
+        "n_cross_stack": report.n_cross_stack,
+        "circuits_per_window": round(per_window, 4),
+        "avg_inflight": round(report.avg_inflight, 4),
+        "stall_cycles": report.stall_cycles,
+    }
+
+
+class _CacheStub:
+    """Two ring leaves + one state leaf per stream (see
+    bench_serving_tenancy for the probing contract)."""
+
+    def init_caches(self, batch, max_len):
+        return {"kv0": jnp.zeros((batch, max_len, 16), jnp.int8),
+                "kv1": jnp.zeros((batch, max_len, 32), jnp.int8),
+                "state": jnp.zeros((batch, 64), jnp.int8)}
+
+
+def _migrate_sweep(topo, n_tenants: int):
+    eng = Engine(model=_CacheStub(), cfg=None, max_len=32,
+                 cache_mesh=topo, ring_slots=8, max_extra_slots=0)
+    for k in range(n_tenants):
+        eng.open_tenant(f"t{k}", batch=1)
+        # Pin the tenant's homes to stack 0 so every sweep migration
+        # genuinely crosses the SerDes links.
+        eng.migrate_tenant(f"t{k}", 0)
+    setup_migrations = eng.n_migrations
+    eng.schedule_tick()
+    t0 = time.perf_counter()
+    reports = [eng.migrate_tenant(f"t{k}", 1) for k in range(n_tenants)]
+    us = (time.perf_counter() - t0) * 1e6
+    cross = sum(r.n_cross_stack for r in reports if r is not None)
+    init = sum(r.n_init for r in reports if r is not None)
+    tel = eng.transfer_telemetry()
+    for k in range(n_tenants):
+        eng.close_tenant(f"t{k}")
+    return us, {
+        "tenants": n_tenants,
+        "migrations": tel["migrations"] - setup_migrations,
+        "cross_stack_circuits": cross,
+        "teardown_inits": init,
+        "stall_cycles": tel["stall_cycles"],
+    }
+
+
+def run():
+    rows = []
+    topo = _topology()
+    rng = np.random.default_rng(7)
+    record = {
+        "schema": "multistack-v1",
+        "topology": {"n_stacks": N_STACKS, "mesh": list(MESH),
+                     "link": "ring", "link_latency": LINK_LATENCY,
+                     "link_bytes": LINK_BYTES},
+        "circuits_per_window": {},
+        "migration": {},
+    }
+    n_local = topo.stacks[0].n_nodes
+    pairs = _pairs(rng, n_local, N_REQS)
+    for label, cross in (("intra", False), ("cross", True)):
+        us, stats = _schedule(topo, pairs, cross)
+        record["circuits_per_window"][label] = stats
+        rows.append((f"multistack_{label}_{N_REQS}req", us,
+                     f"cpw={stats['circuits_per_window']}"
+                     f";inflight={stats['avg_inflight']}"
+                     f";sched={stats['n_scheduled']}"))
+    intra = record["circuits_per_window"]["intra"]["circuits_per_window"]
+    cross = record["circuits_per_window"]["cross"]["circuits_per_window"]
+    record["circuits_per_window"]["cross_over_intra"] = round(
+        cross / intra, 4) if intra else 0.0
+    for n in (1, 2, 4):
+        us, stats = _migrate_sweep(topo, n)
+        record["migration"][str(n)] = stats
+        rows.append((f"multistack_migrate_{n}t", us,
+                     f"cross={stats['cross_stack_circuits']}"
+                     f";init={stats['teardown_inits']}"))
+    RECORD_PATH.write_text(json.dumps(record, indent=1, sort_keys=True))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -5,8 +5,8 @@ import time
 import traceback
 
 from benchmarks import (bench_ablations, bench_energy, bench_fabric_autotune,
-                        bench_freq_scaling, bench_ipc, bench_nom_a2a,
-                        bench_roofline, bench_sched_policies,
+                        bench_freq_scaling, bench_ipc, bench_multistack,
+                        bench_nom_a2a, bench_roofline, bench_sched_policies,
                         bench_serving_tenancy, bench_slot_alloc,
                         bench_traffic_mix, bench_tsv_conflict)
 
@@ -21,6 +21,7 @@ ALL = [
     ("sched_policies", bench_sched_policies),
     ("fabric_autotune", bench_fabric_autotune),
     ("serving_tenancy", bench_serving_tenancy),
+    ("multistack", bench_multistack),
     ("ablations", bench_ablations),
     ("roofline", bench_roofline),
 ]
@@ -28,7 +29,7 @@ ALL = [
 # --quick: the CI smoke subset — the scheduler-centric benches that gate
 # the concurrent-transfer perf trajectory, fast enough for every PR.
 QUICK = ("tsv_conflict", "slot_alloc", "nom_a2a", "sched_policies",
-         "fabric_autotune", "serving_tenancy")
+         "fabric_autotune", "serving_tenancy", "multistack")
 
 
 def main() -> None:

@@ -10,14 +10,14 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import (Mesh3D, NomFabric, Transfer, TransferRequest,
-                        plan_transfers)
+from repro.core import (NomFabric, Transfer, TransferRequest,
+                        make_topology, plan_transfers)
 from repro.memsim import SimParams, WorkloadSpec, generate, simulate
 
 
 def main():
     # --- 1. circuits ---------------------------------------------------------
-    mesh = Mesh3D(8, 8, 4)
+    mesh = make_topology(mesh=(8, 8, 4))
     fabric = NomFabric(mesh=mesh, n_slots=16)
     src, dst = mesh.node_id(0, 0, 0), mesh.node_id(5, 3, 2)
     results, report = fabric.schedule(

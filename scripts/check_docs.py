@@ -11,11 +11,12 @@ import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 REQUIRED = ("README.md", "docs/architecture.md", "docs/serving.md",
-            "docs/fabric.md", "PAPER.md", "ROADMAP.md", "CHANGES.md")
+            "docs/fabric.md", "docs/multistack.md", "PAPER.md",
+            "ROADMAP.md", "CHANGES.md")
 DOC_PAGES = ("README.md", "docs/architecture.md", "docs/serving.md",
-             "docs/fabric.md")
+             "docs/fabric.md", "docs/multistack.md")
 # Pages whose python blocks must execute end to end, not just compile.
-EXEC_PAGES = ("docs/serving.md", "docs/fabric.md")
+EXEC_PAGES = ("docs/serving.md", "docs/fabric.md", "docs/multistack.md")
 
 
 def fail(msg: str) -> None:
@@ -40,12 +41,14 @@ def public_methods(cls) -> list[str]:
 
 
 def check_serving_api_documented() -> None:
-    """Every public Engine/BankPool/NomFabric method must appear in some
-    doc page (the fabric is the API every subsystem now holds)."""
-    from repro.core.fabric import NomFabric
+    """Every public Engine/BankPool/NomFabric/StackedTopology/
+    FabricCluster method must appear in some doc page (the fabric and
+    the two-level topology are the API every subsystem now holds)."""
+    from repro.core.fabric import FabricCluster, NomFabric
+    from repro.core.topology import StackedTopology
     from repro.serving import BankPool, Engine
     corpus = "\n".join((ROOT / rel).read_text() for rel in DOC_PAGES)
-    for cls in (Engine, BankPool, NomFabric):
+    for cls in (Engine, BankPool, NomFabric, StackedTopology, FabricCluster):
         for m in public_methods(cls):
             # Word-boundary match: "release" must not satisfy "lease".
             if not re.search(rf"\b{re.escape(m)}\b", corpus):

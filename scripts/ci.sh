@@ -16,7 +16,8 @@ echo "== tier-1: pytest =="
 python -m pytest -q "$@"
 
 echo "== smoke: benchmarks (quick subset) =="
-rm -f BENCH_alloc.json   # the gate below must see THIS run's record
+# the gates below must see THIS run's records
+rm -f BENCH_alloc.json BENCH_multistack.json
 python benchmarks/run.py --quick
 
 echo "== perf record: BENCH_alloc.json =="
@@ -41,4 +42,38 @@ for tail, entry in rec["single_conflict"].items():
         sys.exit(f"single_conflict[{tail}]: re-search not conflict-scoped")
 print(f"BENCH_alloc.json OK: batches={sorted(rec['alloc'])} "
       f"tails={sorted(rec['single_conflict'])}")
+EOF
+
+echo "== perf record: BENCH_multistack.json =="
+python - <<'EOF'
+import json, pathlib, sys
+path = pathlib.Path("BENCH_multistack.json")
+if not path.is_file():
+    sys.exit("BENCH_multistack.json missing: benchmarks/run.py --quick "
+             "must write it")
+rec = json.loads(path.read_text())
+required = ("schema", "topology", "circuits_per_window", "migration")
+missing = [k for k in required if k not in rec]
+if missing:
+    sys.exit(f"BENCH_multistack.json missing keys: {missing}")
+cpw = rec["circuits_per_window"]
+for side in ("intra", "cross"):
+    if side not in cpw:
+        sys.exit(f"BENCH_multistack.json circuits_per_window missing {side}")
+    for k in ("n_scheduled", "n_windows", "circuits_per_window",
+              "n_cross_stack"):
+        if k not in cpw[side]:
+            sys.exit(f"BENCH_multistack.json {side} missing {k}")
+if cpw["cross"]["n_cross_stack"] == 0:
+    sys.exit("BENCH_multistack.json: cross record scheduled no "
+             "cross-stack circuits")
+if not rec["migration"]:
+    sys.exit("BENCH_multistack.json: migration sweep is empty")
+for n, entry in rec["migration"].items():
+    for k in ("tenants", "migrations", "cross_stack_circuits"):
+        if k not in entry:
+            sys.exit(f"BENCH_multistack.json migration[{n}] missing {k}")
+print(f"BENCH_multistack.json OK: cross/intra="
+      f"{cpw.get('cross_over_intra')} "
+      f"migration_sweep={sorted(rec['migration'])}")
 EOF

@@ -2,8 +2,8 @@
 # transfer (slot allocation + CCU) and its TPU adaptation (scheduled
 # ppermute collectives + bulk-transfer planner).
 from .bitvec import bit_is_free, free_slots, full_mask, rotr, rotr_np
-from .fabric import (AdmissionQueue, FabricOverflow, NomFabric,
-                     PolicyContext, get_policy, register_policy,
+from .fabric import (AdmissionQueue, FabricCluster, FabricOverflow,
+                     NomFabric, PolicyContext, get_policy, register_policy,
                      registered_policies, unregister_policy)
 from .nom_collectives import (Transfer, TransferPlan, a2a_link_chunks,
                               nom_all_gather, nom_all_to_all,
@@ -11,20 +11,24 @@ from .nom_collectives import (Transfer, TransferPlan, a2a_link_chunks,
                               ring_offsets)
 from .scheduler import ScheduleReport, TransferRequest, schedule_transfers
 from .slot_alloc import (AllocResult, BatchReport, Circuit, CopyRequest,
-                         SlotTable, TdmAllocator, TdmAllocatorLight,
-                         traceback, wavefront_search, wavefront_search_batch)
-from .topology import PAPER_MESH, Mesh3D, N_PORTS, PORT_LOCAL, port_for
+                         SegmentedAllocator, SlotTable, StackedCircuit,
+                         TdmAllocator, TdmAllocatorLight, traceback,
+                         wavefront_search, wavefront_search_batch)
+from .topology import (PAPER_MESH, Mesh3D, N_PORTS, PORT_LOCAL, StackLink,
+                       StackedTopology, make_topology, port_for)
 
 __all__ = [
-    "AdmissionQueue", "FabricOverflow", "NomFabric", "PolicyContext",
+    "AdmissionQueue", "FabricCluster", "FabricOverflow", "NomFabric",
+    "PolicyContext",
     "get_policy", "register_policy", "registered_policies",
     "unregister_policy",
     "bit_is_free", "free_slots", "full_mask", "rotr", "rotr_np",
     "Transfer", "TransferPlan", "a2a_link_chunks", "nom_all_gather",
     "nom_all_to_all", "nom_reduce_scatter", "plan_transfers", "ring_offsets",
     "AllocResult", "BatchReport", "Circuit", "CopyRequest", "ScheduleReport",
-    "SlotTable", "TdmAllocator", "TdmAllocatorLight", "TransferRequest",
-    "schedule_transfers",
+    "SegmentedAllocator", "SlotTable", "StackedCircuit", "TdmAllocator",
+    "TdmAllocatorLight", "TransferRequest", "schedule_transfers",
     "traceback", "wavefront_search", "wavefront_search_batch", "PAPER_MESH",
-    "Mesh3D", "N_PORTS", "PORT_LOCAL", "port_for",
+    "Mesh3D", "N_PORTS", "PORT_LOCAL", "StackLink", "StackedTopology",
+    "make_topology", "port_for",
 ]

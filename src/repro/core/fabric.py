@@ -37,11 +37,14 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from .nom_collectives import _dor_path, plan_transfers
-from .scheduler import (ScheduleReport, _as_copy_requests, _as_transfers,
-                        _tdm_report)
-from .slot_alloc import TdmAllocator
-from .topology import Mesh3D
+from .scheduler import (ScheduleReport, TransferRequest, _as_copy_requests,
+                        _as_transfers, _tdm_report)
+from .slot_alloc import (AllocResult, CopyRequest, SegmentedAllocator,
+                         TdmAllocator)
+from .topology import Mesh3D, StackedTopology
 
 
 class FabricOverflow(RuntimeError):
@@ -253,8 +256,11 @@ class NomFabric:
         for name in self.auto_candidates:
             get_policy(name)
         self.queue = AdmissionQueue(self.queue_depth, self.overflow)
-        self.clock = 0                 # next batch anchor (tdm backend)
+        self.clock = 0                 # next batch anchor
         self.last_cycle = 0            # anchor of the most recent batch
+        # rounds backend: persistent link -> {absolute rounds} reservations,
+        # so consecutive batches contend the way tdm slot tables do.
+        self._round_busy: dict[tuple, set[int]] = {}
         self.report: ScheduleReport | None = None
         self.history: list[ScheduleReport] = []
         self.n_flushes = 0
@@ -330,7 +336,7 @@ class NomFabric:
         if self.backend == "tdm":
             out = self._schedule_tdm(transfers, cycle, chosen)
         else:
-            out = self._schedule_rounds(transfers, chosen)
+            out = self._schedule_rounds(transfers, chosen, cycle)
         self._record(out[1], chosen, auto=self.policy == "auto"
                      and policy is None)
         return out
@@ -352,11 +358,30 @@ class NomFabric:
             self.clock = ((end // self.n_slots) + 1) * self.n_slots
         return results, report
 
-    def _schedule_rounds(self, transfers, policy):
+    def _schedule_rounds(self, transfers, policy, cycle=None):
         n_init = sum(1 for t in transfers if _is_init(t))
         norm = _as_transfers(transfers)
         order = self._order(norm, policy)
-        plan = plan_transfers(self.shape, norm, torus=self.torus, order=order)
+        base = self.clock if cycle is None else cycle
+        # Reservations behind every possible future anchor can never be
+        # contended again — drop them so the persistent map stays bounded.
+        horizon = min(base, self.clock)
+        for hop in list(self._round_busy):
+            live = {r for r in self._round_busy[hop] if r >= horizon}
+            if live:
+                self._round_busy[hop] = live
+            else:
+                del self._round_busy[hop]
+        plan = plan_transfers(self.shape, norm, torus=self.torus, order=order,
+                              busy=self._round_busy, base=base)
+        self.last_cycle = base
+        if cycle is None:
+            # Advance past this batch's drain, exactly like the tdm clock:
+            # the next default-anchored batch starts on fresh links (so a
+            # sequence of default `schedule` calls is identical to the old
+            # from-round-0 packing), while an explicitly anchored batch
+            # (e.g. a pipelined flush) contends with what still streams.
+            self.clock = base + plan.n_rounds
         conc = plan.concurrency()
         stall = sum(s for s, p in zip(plan.starts, plan.paths) if p)
         report = ScheduleReport(
@@ -406,10 +431,11 @@ class NomFabric:
         anchor = min(arrivals) if cycle is None else cycle
         pick = max(anchor, self.queue.busy_until)
         self.queue.busy_until = pick + 3 + (len(reqs) - 1)
-        if self.backend == "tdm":
-            out = self.schedule(reqs, cycle=pick)
-        else:
-            out = self.schedule(reqs)
+        # Both backends anchor at the pickup cycle: on rounds, the batch
+        # packs against reservations still streaming from earlier flushes
+        # (persistent `_round_busy`), so back-to-back drains contend the
+        # way tdm slot tables always have.
+        out = self.schedule(reqs, cycle=pick)
         # Advance the session clock past this drain: later submits with a
         # default arrival must not look like they arrived before it (that
         # would charge them the whole session's elapsed pipeline time as
@@ -518,6 +544,256 @@ class NomFabric:
             self._calm_flushes = 0
 
 
-__all__ = ["AdmissionQueue", "FabricOverflow", "NomFabric", "PolicyContext",
-           "get_policy", "register_policy", "registered_policies",
-           "unregister_policy"]
+# ---------------------------------------------------------------------------
+# Multi-stack: one CCU authority per stack + cross-stack negotiation
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class FabricCluster:
+    """Multi-authority NoM over a :class:`StackedTopology`.
+
+    One :class:`NomFabric` per stack owns that stack's slot tables,
+    clock, and policy state — *same-stack traffic is delegated wholesale
+    to its stack's fabric* and never takes the cluster's cross-stack
+    path.  Cross-stack requests are negotiated between the per-stack CCUs
+    by a :class:`~repro.core.slot_alloc.SegmentedAllocator`: the near
+    authority reserves its mesh segment plus the SerDes channel slots
+    (phase 1), the far authority commits its segment against the pinned
+    injection slot (phase 2), and a far-side conflict rolls the near
+    reservation back with no slot-table state leaked.
+
+    Requests address banks either as flat global ids (``src``/``dst``
+    ints, see :meth:`StackedTopology.global_id`), as ``(stack, node)``
+    tuples, or via :class:`TransferRequest`'s ``src_stack``/``dst_stack``
+    fields with stack-local node ids.
+
+    With ``n_stacks == 1`` every batch is delegated to the single stack
+    fabric with identical arguments — plans, results, and reports are
+    bit-identical to holding that :class:`NomFabric` directly.
+    """
+
+    topology: StackedTopology
+    n_slots: int = 16
+    policy: str = "arrival"
+    queue_depth: int = 8
+    overflow: str = "block"
+    allocators: list | None = None   # pre-built per-stack allocators
+
+    def __post_init__(self):
+        if self.allocators is not None:
+            if len(self.allocators) != self.topology.n_stacks:
+                raise ValueError(f"{len(self.allocators)} allocators for "
+                                 f"{self.topology.n_stacks} stacks")
+            self.n_slots = self.allocators[0].n_slots
+            self.fabrics = [NomFabric(allocator=a, policy=self.policy,
+                                      queue_depth=self.queue_depth,
+                                      overflow=self.overflow)
+                            for a in self.allocators]
+        else:
+            self.fabrics = [NomFabric(mesh=m, n_slots=self.n_slots,
+                                      policy=self.policy,
+                                      queue_depth=self.queue_depth,
+                                      overflow=self.overflow)
+                            for m in self.topology.stacks]
+        self.segmented = SegmentedAllocator(
+            self.topology, [f.allocator for f in self.fabrics], self.n_slots)
+        self.backend = "tdm"
+        self.queue = AdmissionQueue(self.queue_depth, self.overflow)
+        self.clock = 0
+        self.last_cycle = 0
+        self.report: ScheduleReport | None = None
+        self.n_flushes = 0
+        self.cross_requests = 0
+        self.cross_committed = 0
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def effective_policy(self) -> str:
+        return self.policy
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue.items)
+
+    def fabric_of(self, stack: int) -> NomFabric:
+        """The per-stack CCU authority (its slot tables, clock, queue)."""
+        if not 0 <= stack < self.topology.n_stacks:
+            raise ValueError(f"stack {stack} out of range "
+                             f"[0, {self.topology.n_stacks})")
+        return self.fabrics[stack]
+
+    # -- two-level address normalization -------------------------------------
+    def _endpoint(self, v, stack: int | None) -> tuple[int, int]:
+        if stack is not None:
+            self.topology.global_id(int(stack), int(v))  # validates ranges
+            return int(stack), int(v)
+        if isinstance(v, tuple):
+            if len(v) != 2:
+                raise ValueError(f"stacked endpoint must be (stack, node), "
+                                 f"got {v!r}")
+            self.topology.global_id(int(v[0]), int(v[1]))
+            return int(v[0]), int(v[1])
+        return self.topology.locate(int(v))
+
+    def _split(self, transfers):
+        """Partition a batch: same-stack requests (localized, grouped per
+        stack) vs cross-stack ones (kept with their endpoints)."""
+        groups: dict[int, list] = {}
+        cross: list = []
+        for pos, t in enumerate(transfers):
+            if isinstance(t, TransferRequest):
+                se = self._endpoint(t.src, t.src_stack)
+                de = self._endpoint(t.dst, t.dst_stack)
+            elif isinstance(t, CopyRequest):
+                se = self._endpoint(t.src, None)
+                de = self._endpoint(t.dst, None)
+            else:
+                t = CopyRequest(*t)
+                se = self._endpoint(t.src, None)
+                de = self._endpoint(t.dst, None)
+            if _is_init(t) and se != de:
+                raise ValueError(f"init requires src == dst, got {t!r}")
+            if se[0] == de[0]:
+                if isinstance(t, TransferRequest):
+                    local = dataclasses.replace(t, src=se[1], dst=de[1],
+                                                src_stack=None,
+                                                dst_stack=None)
+                else:
+                    local = dataclasses.replace(t, src=se[1], dst=de[1])
+                groups.setdefault(se[0], []).append((pos, local))
+            else:
+                cross.append((pos, t, se, de))
+        return groups, cross
+
+    # -- the synchronous batch path ------------------------------------------
+    def schedule(self, transfers, cycle: int | None = None,
+                 policy: str | None = None):
+        """Schedule a batch across the cluster.
+
+        Same-stack requests go to their stack's :class:`NomFabric` (one
+        delegated batch per stack, identical ``cycle``/``policy``
+        semantics); cross-stack requests are then negotiated one at a
+        time through the two-phase :class:`SegmentedAllocator` — an
+        uncommittable request is denied (``circuit=None``), exactly like
+        a saturated single-stack mesh.  Returns ``(results, report)``
+        with results in request order; the merged report counts the
+        cross-stack share in ``n_cross_stack``.
+        """
+        transfers = list(transfers)
+        groups, cross = self._split(transfers)
+        results: list = [None] * len(transfers)
+        reports = []
+        for stack in sorted(groups):
+            positions = [p for p, _r in groups[stack]]
+            reqs = [r for _p, r in groups[stack]]
+            res, rep = self.fabrics[stack].schedule(reqs, cycle=cycle,
+                                                    policy=policy)
+            for p, r in zip(positions, res):
+                results[p] = r
+            reports.append(rep)
+        circuits, stalls = [], 0
+        for pos, t, se, de in cross:
+            self.cross_requests += 1
+            anchor = (cycle if cycle is not None
+                      else max(self.fabrics[se[0]].clock,
+                               self.fabrics[de[0]].clock))
+            rq_cycle = getattr(t, "cycle", None)
+            if rq_cycle is not None:
+                anchor = max(anchor, rq_cycle)
+            circ = self.segmented.allocate(se, de, max(1, t.nbytes), anchor)
+            results[pos] = AllocResult(circuit=circ, searched_cycle=anchor)
+            if circ is None:
+                continue
+            self.cross_committed += 1
+            circuits.append(circ)
+            stalls += max(0, circ.start_cycle - (anchor + 3))
+            if cycle is None:
+                nxt = ((circ.end_cycle // self.n_slots) + 1) * self.n_slots
+                for s in (se[0], de[0]):
+                    fab = self.fabrics[s]
+                    fab.clock = max(fab.clock, nxt)
+        if cross:
+            reports.append(self._cross_report(len(cross), circuits, stalls))
+        if not reports:
+            reports = [ScheduleReport(backend="tdm", n_requests=0,
+                                      n_scheduled=0, n_windows=0,
+                                      max_inflight=0, avg_inflight=0.0)]
+        report = reports[0]
+        for rep in reports[1:]:
+            report = report.merge(rep)
+        if groups:
+            self.last_cycle = (cycle if cycle is not None else
+                               min(self.fabrics[s].last_cycle
+                                   for s in groups))
+        elif cross:
+            self.last_cycle = min(r.searched_cycle
+                                  for r in results if r is not None)
+        self.clock = max([self.clock] + [f.clock for f in self.fabrics])
+        self.n_flushes += 1
+        self.report = (report if self.report is None
+                       else self.report.merge(report))
+        return results, report
+
+    def _cross_report(self, n_cross: int, circuits, stalls) -> ScheduleReport:
+        n = self.n_slots
+        starts = [c.start_cycle // n for c in circuits]
+        w0 = min(starts, default=0)
+        span = max((s - w0 + c.n_windows for s, c in zip(starts, circuits)),
+                   default=0)
+        active = np.zeros(span, np.int64)
+        for s, c in zip(starts, circuits):
+            active[s - w0:s - w0 + c.n_windows] += 1
+        busy = active[active > 0]
+        return ScheduleReport(
+            backend="tdm", n_requests=n_cross, n_scheduled=len(circuits),
+            n_windows=int(span),
+            max_inflight=int(busy.max()) if busy.size else 0,
+            avg_inflight=float(busy.mean()) if busy.size else 0.0,
+            stall_cycles=stalls, n_cross_stack=n_cross)
+
+    # -- the admission-queue path --------------------------------------------
+    def submit(self, request, at: int | None = None) -> bool:
+        """Admit one request into the cluster-level bounded queue — same
+        overflow contract as :meth:`NomFabric.submit`."""
+        return NomFabric.submit(self, request, at)
+
+    def flush(self, cycle: int | None = None):
+        """Drain the cluster queue through one batched :meth:`schedule`
+        call — same pickup-pipeline contract as :meth:`NomFabric.flush`."""
+        return NomFabric.flush(self, cycle)
+
+    # -- telemetry -----------------------------------------------------------
+    def telemetry(self) -> dict:
+        """Cluster-wide stats: the merged scheduling counters, the
+        cross-stack protocol counters (``cross_requests`` /
+        ``cross_committed`` / ``cross_denied`` / ``cross_rollbacks``,
+        SerDes ``link_windows``), and each stack's own fabric telemetry
+        under ``"stacks"``."""
+        agg = self.report
+        return {
+            "backend": self.backend,
+            "n_stacks": self.topology.n_stacks,
+            "flushes": self.n_flushes,
+            "requests": 0 if agg is None else agg.n_requests,
+            "scheduled": 0 if agg is None else agg.n_scheduled,
+            "init_requests": 0 if agg is None else agg.n_init,
+            "max_inflight": 0 if agg is None else agg.max_inflight,
+            "avg_inflight": 0.0 if agg is None else agg.avg_inflight,
+            "stall_cycles": 0 if agg is None else agg.stall_cycles,
+            "cross_requests": self.cross_requests,
+            "cross_committed": self.cross_committed,
+            "cross_denied": self.segmented.denied,
+            "cross_rollbacks": self.segmented.rollbacks,
+            "link_windows": self.segmented.link_windows,
+            "policy": self.effective_policy,
+            "queue_depth": self.queue.depth,
+            "pending": self.pending,
+            "shed": self.queue.n_shed,
+            "full_stalls": self.queue.full_stalls,
+            "queue_stall_cycles": self.queue.stall_cycles,
+            "stacks": [f.telemetry() for f in self.fabrics],
+        }
+
+
+__all__ = ["AdmissionQueue", "FabricCluster", "FabricOverflow", "NomFabric",
+           "PolicyContext", "get_policy", "register_policy",
+           "registered_policies", "unregister_policy"]

@@ -203,7 +203,9 @@ class TransferPlan:
 
 def plan_transfers(shape: tuple[int, ...], transfers: list[Transfer],
                    torus: bool = True, policy: str = "longest_first",
-                   order: list[int] | None = None) -> TransferPlan:
+                   order: list[int] | None = None,
+                   busy: dict[tuple, set[int]] | None = None,
+                   base: int = 0) -> TransferPlan:
     """Greedy TDM scheduling: earliest conflict-free start slot per
     transfer (the unrolled-time version of the CCU's slot allocation — a
     transfer that loses a slot to an earlier reservation retries at the
@@ -214,7 +216,16 @@ def plan_transfers(shape: tuple[int, ...], transfers: list[Transfer],
     matching ``TdmAllocator.allocate_batch``).  An explicit ``order``
     (a permutation of the transfer indices — how
     `repro.core.fabric.NomFabric` applies its registered policies)
-    overrides ``policy``."""
+    overrides ``policy``.
+
+    ``busy`` (link -> set of *absolute* rounds) makes link reservations
+    persistent across calls: pass the same mapping again and this batch
+    packs around what earlier batches still hold — how ``NomFabric``'s
+    rounds backend models back-to-back batches contending like the tdm
+    backend does.  The batch is anchored at absolute round ``base`` and
+    new reservations are recorded at ``base + start + hop``; the returned
+    plan's ``starts`` stay batch-relative.  ``busy=None`` (default) keeps
+    the original one-shot behavior (a private map, nothing persists)."""
     paths = [_dor_path(t.src, t.dst, shape, torus) for t in transfers]
     if order is not None:
         order = list(order)
@@ -224,7 +235,8 @@ def plan_transfers(shape: tuple[int, ...], transfers: list[Transfer],
         order = list(range(len(transfers)))
     else:
         raise ValueError(f"unknown policy {policy!r}")
-    busy: dict[tuple, set[int]] = defaultdict(set)   # link -> set of rounds
+    if busy is None:
+        busy = defaultdict(set)   # link -> set of rounds (this call only)
     starts = [0] * len(transfers)
     for i in order:
         path = paths[i]
@@ -232,11 +244,12 @@ def plan_transfers(shape: tuple[int, ...], transfers: list[Transfer],
             continue
         s = 0
         while True:
-            if all((s + j) not in busy[hop] for j, hop in enumerate(path)):
+            if all(base + s + j not in busy.get(hop, ())
+                   for j, hop in enumerate(path)):
                 break
             s += 1
         starts[i] = s
         for j, hop in enumerate(path):
-            busy[hop].add(s + j)
+            busy.setdefault(hop, set()).add(base + s + j)
     return TransferPlan(shape=shape, torus=torus, transfers=transfers,
                         starts=starts, paths=paths)

@@ -54,6 +54,13 @@ class TransferRequest:
         (RowClone-FPM); on the rounds backend it is a local no-route
         transfer.  Either way it shares the batch's admission order and
         shows up in :attr:`ScheduleReport.n_init`.
+      src_stack, dst_stack: two-level addressing for a
+        :class:`~repro.core.fabric.FabricCluster` — the stack each
+        endpoint's (then stack-local) node id lives in.  ``None`` (the
+        default) means ``src``/``dst`` are flat ids: plain node ids on a
+        single-stack fabric, global ids (see
+        :meth:`~repro.core.topology.StackedTopology.global_id`) on a
+        cluster.  Single-stack fabrics ignore these fields.
     """
     src: object
     dst: object
@@ -62,6 +69,8 @@ class TransferRequest:
     max_extra_slots: int = 0
     cycle: int | None = None
     op: str = "copy"
+    src_stack: int | None = None
+    dst_stack: int | None = None
 
 
 @dataclasses.dataclass
@@ -90,6 +99,10 @@ class ScheduleReport:
         quadratically with the batch.
       n_init: INIT-class requests (``op="init"``) in this batch — the
         eviction/initialization share of the traffic.
+      n_cross_stack: requests whose endpoints live in different stacks of
+        a :class:`~repro.core.topology.StackedTopology` (scheduled as
+        two-phase segmented circuits by a ``FabricCluster``); 0 on every
+        single-stack fabric.
     """
     backend: str               # "tdm" | "rounds"
     n_requests: int
@@ -102,6 +115,7 @@ class ScheduleReport:
     conflicts: int = 0         # stale-snapshot retries (tdm backend)
     n_searched: int = 0        # per-request searches over all passes (tdm)
     n_init: int = 0            # INIT-class (op="init") requests in the batch
+    n_cross_stack: int = 0     # cross-stack requests (FabricCluster only)
     agg_windows: int = 0       # windows folded into avg_inflight by merge()
     #   (0 on a fresh report: its own n_windows is the weight)
 
@@ -127,6 +141,7 @@ class ScheduleReport:
             conflicts=self.conflicts + other.conflicts,
             n_searched=self.n_searched + other.n_searched,
             n_init=self.n_init + other.n_init,
+            n_cross_stack=self.n_cross_stack + other.n_cross_stack,
             agg_windows=wa + wb)
 
 

@@ -25,6 +25,11 @@ class EnergyParams:
     e_bus_bit: float = 0.60         # long global shared-bus wire per bit
     e_router_static_per_cycle: float = 0.002  # per router (NoM overhead)
     n_routers: int = 256
+    # Inter-stack SerDes lane per bit per directed hop (pJ) — cheaper than
+    # the full off-chip path (short cube-to-cube traces, no DIMM bus) but
+    # an order of magnitude above a TSV; charged per `serdes_bytes` of a
+    # multi-stack run (each byte counted once per SerDes hop it crossed).
+    e_serdes_bit: float = 4.0
     # In-DRAM bulk initialization (RowClone-FPM zero): one activate of the
     # all-zeros source row pattern + precharge per cleared row — no column
     # I/O leaves the mats, so per-row cost sits at the ACT/PRE energy (the
@@ -54,9 +59,11 @@ def energy_pj(res: SimResult, params: EnergyParams = EnergyParams()) -> dict:
     offchip = res.offchip_bytes * 8 * p.e_offchip_bit
     nom = res.nom_hop_beats * 64 * p.e_hop_bit
     bus = res.bus_busy_cycles * 64 * p.e_bus_bit
+    serdes = res.extra.get("serdes_bytes", 0) * 8 * p.e_serdes_bit
     static = (res.cycles * p.e_router_static_per_cycle * p.n_routers
               if res.config.startswith("nom") else 0.0)
-    total = dram + init + offchip + nom + bus + static
+    total = dram + init + offchip + nom + bus + serdes + static
     return {"dram": dram, "dram_init": init, "offchip": offchip,
-            "nom_links": nom, "shared_bus": bus, "router_static": static,
+            "nom_links": nom, "shared_bus": bus, "serdes_links": serdes,
+            "router_static": static,
             "total": total, "per_access": total / max(1, accesses)}

@@ -26,9 +26,10 @@ from collections import defaultdict
 
 import numpy as np
 
-from repro.core.fabric import AdmissionQueue, FabricOverflow, NomFabric
+from repro.core.fabric import (AdmissionQueue, FabricCluster, FabricOverflow,
+                               NomFabric)
 from repro.core.slot_alloc import CopyRequest, TdmAllocator, TdmAllocatorLight
-from repro.core.topology import Mesh3D
+from repro.core.topology import Mesh3D, StackedTopology, make_topology
 
 from .dram import OffChipLink, SharedInternalBus, Timing, VaultController
 from .workloads import LINE, Op, Request
@@ -63,7 +64,7 @@ class SimParams:
       admission that would exceed it is pushed to a later window.
     """
     config: str = "nom"
-    mesh: Mesh3D = dataclasses.field(default_factory=lambda: Mesh3D(8, 8, 4))
+    mesh: Mesh3D = dataclasses.field(default_factory=make_topology)
     n_slots: int = 16
     timing: Timing = dataclasses.field(default_factory=Timing)
     window: int = 32                 # outstanding memory ops (MLP window)
@@ -74,6 +75,14 @@ class SimParams:
     nom_ccu_queue_depth: int = 8     # bounded CCU request queue (see above)
     nom_max_inflight: int = 0        # per-TDM-window circuit cap (0 = off)
     instr_per_line: int = 2          # conventional copy: LD+ST per line
+    # Multi-stack: `stacks` > 1 chains that many copies of `mesh` over
+    # SerDes links (bank ids become global ids over all stacks); under the
+    # NoM configs the CCU becomes a FabricCluster and cross-stack copies
+    # ride two-phase segmented circuits.
+    stacks: int = 1
+    stack_link: str = "ring"         # inter-stack link graph: ring | full
+    serdes_latency: int = 8          # per-SerDes-hop beat latency (cycles)
+    serdes_link_bytes: int = 4       # bytes per SerDes TDM slot-window
 
 
 @dataclasses.dataclass
@@ -105,19 +114,30 @@ class MemorySystem:
 
     def __init__(self, p: SimParams):
         self.p = p
-        self.mesh = p.mesh
+        self.mesh = p.mesh                       # per-stack geometry
+        self.topology = (make_topology(p.stacks, p.mesh, link=p.stack_link,
+                                       link_latency=p.serdes_latency,
+                                       link_bytes=p.serdes_link_bytes)
+                         if p.stacks > 1 else p.mesh)
+        self.stacked = isinstance(self.topology, StackedTopology)
         t = p.timing
-        n_vaults = self.mesh.n_vaults
+        n_vaults = self.mesh.n_vaults * p.stacks
         banks_per_vault = len(self.mesh.banks_of_vault(0))
         self.vaults = [VaultController(t, banks_per_vault)
                        for _ in range(n_vaults)]
         self.offchip = OffChipLink(t)
         self.shared_bus = SharedInternalBus()
         alloc: TdmAllocator | None = None
-        if p.config == "nom":
-            alloc = TdmAllocator(self.mesh, p.n_slots)
-        elif p.config == "nom_light":
-            alloc = TdmAllocatorLight(self.mesh, p.n_slots)
+        alloc_cls = {"nom": TdmAllocator, "nom_light": TdmAllocatorLight} \
+            .get(p.config)
+        stack_allocs: list[TdmAllocator] | None = None
+        if alloc_cls is not None:
+            if self.stacked:
+                stack_allocs = [alloc_cls(m, p.n_slots)
+                                for m in self.topology.stacks]
+                alloc = stack_allocs[0]
+            else:
+                alloc = alloc_cls(self.mesh, p.n_slots)
         # Calibration against the RowClone-FPM row-cycle timing: an
         # in-bank zero costs t.rowclone_fpm logic cycles per row, i.e.
         # ceil(rowclone_fpm / n_slots) TDM windows — so the zero-hop
@@ -127,16 +147,22 @@ class MemorySystem:
         if alloc is not None:
             # ceil so a k-row INIT occupies exactly k * windows_per_row
             # windows (floor would overshoot by one window per row).
-            alloc.init_row_bytes = max(
-                1, -(-t.row_bytes // self.init_windows_per_row))
+            for a in (stack_allocs or [alloc]):
+                a.init_row_bytes = max(
+                    1, -(-t.row_bytes // self.init_windows_per_row))
         # Bounded CCU request queue, calibrated against the router-buffering
         # cap: a queue deeper than the in-flight circuit budget would only
         # park requests the mesh cannot admit, so the cap clamps the depth.
         depth = max(1, p.nom_ccu_queue_depth)
         if p.nom_max_inflight:
             depth = max(1, min(depth, p.nom_max_inflight))
-        self.fabric: NomFabric | None = None
-        if alloc is not None:
+        self.fabric: NomFabric | FabricCluster | None = None
+        if stack_allocs is not None:
+            self.fabric = FabricCluster(topology=self.topology,
+                                        queue_depth=depth, overflow="block",
+                                        allocators=stack_allocs)
+            self.ccu = self.fabric.queue
+        elif alloc is not None:
             self.fabric = NomFabric(allocator=alloc, queue_depth=depth,
                                     overflow="block")
             self.ccu = self.fabric.queue
@@ -160,16 +186,34 @@ class MemorySystem:
         self.nom_setup_retries = 0     # saturated-mesh re-allocations
         self.nom_batches = 0
         self.nom_batched_reqs = 0
+        # SerDes window occupancy (multi-stack): (channel, slot)-windows
+        # reserved, bytes that crossed inter-stack links (per directed
+        # hop), and how many copies went cross-stack.
+        self.serdes_windows = 0
+        self.serdes_bytes = 0
+        self.nom_cross_stack = 0
 
     # -- helpers -------------------------------------------------------------
     @property
     def alloc(self) -> TdmAllocator | None:
-        """The fabric's allocator (None on non-NoM configs)."""
-        return None if self.fabric is None else self.fabric.allocator
+        """A representative allocator (None on non-NoM configs): the
+        single fabric's, or stack 0's on a cluster — all stacks share the
+        same width/slot parameters, which is what the window-estimate and
+        telemetry callers need."""
+        if self.fabric is None:
+            return None
+        if isinstance(self.fabric, FabricCluster):
+            return self.fabric.fabrics[0].allocator
+        return self.fabric.allocator
+
+    def _locate(self, bank: int) -> tuple[int, int]:
+        """Global bank id -> (stack, stack-local node id)."""
+        return self.topology.locate(bank) if self.stacked else (0, bank)
 
     def _vault_bank(self, bank: int) -> tuple[VaultController, int]:
-        v = self.mesh.vault_of(bank)
-        local = self.mesh.banks_of_vault(v).index(bank)
+        stack, node = self._locate(bank)
+        v = stack * self.mesh.n_vaults + self.mesh.vault_of(node)
+        local = self.mesh.banks_of_vault(self.mesh.vault_of(node)).index(node)
         return self.vaults[v], local
 
     # -- window-inflight bookkeeping ------------------------------------------
@@ -416,18 +460,36 @@ class MemorySystem:
             link_cycles = dist + (c.n_windows - 1) * p.n_slots
             xfer_done = c.start_cycle + int(np.ceil(link_cycles
                                                     / p.nom_link_ratio))
-            beats = (r.nbytes // 8) * dist
-            self.nom_hop_beats += beats
+            link_slots = getattr(c, "link_slots", None)
+            if link_slots:
+                # Cross-stack: only the two mesh segments move beats over
+                # TSV/mesh links; the SerDes share is accounted per
+                # directed channel hop for the energy model.
+                mesh_hops = (len(c.near_hops) - 1) + (len(c.far_hops) - 1)
+                self.nom_hop_beats += (r.nbytes // 8) * mesh_hops
+                self.serdes_bytes += r.nbytes * len(link_slots)
+                self.serdes_windows += c.n_windows * len(link_slots)
+                self.nom_cross_stack += 1
+            else:
+                self.nom_hop_beats += (r.nbytes // 8) * dist
+            s_loc = self._locate(r.src_bank)[1]
+            d_loc = self._locate(r.dst_bank)[1]
             if self.p.config == "nom":
-                # dedicated-Z-link vertical beats (for the TSV dual-use stat)
-                sz = self.mesh.coords(r.src_bank)[2]
-                dz = self.mesh.coords(r.dst_bank)[2]
-                self.nom_vertical_cycles += abs(sz - dz) * (r.nbytes // 8)
+                # dedicated-Z-link vertical beats (for the TSV dual-use
+                # stat); a cross-stack copy descends to the near bridge on
+                # layer 0 and climbs to the destination layer far-side.
+                sz = self.mesh.coords(s_loc)[2]
+                dz = self.mesh.coords(d_loc)[2]
+                vert = (sz + dz) if link_slots else abs(sz - dz)
+                self.nom_vertical_cycles += vert * (r.nbytes // 8)
             elif c.uses_bus and c.bus_column >= 0:
                 # NoM-Light: the vertical hop rides the existing TSV of that
                 # column's vault, stealing bandwidth from regular accesses —
                 # the bandwidth cost behind the paper's 5-20% gap.
                 col_bank = c.bus_column  # a z=0 bank id shares the column idx
+                if self.stacked:   # map the stack-local column to its stack
+                    col_bank = self.topology.global_id(
+                        self._locate(r.src_bank)[0], col_bank)
                 vc, _b = self._vault_bank(col_bank)
                 vc._tsv(c.start_cycle, r.nbytes // 8)
             # 4) destination write via the copy queue.
@@ -563,6 +625,16 @@ def simulate(reqs: list[Request], p: SimParams, name: str = "") -> SimResult:
             "nom_ccu_init_reqs": sys.ccu.init_reqs,
             "nom_ccu_init_peak": sys.ccu.peak_init,
             "nom_ccu_init_windows": sys.nom_init_windows,
+        }
+    if nom and p.stacks > 1:
+        seg = sys.fabric.segmented
+        extra |= {
+            "n_stacks": p.stacks,
+            "nom_cross_stack": sys.nom_cross_stack,
+            "serdes_windows": sys.serdes_windows,
+            "serdes_bytes": sys.serdes_bytes,
+            "serdes_rollbacks": seg.rollbacks,
+            "serdes_denied": seg.denied,
         }
     return SimResult(
         name=name, config=p.config, cycles=cycles, instructions=total_instr,

@@ -32,9 +32,10 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.fabric import NomFabric
+from repro.core.fabric import FabricCluster, NomFabric
 from repro.core.nom_collectives import nom_all_to_all
 from repro.core.scheduler import TransferRequest
+from repro.core.topology import StackedTopology
 from repro.parallel.compat import get_ambient_mesh, shard_map
 
 from .common import AxesTree, Params, dense_init
@@ -180,11 +181,22 @@ class MoE:
         Requires concrete (non-traced) inputs; ``ep`` defaults to the
         ambient mesh's EP-axis size.
         """
+        ep = self._ep_size() if ep is None else int(ep)
+        blocks, d, itemsize = self._dispatch_blocks(p, x, ep)
+        return self._plan_from_blocks(blocks, d, itemsize, policy)
+
+    def _dispatch_blocks(self, p: Params, x: jax.Array,
+                         ep: int) -> tuple[np.ndarray, int, int]:
+        """Host-side routing shared by the standalone planners: run the
+        router per EP rank with the body's capacity rule and return the
+        ``(ep, ep)`` kept-token block matrix plus the token feature dim
+        and itemsize — the wire description both :meth:`plan_dispatch`
+        (device ring) and :meth:`plan_dispatch_stacked` (bank level,
+        multi-stack) schedule from."""
         c = self.cfg
         if isinstance(x, jax.core.Tracer):
-            raise TypeError("plan_dispatch needs concrete inputs "
+            raise TypeError("dispatch planning needs concrete inputs "
                             "(host-side planning cannot run under jit)")
-        ep = self._ep_size() if ep is None else int(ep)
         e_loc = max(1, c.n_experts // ep)
         dp = 1
         for ax in c.dp_axes:
@@ -208,7 +220,65 @@ class MoE:
                                minlength=c.n_experts)
             for expert, n_tok in enumerate(kept):
                 blocks[r, expert // e_loc] += int(n_tok)
-        return self._plan_from_blocks(blocks, d, itemsize, policy)
+        return blocks, d, itemsize
+
+    def plan_dispatch_stacked(self, p: Params, x: jax.Array,
+                              topology: StackedTopology,
+                              ep: int | None = None,
+                              policy: str = "arrival"):
+        """Expert-dispatch plan when the EP ring spans a multi-stack NoM.
+
+        Same host-side routing as :meth:`plan_dispatch`, but instead of
+        the abstract ``(ep,)`` device ring each EP rank is homed on a
+        bank of a :class:`~repro.core.topology.StackedTopology` — rank
+        ``r`` on stack ``r % n_stacks`` (ranks striped across cubes, the
+        expert-placement a capacity-balanced deployment uses), bank
+        ``r // n_stacks`` within the stack's mesh.  Every non-empty
+        (src, dst) block then becomes a bank-level request through a
+        per-topology :class:`~repro.core.fabric.FabricCluster`:
+        same-stack blocks ride that stack's TDM mesh, cross-stack blocks
+        negotiate two-phase circuits over the SerDes links.  Returns
+        ``(results, report)``; ``report.n_cross_stack`` counts the
+        inter-cube share, and :attr:`last_dispatch_report` is updated."""
+        ep = self._ep_size() if ep is None else int(ep)
+        blocks, d, itemsize = self._dispatch_blocks(p, x, ep)
+        ns = topology.n_stacks
+
+        def home(r: int) -> tuple[int, int]:
+            stack = r % ns
+            return stack, (r // ns) % topology.stacks[stack].n_nodes
+
+        reqs = []
+        for r in range(ep):
+            for q in range(ep):
+                if r == q or not blocks[r, q]:
+                    continue
+                (rs, rn), (qs, qn) = home(r), home(q)
+                if (rs, rn) == (qs, qn):
+                    continue         # two ranks folded onto one bank
+                nbytes = int(blocks[r, q]) * d * itemsize
+                reqs.append(TransferRequest(
+                    src=rn, dst=qn, nbytes=nbytes, tag=("dispatch", r, q),
+                    src_stack=rs, dst_stack=qs))
+                reqs.append(TransferRequest(
+                    src=qn, dst=rn, nbytes=nbytes, tag=("combine", q, r),
+                    src_stack=qs, dst_stack=rs))
+        results, report = self._stacked_cluster(topology).schedule(
+            reqs, policy=policy)
+        object.__setattr__(self, "_last_dispatch", (results, report))
+        return results, report
+
+    def _stacked_cluster(self, topology: StackedTopology) -> FabricCluster:
+        """Per-topology :class:`FabricCluster` session for
+        :meth:`plan_dispatch_stacked`, kept across forwards (same
+        lifetime discipline as :meth:`_dispatch_fabric`)."""
+        clusters = getattr(self, "_clusters", None)
+        if clusters is None:
+            clusters = {}
+            object.__setattr__(self, "_clusters", clusters)
+        if topology not in clusters:
+            clusters[topology] = FabricCluster(topology=topology)
+        return clusters[topology]
 
     def _dispatch_fabric(self, ep: int) -> NomFabric:
         """The MoE's dispatch-planning session: one rounds-backend

@@ -32,9 +32,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.fabric import AdmissionQueue, NomFabric
-from repro.core.scheduler import ScheduleReport
-from repro.core.topology import Mesh3D
+from repro.core.fabric import AdmissionQueue, FabricCluster, NomFabric
+from repro.core.scheduler import ScheduleReport, TransferRequest
+from repro.core.topology import Mesh3D, StackedTopology, make_topology
 from repro.models.lm import CausalLM, EncDecLM
 from repro.serving.placement import (BankPool, LeafSpec, step_requests,
                                      teardown_requests)
@@ -105,8 +105,11 @@ class Engine:
     max_len: int = 256
     # NoM cache-transfer scheduling (set track_transfers=False to opt out).
     track_transfers: bool = True
-    cache_mesh: Mesh3D = dataclasses.field(
-        default_factory=lambda: Mesh3D(8, 8, 4))
+    # A Mesh3D runs the single-stack NomFabric path; a StackedTopology
+    # (from make_topology(n_stacks>1, ...)) swaps in a FabricCluster and
+    # global bank ids, enabling cross-stack placement and migrate_tenant.
+    cache_mesh: Mesh3D | StackedTopology = dataclasses.field(
+        default_factory=make_topology)
     n_slots: int = 16
     max_extra_slots: int = 3
     keep_reports: int = 256
@@ -125,10 +128,19 @@ class Engine:
             raise ValueError(f"unknown admission mode {self.admission!r}; "
                              f"choose from {tuple(_ADMISSION)}")
         self._step = jax.jit(self._decode_one)
-        self.fabric = (NomFabric(mesh=self.cache_mesh, n_slots=self.n_slots,
-                                 policy=self.sched_policy,
-                                 overflow=_ADMISSION[self.admission])
-                       if self.track_transfers else None)
+        stacked = isinstance(self.cache_mesh, StackedTopology)
+        self.fabric = None
+        if self.track_transfers:
+            if stacked:
+                self.fabric = FabricCluster(
+                    topology=self.cache_mesh, n_slots=self.n_slots,
+                    policy=self.sched_policy,
+                    overflow=_ADMISSION[self.admission])
+            else:
+                self.fabric = NomFabric(
+                    mesh=self.cache_mesh, n_slots=self.n_slots,
+                    policy=self.sched_policy,
+                    overflow=_ADMISSION[self.admission])
         self.pool = (BankPool(self.cache_mesh, self.placement_policy)
                      if self.track_transfers else None)
         # Waiting streams, under the same bounded-queue semantics as the
@@ -145,6 +157,7 @@ class Engine:
         self.last_report: ScheduleReport | None = None
         self.n_sched_steps = 0
         self.n_repacks = 0
+        self.n_migrations = 0
         self.n_idle_evictions = 0
         self.n_queue_expired = 0
         self.peak_tenants = 0
@@ -328,6 +341,42 @@ class Engine:
         self._admit_waiting()
         return report
 
+    def migrate_tenant(self, name: str,
+                       dst_stack: int) -> ScheduleReport | None:
+        """Move a live tenant's cache homes onto another stack.
+
+        Requires a :class:`~repro.core.topology.StackedTopology` engine.
+        The pool re-homes every lease onto ``dst_stack``
+        (:meth:`BankPool.migrate`), then one fabric batch carries the
+        tenant's state across: a cross-stack COPY per leaf (old home →
+        new home, full leased footprint, streamed through the SerDes
+        links) followed by teardown INIT scrubs of the vacated homes —
+        the paper's bulk-transfer + initialization mix at tenant
+        granularity.  Returns that batch's report, or None when the
+        migration was a no-op (already on ``dst_stack``, or the
+        destination cannot fit the tenant — placement is then
+        unchanged)."""
+        if self.pool is None:
+            raise RuntimeError("track_transfers=False engine has no pool")
+        if name not in self._tenants:
+            raise ValueError(f"tenant {name!r} is not active "
+                             "(never opened, or already closed)")
+        ten = self._tenants[name]
+        old, fresh = self.pool.migrate(name, dst_stack)
+        if not fresh:
+            return None
+        # Leases already on dst_stack were kept in place by the pool.
+        ten.leases = self.pool.leases(name)
+        reqs = [TransferRequest(
+            src=o.home, dst=f.home,
+            nbytes=max(o.leaf.lease_bytes, o.leaf.step_bytes, 1),
+            tag=(name, o.leaf.tag, "migrate"),
+            max_extra_slots=self.max_extra_slots)
+            for o, f in zip(old, fresh)]
+        reqs += teardown_requests(old)
+        self.n_migrations += 1
+        return self._schedule_batch(reqs)
+
     def schedule_tick(self, tenants: list[str] | None = None
                       ) -> ScheduleReport | None:
         """Schedule one step's transfer set for the named tenants (default:
@@ -459,7 +508,9 @@ class Engine:
         teardown INITs), concurrency (``max_inflight`` /
         ``avg_inflight``), ``stall_cycles``, ``search_rounds`` /
         ``conflicts``, tenancy (``active_tenants`` / ``peak_tenants`` /
-        ``repacks``), and admission health (``admission`` /
+        ``repacks`` / ``migrations`` / ``cross_stack`` — scheduled
+        cross-stack circuits, nonzero only on a stacked engine), and
+        admission health (``admission`` /
         ``sched_policy`` — the fabric's live policy pick —
         ``queued_tenants`` / ``shed_tenants`` / ``tenant_queue_expired``
         / ``idle_evictions``)."""
@@ -480,6 +531,8 @@ class Engine:
             "active_tenants": len(self._tenants),
             "peak_tenants": self.peak_tenants,
             "repacks": self.n_repacks,
+            "migrations": self.n_migrations,
+            "cross_stack": getattr(agg, "n_cross_stack", 0),
             "admission": self.admission,
             "sched_policy": self.fabric.effective_policy,
             "queued_tenants": len(self.tenant_queue.items),

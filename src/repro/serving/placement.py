@@ -54,7 +54,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core.scheduler import TransferRequest
-from repro.core.topology import Mesh3D
+from repro.core.topology import Mesh3D, StackedTopology
 
 PLACEMENT_POLICIES = ("spread", "partition", "stall_feedback")
 
@@ -100,46 +100,88 @@ class BankPool:
     A bank is leased to at most one tenant at a time (never double-leased;
     asserted on every grant), and :meth:`release` must free it before it
     can be re-leased.
+
+    The pool also accepts a :class:`~repro.core.topology.StackedTopology`:
+    homes are then *global* bank ids spanning every stack, placement
+    groups are per-stack columns (a tenant partitioned into stack 0 never
+    shares a group with one in stack 1), :meth:`lease` can pin a tenant
+    to a subset of stacks, and :meth:`migrate` re-homes a whole tenant
+    onto another stack (the engine turns the move into cross-stack COPY
+    circuits plus teardown INITs over the vacated homes).
     """
 
-    def __init__(self, mesh: Mesh3D, policy: str = "spread"):
+    def __init__(self, mesh: Mesh3D | StackedTopology,
+                 policy: str = "spread"):
         if policy not in PLACEMENT_POLICIES:
             raise ValueError(f"unknown policy {policy!r}; "
                              f"choose from {PLACEMENT_POLICIES}")
-        self.mesh = mesh
+        self.topology = mesh
+        self._stacked = isinstance(mesh, StackedTopology)
+        self._meshes = mesh.stacks if self._stacked else (mesh,)
+        self.mesh = self._meshes[0]
         self.policy = policy
-        plane = mesh.X * mesh.Y
-        pool = list(range(plane, mesh.n_nodes))
-        self._pool = pool or list(range(plane))
-        self._single_layer = not pool
+        self._pool: list[int] = []
+        self._single: list[bool] = []           # per stack: Z == 1 fallback
+        self._group_off: list[int] = []         # per stack: first group id
+        groups = 0
+        for s, m in enumerate(self._meshes):
+            off = mesh.offsets[s] if self._stacked else 0
+            plane = m.X * m.Y
+            dram = list(range(plane, m.n_nodes))
+            self._single.append(not dram)
+            self._pool.extend(off + b for b in (dram or range(plane)))
+            self._group_off.append(groups)
+            # multi-layer stacks have X*Y column groups, single-layer Y rows
+            groups += m.X * m.Y if dram else m.Y
+        self._single_layer = self._single[0]
         self._owner: dict[int, str] = {}        # bank -> tenant
         self._leased: dict[str, list[Lease]] = {}
         self._col_owner: dict[int, str] = {}    # group -> tenant (partition)
         self._lease_seq = 0                     # rotates spread start points
 
     # -- geometry helpers -------------------------------------------------
+    def _locate(self, bank: int) -> tuple[int, int]:
+        return self.topology.locate(bank) if self._stacked else (0, bank)
+
+    def _gid(self, stack: int, local: int) -> int:
+        return self.topology.global_id(stack, local) if self._stacked \
+            else local
+
+    def stack_of(self, bank: int) -> int:
+        """Stack index owning global bank id ``bank`` (0 on a bare mesh)."""
+        return self._locate(bank)[0]
+
     def _staging_for(self, home: int) -> int:
-        x, y, _z = self.mesh.coords(home)
-        if self._single_layer:
-            return self.mesh.node_id(0, y, 0)
-        return self.mesh.node_id(x, y, 0)
+        stack, local = self._locate(home)
+        m = self._meshes[stack]
+        x, y, _z = m.coords(local)
+        if self._single[stack]:
+            return self._gid(stack, m.node_id(0, y, 0))
+        return self._gid(stack, m.node_id(x, y, 0))
 
     def _column(self, bank: int) -> int:
         """Path-confining placement group of a bank: the (x, y) column on
         a multi-layer mesh (cache-flush circuits are vertical), the *row*
         on a single-layer mesh (circuits run along the row from the edge
         staging bank) — the unit the partition policy isolates by and
-        :meth:`column_load` counts over."""
-        if self._single_layer:
-            return self.mesh.coords(bank)[1]
-        return self.mesh.column_of(bank)
+        :meth:`column_load` counts over.  Groups never span stacks: each
+        stack gets a disjoint group-id range."""
+        stack, local = self._locate(bank)
+        m = self._meshes[stack]
+        g = m.coords(local)[1] if self._single[stack] else m.column_of(local)
+        return self._group_off[stack] + g
 
     def _n_groups(self) -> int:
-        return self.mesh.Y if self._single_layer else self.mesh.X * self.mesh.Y
+        last = len(self._meshes) - 1
+        m = self._meshes[last]
+        n = m.Y if self._single[last] else m.X * m.Y
+        return self._group_off[last] + n
 
-    def _free_in_column(self, col: int) -> list[int]:
+    def _free_in_column(self, col: int,
+                        allowed: set[int] | None = None) -> list[int]:
         return [b for b in self._pool
-                if self._column(b) == col and b not in self._owner]
+                if self._column(b) == col and b not in self._owner
+                and (allowed is None or b in allowed)]
 
     # -- candidate orders per policy ---------------------------------------
     def _spread_order(self, seq: int, i: int) -> list[int]:
@@ -147,39 +189,46 @@ class BankPool:
         start = (seq * 13 + i * 37 + 11) % n
         return [self._pool[(start + k) % n] for k in range(n)]
 
-    def _partition_candidate(self, tenant: str) -> int | None:
+    def _partition_candidate(self, tenant: str,
+                             allowed: set[int] | None = None) -> int | None:
         """Next home in the tenant's owned groups, acquiring a fresh
         unowned group when the owned ones are exhausted."""
         owned = [c for c, t in self._col_owner.items() if t == tenant]
         # Prefer the owned group with the most free banks (fill evenly).
         for col in sorted(owned,
-                          key=lambda c: -len(self._free_in_column(c))):
-            free = self._free_in_column(col)
+                          key=lambda c: -len(self._free_in_column(c,
+                                                                  allowed))):
+            free = self._free_in_column(col, allowed)
             if free:
                 return free[0]
         for col in range(self._n_groups()):
-            if col not in self._col_owner and self._free_in_column(col):
+            if col not in self._col_owner and self._free_in_column(col,
+                                                                   allowed):
                 self._col_owner[col] = tenant
-                return self._free_in_column(col)[0]
+                return self._free_in_column(col, allowed)[0]
         return None
 
-    def _least_loaded_order(self, avoid: set[int]) -> list[int]:
+    def _least_loaded_order(self, avoid: set[int],
+                            allowed: set[int] | None = None) -> list[int]:
         load = self.column_load()
-        return sorted((b for b in self._pool if b not in self._owner),
+        return sorted((b for b in self._pool if b not in self._owner
+                       and (allowed is None or b in allowed)),
                       key=lambda b: (self._column(b) in avoid,
                                      load.get(self._column(b), 0),
                                      b))
 
     def _pick_home(self, tenant: str, i: int, policy: str, seq: int,
-                   avoid: set[int] | None = None) -> int:
+                   avoid: set[int] | None = None,
+                   allowed: set[int] | None = None) -> int:
         if policy == "partition":
-            home = self._partition_candidate(tenant)
+            home = self._partition_candidate(tenant, allowed)
         elif avoid is not None:     # repack: prefer away from hot columns
-            order = self._least_loaded_order(avoid)
+            order = self._least_loaded_order(avoid, allowed)
             home = order[0] if order else None
         else:                       # spread / stall_feedback initial
             home = next((b for b in self._spread_order(seq, i)
-                         if b not in self._owner), None)
+                         if b not in self._owner
+                         and (allowed is None or b in allowed)), None)
         if home is None:
             raise RuntimeError(f"bank pool exhausted leasing for {tenant!r} "
                                f"({len(self._owner)}/{len(self._pool)} "
@@ -188,19 +237,30 @@ class BankPool:
 
     # -- public API ---------------------------------------------------------
     def lease(self, tenant: str, leaves: list[LeafSpec],
-              _avoid: set[int] | None = None) -> list[Lease]:
+              _avoid: set[int] | None = None,
+              stacks: set[int] | None = None) -> list[Lease]:
         """Lease one home bank per leaf to ``tenant`` under the pool's
         policy.  Returns the leases in leaf order; raises ``RuntimeError``
         when the pool is exhausted.  A tenant may lease repeatedly (e.g.
-        after :meth:`release`); banks are never double-leased."""
+        after :meth:`release`); banks are never double-leased.  On a
+        stacked topology ``stacks`` pins the grant to those stack indices
+        (every home drawn from them); ``None`` means any stack."""
         seq = self._lease_seq
         self._lease_seq = (self._lease_seq + 1) % max(1, len(self._pool))
         cols_before = {c for c, t in self._col_owner.items() if t == tenant}
+        allowed = None
+        if stacks is not None:
+            want = set(stacks)
+            bad = want - set(range(len(self._meshes)))
+            if bad:
+                raise ValueError(f"unknown stack indices {sorted(bad)} "
+                                 f"(pool has {len(self._meshes)} stacks)")
+            allowed = {b for b in self._pool if self.stack_of(b) in want}
         out = []
         try:
             for i, leaf in enumerate(leaves):
                 home = self._pick_home(tenant, i, self.policy, seq,
-                                       avoid=_avoid)
+                                       avoid=_avoid, allowed=allowed)
                 assert home not in self._owner, "double lease"
                 self._owner[home] = tenant
                 out.append(Lease(tenant=tenant, leaf=leaf, home=home,
@@ -260,9 +320,69 @@ class BankPool:
             return [], []
         return old, fresh
 
+    def _group_stack(self, group: int) -> int:
+        """Stack whose group-id range contains ``group``."""
+        s = 0
+        while s + 1 < len(self._group_off) and group >= self._group_off[s + 1]:
+            s += 1
+        return s
+
+    def migrate(self, tenant: str,
+                dst_stack: int) -> tuple[list[Lease], list[Lease]]:
+        """Re-home ``tenant``'s off-stack leases onto stack ``dst_stack``.
+
+        Leases already on ``dst_stack`` stay exactly where they are (no
+        pointless copy, and their homes are never at risk of a teardown
+        scrub).  Returns ``(old, fresh)`` in matched leaf order for the
+        leases that moved: the engine copies each ``old[i].home`` →
+        ``fresh[i].home`` (cross-stack COPY circuits through the SerDes
+        links) and scrubs the vacated homes with teardown INITs.
+        Returns ``([], [])`` — with placement unchanged — when the
+        tenant holds nothing, already lives entirely on ``dst_stack``,
+        or the destination stack cannot fit the moving leases
+        (all-or-nothing: a failed migration rolls back every grant and
+        group acquisition, leaving the original placement intact)."""
+        if not (0 <= dst_stack < len(self._meshes)):
+            raise ValueError(f"stack {dst_stack} out of range "
+                             f"[0, {len(self._meshes)})")
+        held = self.leases(tenant)
+        moving = [ls for ls in held
+                  if self.stack_of(ls.home) != dst_stack]
+        if not moving:
+            return [], []
+        owner_snap = dict(self._owner)
+        leased_snap = {t: list(v) for t, v in self._leased.items()}
+        col_snap = dict(self._col_owner)
+        # Partially release: only the moving homes, and only the
+        # partition groups on stacks the tenant is leaving.
+        for ls in moving:
+            self._owner.pop(ls.home, None)
+        self._leased[tenant] = [ls for ls in held if ls not in moving]
+        for col in [c for c, t in self._col_owner.items()
+                    if t == tenant and self._group_stack(c) != dst_stack]:
+            del self._col_owner[col]
+        try:
+            fresh = self.lease(tenant, [ls.leaf for ls in moving],
+                               stacks={dst_stack})
+        except RuntimeError:
+            self._owner = owner_snap
+            self._leased = leased_snap
+            self._col_owner = col_snap
+            return [], []
+        return moving, fresh
+
     def leases(self, tenant: str) -> list[Lease]:
         """Current leases held by ``tenant`` (empty list when none)."""
         return list(self._leased.get(tenant, []))
+
+    def stack_load(self) -> dict[int, int]:
+        """Leased banks per stack index — the coarse map
+        :meth:`migrate` balances against (``{0: n}`` on a bare mesh)."""
+        load: dict[int, int] = {}
+        for bank in self._owner:
+            s = self.stack_of(bank)
+            load[s] = load.get(s, 0) + 1
+        return load
 
     def column_load(self) -> dict[int, int]:
         """Leased banks per placement group — the (x, y) column on a
