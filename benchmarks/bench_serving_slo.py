@@ -1,0 +1,80 @@
+"""Trace-driven SLO serving sweep: arrival mixes x admission strategies.
+
+The serving-at-scale measurement the ROADMAP asks for: every built-in
+arrival mix (`repro.serving.loadgen.MIXES` — poisson with a diurnal
+ramp, bursty, heavy-tailed, and the overloaded ``deadline_heavy``) is
+driven through the standard stub engine (`make_slo_engine`) once per
+admission strategy, open loop, for a fixed tick budget.  Each run's
+stats record (p50/p99 admission latency in ticks, shed/expiry rates,
+deadline-miss rate, circuits-per-window on the fabric underneath) comes
+straight from `repro.serving.loadgen.drive`.
+
+Besides the CSV rows, ``run()`` writes ``BENCH_serving.json`` at the
+repo root: the full record grid plus the headline ``dominance`` entry —
+on the ``deadline_heavy`` mix the ``deadline`` strategy must strictly
+reduce the deadline-miss rate vs ``fifo`` (queue *order* is the whole
+point of the strategy registry).  ``scripts/ci.sh`` asserts the file's
+schema and that dominance gate on every PR; ``run(quick=True)`` (the
+``--quick`` harness path) shrinks the tick budget but keeps the full
+mix x strategy grid so the gate is always exercised.
+"""
+import json
+import pathlib
+import time
+
+from repro.serving.admission import registered_admissions
+from repro.serving.loadgen import MIXES, drive, make_slo_engine
+
+RECORD_PATH = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_serving.json"
+
+SEED = 7
+TICKS = 160
+TICKS_QUICK = 48
+STRATEGIES = ("fifo", "deadline", "priority", "hybrid")
+DOMINANCE_MIX = "deadline_heavy"
+
+
+def run(quick: bool = False):
+    ticks = TICKS_QUICK if quick else TICKS
+    assert all(s in registered_admissions() for s in STRATEGIES)
+    rows = []
+    record = {
+        "schema": "serving-slo-v1",
+        "seed": SEED,
+        "ticks": ticks,
+        "engine": {"mesh": [4, 4, 2], "deadline_ticks": 12,
+                   "tenant_queue_depth": 16},
+        "records": [],
+        "dominance": {},
+    }
+    miss = {}
+    for mix in MIXES:
+        for strategy in STRATEGIES:
+            eng = make_slo_engine(strategy)
+            t0 = time.perf_counter()
+            stats = drive(eng, mix, ticks=ticks, seed=SEED)
+            us = (time.perf_counter() - t0) * 1e6
+            record["records"].append(stats)
+            miss[(mix, strategy)] = stats["miss_rate"]
+            rows.append((f"serving_slo/{mix}/{strategy}", us,
+                         f"miss={stats['miss_rate']:.3f}"
+                         f";shed={stats['shed_rate']:.3f}"
+                         f";expiry={stats['expiry_rate']:.3f}"
+                         f";p50={stats['p50_wait']:.1f}"
+                         f";p99={stats['p99_wait']:.1f}"
+                         f";cpw={stats['circuits_per_window']:.2f}"))
+    record["dominance"] = {
+        "mix": DOMINANCE_MIX,
+        "fifo_miss_rate": miss[(DOMINANCE_MIX, "fifo")],
+        "deadline_miss_rate": miss[(DOMINANCE_MIX, "deadline")],
+        "deadline_beats_fifo": (miss[(DOMINANCE_MIX, "deadline")]
+                                < miss[(DOMINANCE_MIX, "fifo")]),
+    }
+    RECORD_PATH.write_text(json.dumps(record, indent=1, sort_keys=True))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,5 +1,6 @@
 """Benchmark harness — one module per paper table/figure + the TPU
 adaptation and roofline reports.  Prints ``name,us_per_call,derived`` CSV."""
+import inspect
 import sys
 import time
 import traceback
@@ -7,8 +8,9 @@ import traceback
 from benchmarks import (bench_ablations, bench_energy, bench_fabric_autotune,
                         bench_freq_scaling, bench_ipc, bench_multistack,
                         bench_nom_a2a, bench_roofline, bench_sched_policies,
-                        bench_serving_tenancy, bench_slot_alloc,
-                        bench_traffic_mix, bench_tsv_conflict)
+                        bench_serving_slo, bench_serving_tenancy,
+                        bench_slot_alloc, bench_traffic_mix,
+                        bench_tsv_conflict)
 
 ALL = [
     ("traffic_mix(Fig3)", bench_traffic_mix),
@@ -21,6 +23,7 @@ ALL = [
     ("sched_policies", bench_sched_policies),
     ("fabric_autotune", bench_fabric_autotune),
     ("serving_tenancy", bench_serving_tenancy),
+    ("serving_slo", bench_serving_slo),
     ("multistack", bench_multistack),
     ("ablations", bench_ablations),
     ("roofline", bench_roofline),
@@ -28,8 +31,10 @@ ALL = [
 
 # --quick: the CI smoke subset — the scheduler-centric benches that gate
 # the concurrent-transfer perf trajectory, fast enough for every PR.
+# A bench whose run() accepts a ``quick`` kwarg is told which mode it is
+# in (serving_slo shrinks its tick budget but keeps its record grid).
 QUICK = ("tsv_conflict", "slot_alloc", "nom_a2a", "sched_policies",
-         "fabric_autotune", "serving_tenancy", "multistack")
+         "fabric_autotune", "serving_tenancy", "serving_slo", "multistack")
 
 
 def main() -> None:
@@ -45,7 +50,9 @@ def main() -> None:
         if quick and not any(q in label for q in QUICK):
             continue
         try:
-            for name, us, derived in mod.run():
+            kw = ({"quick": quick} if "quick"
+                  in inspect.signature(mod.run).parameters else {})
+            for name, us, derived in mod.run(**kw):
                 print(f"{name},{us:.1f},{derived}")
         except Exception as e:  # keep the harness going
             traceback.print_exc()

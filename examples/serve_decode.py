@@ -28,6 +28,9 @@ def main():
     ap.add_argument("--ring-slots", type=int, default=8,
                     help="ring capacity per KV leaf (token slots); decode "
                          "past it emits overwrite-eviction INITs")
+    ap.add_argument("--admission-strategy", default="fifo",
+                    help="registered tenant-admission drain order "
+                         "(fifo | deadline | priority | hybrid)")
     args = ap.parse_args()
 
     mesh = make_mesh((1, 1), ("data", "model"))
@@ -36,7 +39,8 @@ def main():
     model = make_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     eng = Engine(model, cfg, max_len=64, placement_policy=args.policy,
-                 sched_policy=args.sched_policy, ring_slots=args.ring_slots)
+                 sched_policy=args.sched_policy, ring_slots=args.ring_slots,
+                 admission_strategy=args.admission_strategy)
     prompt = jax.random.randint(jax.random.PRNGKey(1),
                                 (args.batch, 6), 0, cfg.vocab)
     if cfg.arch_type == "encdec":
@@ -64,8 +68,10 @@ def main():
     print(f"  tenancy: policy={args.policy} "
           f"peak_tenants={tel['peak_tenants']} repacks={tel['repacks']}")
     print(f"  admission: mode={tel['admission']} "
+          f"strategy={tel['admission_strategy']} "
           f"queued={tel['queued_tenants']} shed={tel['shed_tenants']} "
-          f"idle_evictions={tel['idle_evictions']}")
+          f"idle_evictions={tel['idle_evictions']} "
+          f"wait_p99={tel['admission_wait_p99']:.1f}t")
     print(f"  fabric: sched_policy={tel['sched_policy']} "
           f"(engine fabric session: {eng.fabric.n_flushes} flushes)")
     print(f"  eviction/INIT: {tel['init_requests']}/{tel['requests']} "

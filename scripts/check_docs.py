@@ -43,17 +43,27 @@ def public_methods(cls) -> list[str]:
 def check_serving_api_documented() -> None:
     """Every public Engine/BankPool/NomFabric/StackedTopology/
     FabricCluster method must appear in some doc page (the fabric and
-    the two-level topology are the API every subsystem now holds)."""
+    the two-level topology are the API every subsystem now holds) — and
+    likewise every public name of the SLO-serving surface: the loadgen
+    module (mixes, generator, drive harness) and the admission-strategy
+    registry."""
     from repro.core.fabric import FabricCluster, NomFabric
     from repro.core.topology import StackedTopology
     from repro.serving import BankPool, Engine
+    from repro.serving import admission, loadgen
     corpus = "\n".join((ROOT / rel).read_text() for rel in DOC_PAGES)
-    for cls in (Engine, BankPool, NomFabric, StackedTopology, FabricCluster):
+    for cls in (Engine, BankPool, NomFabric, StackedTopology, FabricCluster,
+                loadgen.LoadGen, admission.AdmissionContext):
         for m in public_methods(cls):
             # Word-boundary match: "release" must not satisfy "lease".
             if not re.search(rf"\b{re.escape(m)}\b", corpus):
                 fail(f"{cls.__name__}.{m} is public but mentioned in no "
                      f"doc page ({', '.join(DOC_PAGES)})")
+    for mod in (loadgen, admission):
+        for name in mod.__all__:
+            if not re.search(rf"\b{re.escape(name)}\b", corpus):
+                fail(f"{mod.__name__}.{name} is public but mentioned in "
+                     f"no doc page ({', '.join(DOC_PAGES)})")
 
 
 def main() -> None:

@@ -17,7 +17,7 @@ python -m pytest -q "$@"
 
 echo "== smoke: benchmarks (quick subset) =="
 # the gates below must see THIS run's records
-rm -f BENCH_alloc.json BENCH_multistack.json
+rm -f BENCH_alloc.json BENCH_multistack.json BENCH_serving.json
 python benchmarks/run.py --quick
 
 echo "== perf record: BENCH_alloc.json =="
@@ -76,4 +76,45 @@ for n, entry in rec["migration"].items():
 print(f"BENCH_multistack.json OK: cross/intra="
       f"{cpw.get('cross_over_intra')} "
       f"migration_sweep={sorted(rec['migration'])}")
+EOF
+
+echo "== perf record: BENCH_serving.json =="
+python - <<'EOF'
+import json, pathlib, sys
+path = pathlib.Path("BENCH_serving.json")
+if not path.is_file():
+    sys.exit("BENCH_serving.json missing: benchmarks/run.py --quick "
+             "must write it")
+rec = json.loads(path.read_text())
+required = ("schema", "seed", "ticks", "engine", "records", "dominance")
+missing = [k for k in required if k not in rec]
+if missing:
+    sys.exit(f"BENCH_serving.json missing keys: {missing}")
+per_record = ("mix", "strategy", "arrivals", "admitted", "shed", "expired",
+              "waiting", "shed_rate", "expiry_rate", "p50_wait", "p99_wait",
+              "deadline_misses", "miss_rate", "circuits_per_window")
+mixes, strategies = set(), set()
+for entry in rec["records"]:
+    bad = [k for k in per_record if k not in entry]
+    if bad:
+        sys.exit(f"BENCH_serving.json record {entry.get('mix')}/"
+                 f"{entry.get('strategy')} missing {bad}")
+    mixes.add(entry["mix"])
+    strategies.add(entry["strategy"])
+if len(mixes) < 3 or len(strategies) < 2:
+    sys.exit(f"BENCH_serving.json grid too small: {len(mixes)} mixes x "
+             f"{len(strategies)} strategies (need >=3 x >=2)")
+dom = rec["dominance"]
+for k in ("mix", "fifo_miss_rate", "deadline_miss_rate",
+          "deadline_beats_fifo"):
+    if k not in dom:
+        sys.exit(f"BENCH_serving.json dominance missing {k}")
+if dom["deadline_miss_rate"] >= dom["fifo_miss_rate"]:
+    sys.exit(f"BENCH_serving.json: deadline strategy did not beat fifo on "
+             f"{dom['mix']} (deadline={dom['deadline_miss_rate']:.3f} vs "
+             f"fifo={dom['fifo_miss_rate']:.3f})")
+print(f"BENCH_serving.json OK: {len(mixes)} mixes x "
+      f"{len(strategies)} strategies, dominance on {dom['mix']}: "
+      f"deadline={dom['deadline_miss_rate']:.3f} < "
+      f"fifo={dom['fifo_miss_rate']:.3f}")
 EOF

@@ -164,6 +164,15 @@ class AdmissionQueue:
     backpressure), ``"shed"`` (drop the request, count it), or
     ``"raise"`` (:class:`FabricOverflow`).  INIT-class occupancy is
     accounted separately, as in the simulator's CCU telemetry.
+
+    The queue also owns its *service-latency* record: every admission
+    that eventually gets serviced reports its wait (pickup cycle minus
+    arrival cycle — the fabric's ``flush`` does this for CCU requests;
+    the serving engine does it in engine ticks for tenant admission)
+    through :meth:`record_admit`, and :meth:`wait_quantile` answers the
+    p50/p99 questions the SLO harness asks.  A bounded reservoir of the
+    most recent ``keep_waits`` samples backs the quantiles; the count
+    and total (``n_admitted`` / ``wait_total``) are exact regardless.
     """
     depth: int
     overflow: str = "block"
@@ -175,6 +184,10 @@ class AdmissionQueue:
     peak_occupancy: int = 0
     init_reqs: int = 0
     peak_init: int = 0
+    n_admitted: int = 0        # admissions serviced (record_admit calls)
+    wait_total: int = 0        # summed service waits (cycles or ticks)
+    keep_waits: int = 4096     # recent-wait reservoir for the quantiles
+    wait_samples: list = dataclasses.field(default_factory=list)
 
     def __post_init__(self):
         if self.overflow not in ("block", "shed", "raise"):
@@ -192,6 +205,22 @@ class AdmissionQueue:
             self.init_reqs += 1
             n = sum(1 for _at, q in self.items if _is_init(q))
             self.peak_init = max(self.peak_init, n)
+
+    def record_admit(self, wait: int) -> None:
+        """Record one serviced admission that waited ``wait`` time units
+        (>= 0) between arrival and pickup."""
+        wait = max(0, int(wait))
+        self.n_admitted += 1
+        self.wait_total += wait
+        self.wait_samples.append(wait)
+        del self.wait_samples[:-self.keep_waits]
+
+    def wait_quantile(self, q: float) -> float:
+        """Service-wait quantile (``q`` in [0, 1]) over the recorded
+        reservoir; 0.0 before any admission was recorded."""
+        if not self.wait_samples:
+            return 0.0
+        return float(np.quantile(np.asarray(self.wait_samples, float), q))
 
 
 # ---------------------------------------------------------------------------
@@ -431,6 +460,8 @@ class NomFabric:
         anchor = min(arrivals) if cycle is None else cycle
         pick = max(anchor, self.queue.busy_until)
         self.queue.busy_until = pick + 3 + (len(reqs) - 1)
+        for at in arrivals:     # per-request service wait: arrival -> pickup
+            self.queue.record_admit(pick - at)
         # Both backends anchor at the pickup cycle: on rounds, the batch
         # packs against reservations still streaming from earlier flushes
         # (persistent `_round_busy`), so back-to-back drains contend the
@@ -461,7 +492,10 @@ class NomFabric:
         ``searched_requests``), the live knobs
         (``policy``, ``queue_depth``), and admission health
         (``pending``, ``shed``, ``full_stalls``,
-        ``queue_stall_cycles``, ``policy_switches``)."""
+        ``queue_stall_cycles``, ``policy_switches``, and the queue's
+        service-latency record ``queue_admitted`` /
+        ``queue_wait_cycles`` / ``queue_wait_p50`` /
+        ``queue_wait_p99``)."""
         agg = self.report
         out = {
             "backend": self.backend,
@@ -481,6 +515,10 @@ class NomFabric:
             "shed": self.queue.n_shed,
             "full_stalls": self.queue.full_stalls,
             "queue_stall_cycles": self.queue.stall_cycles,
+            "queue_admitted": self.queue.n_admitted,
+            "queue_wait_cycles": self.queue.wait_total,
+            "queue_wait_p50": self.queue.wait_quantile(0.5),
+            "queue_wait_p99": self.queue.wait_quantile(0.99),
             "policy_switches": self.n_policy_switches,
         }
         return out
@@ -790,6 +828,10 @@ class FabricCluster:
             "shed": self.queue.n_shed,
             "full_stalls": self.queue.full_stalls,
             "queue_stall_cycles": self.queue.stall_cycles,
+            "queue_admitted": self.queue.n_admitted,
+            "queue_wait_cycles": self.queue.wait_total,
+            "queue_wait_p50": self.queue.wait_quantile(0.5),
+            "queue_wait_p99": self.queue.wait_quantile(0.99),
             "stacks": [f.telemetry() for f in self.fabrics],
         }
 

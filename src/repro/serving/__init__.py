@@ -1,6 +1,16 @@
+from .admission import (HYBRID_SLACK, AdmissionContext, AdmissionTicket,
+                        get_admission, register_admission,
+                        registered_admissions, unregister_admission)
 from .engine import Engine
+from .loadgen import (MIXES, Arrival, ArrivalMix, ClassSpec, LoadGen,
+                      drive, get_mix, make_slo_engine)
 from .placement import (PLACEMENT_POLICIES, BankPool, Lease, LeafSpec,
                         step_requests, teardown_requests)
 
 __all__ = ["Engine", "BankPool", "Lease", "LeafSpec", "PLACEMENT_POLICIES",
-           "step_requests", "teardown_requests"]
+           "step_requests", "teardown_requests",
+           "HYBRID_SLACK", "AdmissionContext", "AdmissionTicket",
+           "get_admission", "register_admission", "registered_admissions",
+           "unregister_admission",
+           "MIXES", "Arrival", "ArrivalMix", "ClassSpec", "LoadGen",
+           "drive", "get_mix", "make_slo_engine"]

@@ -1,0 +1,211 @@
+"""Utility-aware tenant-admission strategies for the serving engine.
+
+The engine's tenant queue used to drain strictly FIFO (with aging).
+Under sustained overload that is the wrong discipline for almost every
+real serving contract: a latency-class stream with a 3-tick admission
+deadline rots behind a bulk stream that would be equally happy admitted
+a hundred ticks from now.  This module makes the *order* in which the
+engine drains its waiting streams a first-class, registered strategy —
+the same registry idiom as the fabric's packing policies
+(:func:`repro.core.fabric.register_policy`), applied one layer up, to
+*admission* instead of slot packing.
+
+Vocabulary:
+
+* an :class:`AdmissionTicket` is one admission attempt — the stream's
+  name and batch plus its utility annotations (``klass``, ``priority``,
+  absolute-tick ``deadline``) and the arrival sequence number ``seq``
+  that every strategy uses as the final tie-break (stable FIFO among
+  equals, independent of any dict/set iteration order);
+* a strategy is ``fn(waiters, ctx) -> iterable[int]`` returning the
+  *admission order* — a permutation of ``range(len(waiters))`` over the
+  queued ``(arrival_tick, ticket)`` pairs.  Earlier positions get first
+  claim on freed bank capacity;
+* :class:`AdmissionContext` is what a strategy may consult besides the
+  waiters themselves (the engine tick, per-class admission frequencies).
+
+Shipped strategies (:func:`registered_admissions`):
+
+``"fifo"``
+    Arrival order, head-blocking: a stream that does not fit blocks
+    everything behind it, exactly the engine's pre-registry behavior.
+``"deadline"``
+    Strictest-deadline-first: ticketed waiters by ascending absolute
+    deadline, then the deadline-less ones FIFO.  The Icarus
+    ``StrictestDeadlineFirst`` discipline applied to tenant admission.
+``"priority"``
+    Frequency/priority-weighted: descending ``priority *
+    (1 + admitted_so_far(klass))`` — a class that keeps being admitted
+    is a class the operator keeps paying for (the ``MostFrequentlyUsed``
+    analogue), with the static priority as the base utility.
+``"hybrid"``
+    Deadline waiters inside the urgency window (:data:`HYBRID_SLACK`
+    ticks of slack) go first, strictest-first; everything else falls
+    back to the priority weighting — urgent SLOs preempt, bulk traffic
+    is otherwise utility-ordered.
+
+New strategies register with :func:`register_admission` without touching
+the engine; :func:`unregister_admission` removes experiments (built-ins
+are protected).  ``Engine(admission_strategy=...)`` selects per engine;
+per-class outcomes land in ``Engine.transfer_telemetry()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+#: Slack (in engine ticks) under which the hybrid strategy treats a
+#: deadline waiter as urgent and lets it preempt the priority ordering.
+HYBRID_SLACK = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionTicket:
+    """One tenant-admission attempt and its utility annotations.
+
+    Attributes:
+      name: tenant name (the ``generate`` stream / ``open_tenant`` name).
+      batch: batch size the leaf footprints are built for.
+      klass: service-class label for per-class telemetry and the
+        frequency weighting (``"default"`` when the caller is classless).
+      priority: static utility weight; higher admits earlier under the
+        ``priority``/``hybrid`` strategies (1.0 = neutral).
+      deadline: absolute engine tick by which admission is still useful;
+        ``None`` means no SLO.  A waiter still queued *after* its
+        deadline is expired (one terminal ``"expired"`` event) and a
+        waiter admitted late counts as a deadline miss.
+      seq: global arrival sequence number — the universal tie-break, so
+        equal-utility waiters always admit in stable FIFO order.
+    """
+    name: str
+    batch: int
+    klass: str = "default"
+    priority: float = 1.0
+    deadline: int | None = None
+    seq: int = 0
+
+
+class AdmissionContext:
+    """What an admission strategy may look at besides the waiters.
+
+    Attributes:
+      tick: the engine tick the drain runs at (slack = deadline - tick).
+      klass_admits: admissions granted so far per service class — the
+        frequency signal the ``priority`` strategy weights by.
+    """
+
+    def __init__(self, tick: int, klass_admits: Mapping[str, int]):
+        self.tick = tick
+        self.klass_admits = klass_admits
+
+    def frequency(self, klass: str) -> int:
+        """Admissions granted to ``klass`` so far (0 for a new class)."""
+        return self.klass_admits.get(klass, 0)
+
+
+_ADMISSIONS: dict[str, object] = {}
+_BUILTINS = ("fifo", "deadline", "priority", "hybrid")
+
+
+def register_admission(name: str, *, head_blocking: bool = False):
+    """Decorator registering an admission strategy under ``name``.
+
+    A strategy is ``fn(waiters, ctx: AdmissionContext) -> iterable[int]``
+    over the queued ``(arrival_tick, AdmissionTicket)`` pairs, returning
+    a permutation of ``range(len(waiters))`` — the order freed capacity
+    is offered in.  ``head_blocking=True`` keeps strict queue semantics:
+    the first waiter that does not fit blocks the rest of the drain
+    (``fifo`` uses this to preserve exact arrival order); the default is
+    best-effort — a waiter that does not fit is skipped and keeps its
+    place for the next drain.  Registering a taken name raises
+    ``ValueError``.
+    """
+    def deco(fn):
+        if name in _ADMISSIONS:
+            raise ValueError(f"admission strategy {name!r} is already "
+                             "registered")
+        fn.head_blocking = head_blocking
+        _ADMISSIONS[name] = fn
+        return fn
+    return deco
+
+
+def unregister_admission(name: str) -> None:
+    """Remove a registered strategy (the built-ins may not be removed)."""
+    if name in _BUILTINS:
+        raise ValueError(f"built-in admission strategy {name!r} may not "
+                         "be removed")
+    if name not in _ADMISSIONS:
+        raise ValueError(f"admission strategy {name!r} is not registered")
+    del _ADMISSIONS[name]
+
+
+def registered_admissions() -> tuple[str, ...]:
+    """Strategy names currently registered, registration order."""
+    return tuple(_ADMISSIONS)
+
+
+def get_admission(name: str):
+    """Look up a strategy by name; unknown names raise ``ValueError``
+    listing what is registered."""
+    try:
+        return _ADMISSIONS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown admission strategy {name!r}; registered: "
+            f"{', '.join(_ADMISSIONS)}") from None
+
+
+def _seq(waiters, i: int) -> int:
+    return waiters[i][1].seq
+
+
+@register_admission("fifo", head_blocking=True)
+def _fifo(waiters, ctx: AdmissionContext):
+    """Stable arrival order (by ticket ``seq``, never list position),
+    head-blocking — the engine's legacy discipline."""
+    return sorted(range(len(waiters)), key=lambda i: _seq(waiters, i))
+
+
+@register_admission("deadline")
+def _deadline(waiters, ctx: AdmissionContext):
+    """Strictest-deadline-first; deadline-less waiters trail in FIFO
+    order.  Ties (equal deadlines) break by arrival ``seq``."""
+    def key(i):
+        tk = waiters[i][1]
+        has = tk.deadline is not None
+        return (0 if has else 1, tk.deadline if has else 0, tk.seq)
+    return sorted(range(len(waiters)), key=key)
+
+
+def _weight(tk: AdmissionTicket, ctx: AdmissionContext) -> float:
+    return tk.priority * (1.0 + ctx.frequency(tk.klass))
+
+
+@register_admission("priority")
+def _priority(waiters, ctx: AdmissionContext):
+    """Descending frequency-weighted priority
+    (``priority * (1 + admitted_so_far(klass))``), FIFO among equals."""
+    return sorted(range(len(waiters)),
+                  key=lambda i: (-_weight(waiters[i][1], ctx),
+                                 _seq(waiters, i)))
+
+
+@register_admission("hybrid")
+def _hybrid(waiters, ctx: AdmissionContext):
+    """Urgent deadlines first, utility-weighted otherwise: a deadline
+    waiter with slack <= :data:`HYBRID_SLACK` preempts (strictest
+    first); the rest order by the ``priority`` weighting.  Every tie
+    breaks by arrival ``seq``."""
+    def key(i):
+        tk = waiters[i][1]
+        slack = None if tk.deadline is None else tk.deadline - ctx.tick
+        if slack is not None and slack <= HYBRID_SLACK:
+            return (0, slack, 0.0, tk.seq)
+        return (1, 0, -_weight(tk, ctx), tk.seq)
+    return sorted(range(len(waiters)), key=key)
+
+
+__all__ = ["HYBRID_SLACK", "AdmissionContext", "AdmissionTicket",
+           "get_admission", "register_admission", "registered_admissions",
+           "unregister_admission"]

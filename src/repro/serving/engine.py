@@ -36,6 +36,8 @@ from repro.core.fabric import AdmissionQueue, FabricCluster, NomFabric
 from repro.core.scheduler import ScheduleReport, TransferRequest
 from repro.core.topology import Mesh3D, StackedTopology, make_topology
 from repro.models.lm import CausalLM, EncDecLM
+from repro.serving.admission import (AdmissionContext, AdmissionTicket,
+                                     get_admission)
 from repro.serving.placement import (BankPool, LeafSpec, step_requests,
                                      teardown_requests)
 
@@ -76,6 +78,14 @@ class Engine:
         capacity frees), ``"shed"`` (decline it, counted), or
         ``"raise"`` (surface ``BankPool.lease``'s RuntimeError, the
         pre-fabric behavior).
+      admission_strategy: registered admission-strategy name (see
+        ``repro/serving/admission.py``) deciding the *order* queued
+        streams are offered freed capacity in — ``"fifo"`` (arrival
+        order, head-blocking; the legacy discipline), ``"deadline"``
+        (strictest-deadline-first), ``"priority"`` (frequency/priority-
+        weighted), or ``"hybrid"`` (urgent deadlines preempt, utility
+        otherwise).  Every strategy breaks ties by arrival sequence, so
+        equal-utility waiters admit in stable FIFO order.
       idle_evict_ticks: a tenant with no scheduled step for this many
         engine ticks is *idle*; exhausted admissions reclaim idle
         tenants' leases (teardown INIT scrubs ride the fabric) before
@@ -85,12 +95,20 @@ class Engine:
         (counted in ``transfer_telemetry()["tenant_queue_expired"]``,
         with a ``waiter_callback`` notification) — a production engine
         must age out streams whose client has long since timed out
-        instead of parking them forever.  0 disables aging.
+        instead of parking them forever.  0 disables aging.  A stream
+        whose ``open_tenant`` ticket carries its own absolute
+        ``deadline`` additionally expires once the engine tick passes
+        it (and counts a deadline miss), whatever ``deadline_ticks``
+        says.
       waiter_callback: optional ``fn(name, event)`` observer for queued
         streams — called with ``"admitted"`` when a waiter gets its
-        lease, ``"expired"`` when aged out by ``deadline_ticks``, and
-        ``"shed"`` when a stream is declined without ever queueing
-        (admission ``"shed"`` or a full tenant queue).
+        lease, ``"expired"`` when aged out by ``deadline_ticks`` or its
+        own ticket deadline, and ``"shed"`` when a stream is declined
+        without ever queueing (admission ``"shed"`` or a full tenant
+        queue).  Every admission attempt sees **exactly one** terminal
+        event: ``admitted`` xor ``expired`` xor ``shed`` — never both
+        of the failure events, even when the stream was declined only
+        after a partial idle-lease reclaim.
       ring_slots: ring capacity per KV/ring leaf in token slots for the
         traffic model; ``None`` means ``max_len`` (no wrap within one
         ``generate``).  Smaller values exercise overwrite evictions.
@@ -116,6 +134,7 @@ class Engine:
     placement_policy: str = "spread"
     sched_policy: str = "arrival"
     admission: str = "queue"
+    admission_strategy: str = "fifo"
     tenant_queue_depth: int = 8
     idle_evict_ticks: int = 4
     deadline_ticks: int = 0
@@ -127,6 +146,9 @@ class Engine:
         if self.admission not in _ADMISSION:
             raise ValueError(f"unknown admission mode {self.admission!r}; "
                              f"choose from {tuple(_ADMISSION)}")
+        # Resolve the drain-order strategy up front so a typo fails at
+        # construction, not at the first overloaded tick.
+        self._admission_fn = get_admission(self.admission_strategy)
         self._step = jax.jit(self._decode_one)
         stacked = isinstance(self.cache_mesh, StackedTopology)
         self.fabric = None
@@ -153,6 +175,10 @@ class Engine:
         self._reclaimed: set[str] = set()  # idle-evicted, owner not yet told
         self._gen_seq = 0
         self._tick = 0             # schedule_tick counter (idle detection)
+        self._admit_seq = 0        # arrival order: the universal tie-break
+        self._klass_admits: dict[str, int] = {}  # frequency signal
+        self._class_stats: dict[str, dict] = {}  # per-klass outcome counts
+        self._leaf_cache: dict[int, list] = {}   # batch -> leaf specs
         self.reports: list[ScheduleReport] = []
         self.last_report: ScheduleReport | None = None
         self.n_sched_steps = 0
@@ -160,6 +186,8 @@ class Engine:
         self.n_migrations = 0
         self.n_idle_evictions = 0
         self.n_queue_expired = 0
+        self.n_deadline_misses = 0
+        self.n_admitted_late = 0
         self.peak_tenants = 0
 
     def _decode_one(self, params, token, caches, pos, memory=None):
@@ -180,7 +208,13 @@ class Engine:
         token-slot per step (the size slope) and wraps at ``ring_slots``;
         a length-independent leaf (SSM / RG-LRU state) is refreshed in
         place every step and never wraps.  ``lease_bytes`` is the full
-        footprint, scrubbed at teardown."""
+        footprint, scrubbed at teardown.  Specs depend only on ``batch``
+        (model and ``max_len`` are fixed per engine), so they are cached —
+        the load generator re-probes the same batch sizes thousands of
+        times per run."""
+        cached = self._leaf_cache.get(batch)
+        if cached is not None:
+            return cached
         full = jax.eval_shape(
             lambda: self.model.init_caches(batch, self.max_len))
         half_len = max(1, self.max_len // 2)
@@ -202,6 +236,7 @@ class Engine:
             else:
                 out.append(LeafSpec(tag=tag, step_bytes=max(1, nb_full),
                                     lease_bytes=nb_full, ring_slots=0))
+        self._leaf_cache[batch] = out
         return out
 
     # -- tenancy ------------------------------------------------------------
@@ -234,14 +269,22 @@ class Engine:
                 if not self._evict_idle_tenant():
                     raise
 
-    def open_tenant(self, name: str, batch: int,
-                    queue: bool = True) -> list | None:
+    def open_tenant(self, name: str, batch: int, queue: bool = True,
+                    deadline: int | None = None, priority: float = 1.0,
+                    klass: str = "default") -> list | None:
         """Lease bank homes for a new serving stream.
 
         One tenant per concurrent ``generate`` stream; ``batch`` sizes the
         leaf footprints.  Returns the leases (also kept internally until
         :meth:`close_tenant`).  Raises ``ValueError`` if the name is
-        already active.
+        already active or already queued.
+
+        ``deadline`` (absolute engine tick), ``priority``, and ``klass``
+        annotate the stream's :class:`AdmissionTicket` — the utility
+        signals the engine's ``admission_strategy`` orders waiters by,
+        and the axes the per-class telemetry is bucketed on.  A ticket
+        still queued after its ``deadline`` expires (one terminal
+        ``"expired"`` event); one admitted late counts a deadline miss.
 
         When the pool is exhausted (after reclaiming idle tenants'
         leases), the engine's ``admission`` mode decides: ``"queue"``
@@ -255,22 +298,30 @@ class Engine:
             raise RuntimeError("track_transfers=False engine has no pool")
         if name in self._tenants:
             raise ValueError(f"tenant {name!r} already active")
-        if any(n == name for _at, (n, _b) in self.tenant_queue.items):
+        if any(tk.name == name for _at, tk in self.tenant_queue.items):
             raise ValueError(f"tenant {name!r} already queued for admission")
         self._reclaimed.discard(name)      # the name is being reused afresh
+        tk = AdmissionTicket(
+            name=name, batch=batch, klass=klass, priority=float(priority),
+            deadline=None if deadline is None else int(deadline),
+            seq=self._admit_seq)
+        self._admit_seq += 1
+        self._class_bucket(klass)["arrivals"] += 1
         try:
             leases = self._lease_with_reclaim(name, self._leaf_specs(batch))
         except RuntimeError:
-            q = self.tenant_queue
             if self.admission == "raise":
                 raise
-            if self.admission == "shed" or not queue or q.full():
-                q.n_shed += 1
-                self._notify_waiter(name, "shed")
+            if (self.admission == "shed" or not queue
+                    or self.tenant_queue.full()):
+                self._finish(tk, self._tick, "shed")
                 return None
-            q.push(self._tick, (name, batch))
+            self.tenant_queue.push(self._tick, tk)
             return None
         self._register_tenant(name, leases)
+        # Immediate admissions are not waiter events: the caller holds
+        # the leases already, so no "admitted" callback fires.
+        self._finish(tk, self._tick, "admitted", notify=False)
         return leases
 
     def _register_tenant(self, name: str, leases: list) -> None:
@@ -283,35 +334,98 @@ class Engine:
         if self.waiter_callback is not None:
             self.waiter_callback(name, event)
 
+    def _class_bucket(self, klass: str) -> dict:
+        return self._class_stats.setdefault(klass, {
+            "arrivals": 0, "admitted": 0, "shed": 0, "expired": 0,
+            "deadline_misses": 0, "wait_ticks": 0})
+
+    def _finish(self, tk: AdmissionTicket, at: int, event: str,
+                notify: bool = True) -> None:
+        """Terminal accounting for one admission attempt — called exactly
+        once per ticket, with its single outcome (``admitted`` xor
+        ``expired`` xor ``shed``).  Folds the outcome into the per-class
+        stats and deadline-miss counters, records the admission wait, and
+        (when ``notify``) emits the one ``waiter_callback`` event."""
+        stats = self._class_bucket(tk.klass)
+        wait = max(0, self._tick - at)
+        missed = False
+        if event == "admitted":
+            stats["admitted"] += 1
+            stats["wait_ticks"] += wait
+            self._klass_admits[tk.klass] = (
+                self._klass_admits.get(tk.klass, 0) + 1)
+            self.tenant_queue.record_admit(wait)
+            if tk.deadline is not None and self._tick > tk.deadline:
+                self.n_admitted_late += 1
+                missed = True
+        elif event == "expired":
+            stats["expired"] += 1
+            self.n_queue_expired += 1
+            missed = tk.deadline is not None
+        elif event == "shed":
+            stats["shed"] += 1
+            self.tenant_queue.n_shed += 1
+            missed = tk.deadline is not None
+        if missed:
+            self.n_deadline_misses += 1
+            stats["deadline_misses"] += 1
+        if notify:
+            self._notify_waiter(tk.name, event)
+
     def _admit_waiting(self) -> None:
-        """Drain the tenant admission queue head-first while leases fit
-        (FIFO — a stream that still does not fit keeps its place and
-        blocks later arrivals, so admission order is preserved)."""
-        while self.tenant_queue.items:
-            _at, (name, batch) = self.tenant_queue.items[0]
+        """Offer freed capacity to the waiting streams in strategy order.
+
+        The registered ``admission_strategy`` returns a permutation of
+        the queued waiters (every strategy tie-breaks on the ticket's
+        arrival ``seq``, so equal-utility streams admit in stable FIFO
+        order no matter how the queue list got shuffled).  A waiter that
+        does not fit is skipped and keeps its place — unless the strategy
+        is ``head_blocking`` (``fifo``), where it ends the drain to
+        preserve strict arrival order."""
+        items = self.tenant_queue.items
+        if not items:
+            return
+        ctx = AdmissionContext(self._tick, self._klass_admits)
+        order = list(self._admission_fn(items, ctx))
+        if sorted(order) != list(range(len(items))):
+            raise ValueError(
+                f"admission strategy {self.admission_strategy!r} returned "
+                f"{order!r}, not a permutation of range({len(items)})")
+        taken = set()
+        for i in order:
+            at, tk = items[i]
             try:
-                leases = self.pool.lease(name, self._leaf_specs(batch))
+                leases = self.pool.lease(tk.name, self._leaf_specs(tk.batch))
             except RuntimeError:
-                return
-            self.tenant_queue.items.pop(0)
-            self._register_tenant(name, leases)
-            self._notify_waiter(name, "admitted")
+                if getattr(self._admission_fn, "head_blocking", False):
+                    break
+                continue
+            taken.add(i)
+            self._register_tenant(tk.name, leases)
+            self._finish(tk, at, "admitted")
+        if taken:
+            items[:] = [it for i, it in enumerate(items) if i not in taken]
 
     def _expire_waiters(self) -> None:
-        """Age the tenant queue: a stream that has waited longer than
-        ``deadline_ticks`` is shed (its client has given up; holding its
-        place would only block younger arrivals behind a corpse)."""
-        if not self.deadline_ticks:
+        """Age the tenant queue: shed streams that waited longer than
+        ``deadline_ticks`` (their client has given up; holding a place
+        would only block younger arrivals behind a corpse) and ticketed
+        streams whose own absolute ``deadline`` has passed — each with
+        its one terminal ``"expired"`` event."""
+        items = self.tenant_queue.items
+        if not items:
             return
         kept = []
-        for at, (name, batch) in self.tenant_queue.items:
-            if self._tick - at >= self.deadline_ticks:
-                self.n_queue_expired += 1
-                self._notify_waiter(name, "expired")
+        for at, tk in items:
+            aged = (self.deadline_ticks
+                    and self._tick - at >= self.deadline_ticks)
+            late = tk.deadline is not None and self._tick > tk.deadline
+            if aged or late:
+                self._finish(tk, at, "expired")
             else:
-                kept.append((at, (name, batch)))
-        if len(kept) < len(self.tenant_queue.items):
-            self.tenant_queue.items[:] = kept
+                kept.append((at, tk))
+        if len(kept) < len(items):
+            items[:] = kept
             # An expired head may have been the only thing blocking a
             # smaller waiter that already fits the pool.
             self._admit_waiting()
@@ -510,10 +624,14 @@ class Engine:
         ``conflicts``, tenancy (``active_tenants`` / ``peak_tenants`` /
         ``repacks`` / ``migrations`` / ``cross_stack`` — scheduled
         cross-stack circuits, nonzero only on a stacked engine), and
-        admission health (``admission`` /
+        admission health (``admission`` / ``admission_strategy`` /
         ``sched_policy`` — the fabric's live policy pick —
         ``queued_tenants`` / ``shed_tenants`` / ``tenant_queue_expired``
-        / ``idle_evictions``)."""
+        / ``idle_evictions`` / ``deadline_misses`` — expired, shed, or
+        late-admitted ticketed streams — / ``admitted_late`` /
+        ``admission_wait_p50`` / ``admission_wait_p99`` — admission-wait
+        quantiles in engine ticks — / ``admission_classes`` — per-
+        service-class outcome counts)."""
         if not self.n_sched_steps:
             return {}
         agg = self.last_report
@@ -534,9 +652,16 @@ class Engine:
             "migrations": self.n_migrations,
             "cross_stack": getattr(agg, "n_cross_stack", 0),
             "admission": self.admission,
+            "admission_strategy": self.admission_strategy,
             "sched_policy": self.fabric.effective_policy,
             "queued_tenants": len(self.tenant_queue.items),
             "shed_tenants": self.tenant_queue.n_shed,
             "tenant_queue_expired": self.n_queue_expired,
             "idle_evictions": self.n_idle_evictions,
+            "deadline_misses": self.n_deadline_misses,
+            "admitted_late": self.n_admitted_late,
+            "admission_wait_p50": self.tenant_queue.wait_quantile(0.50),
+            "admission_wait_p99": self.tenant_queue.wait_quantile(0.99),
+            "admission_classes": {k: dict(v) for k, v
+                                  in sorted(self._class_stats.items())},
         }

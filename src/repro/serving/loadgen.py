@@ -1,0 +1,403 @@
+"""Trace-driven open-loop load generation for the serving engine.
+
+The paper's headline claim is throughput under *concurrent* transfer
+load; the serving analogue is admission behavior under sustained tenant
+churn.  This module drives an :class:`~repro.serving.engine.Engine`
+tick-by-tick with a seeded open-loop arrival process — arrivals do not
+wait for completions, exactly like real traffic — and measures what the
+ROADMAP's "millions of users" story needs measured: p50/p99 admission
+latency, shed and expiry rates, deadline-miss rates per admission
+strategy, and circuits-per-window on the NoM fabric underneath.
+
+Three building blocks:
+
+* :class:`ArrivalMix` — a declarative traffic description: the arrival
+  *process* (``"poisson"`` | ``"bursty"`` | ``"heavy_tail"``), the mean
+  rate, an optional diurnal ramp, and the service-class table
+  (:class:`ClassSpec`: share, priority, deadline slack, lifetime) each
+  arrival is drawn from.  :func:`get_mix` serves the built-ins
+  (:data:`MIXES`): ``poisson``, ``bursty``, ``heavy_tail``, and the
+  overloaded ``deadline_heavy`` mix the SLO benchmark gates on.
+* :class:`LoadGen` — the seeded generator: ``arrivals(tick)`` yields the
+  tick's :class:`Arrival` records deterministically (one stream of
+  draws, consumed in tick order, so a fixed ``(mix, seed)`` pair always
+  produces the identical trace).
+* :func:`drive` — the harness: feeds a generator into an engine
+  (``open_tenant`` with the arrival's ticket annotations,
+  ``schedule_tick`` every tick, ``close_tenant`` when a tenant's
+  lifetime lapses), observes every terminal admission event through the
+  engine's ``waiter_callback``, and returns the stats record
+  ``benchmarks/bench_serving_slo.py`` writes into ``BENCH_serving.json``.
+  Each record carries the per-tick conservation ledger
+  (``arrivals == admitted + shed + expired + waiting`` at every tick)
+  that ``tests/test_serving_slo.py`` asserts.
+
+The default engine under test is model-free: :class:`CacheStub` exposes
+only ``init_caches`` (a KV-ring + state-leaf pair per stream), so the
+harness measures admission and scheduling, not matmuls —
+:func:`make_slo_engine` builds the standard stub engine the tests and
+the benchmark share.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+
+import numpy as np
+
+from repro.core.topology import make_topology
+from repro.serving.engine import Engine
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassSpec:
+    """One service class of an :class:`ArrivalMix`.
+
+    Attributes:
+      klass: class label (lands in per-class telemetry).
+      weight: relative share of arrivals drawn from this class.
+      priority: static utility weight for the ``priority``/``hybrid``
+        admission strategies.
+      deadline_slack: ``(lo, hi)`` inclusive tick range — each arrival's
+        admission deadline is ``tick + U[lo, hi]``; ``None`` means the
+        class carries no admission SLO.
+      lifetime: ``(lo, hi)`` inclusive range of service ticks an
+        admitted tenant stays open before the driver closes it.
+    """
+    klass: str
+    weight: float
+    priority: float = 1.0
+    deadline_slack: tuple[int, int] | None = None
+    lifetime: tuple[int, int] = (2, 5)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalMix:
+    """A reproducible open-loop traffic description.
+
+    Attributes:
+      name: mix label (keys the benchmark record).
+      process: ``"poisson"`` (memoryless), ``"bursty"`` (a low poisson
+        baseline plus a large burst every ``burst_every`` ticks), or
+        ``"heavy_tail"`` (poisson baseline plus Pareto-sized arrival
+        clumps with probability ``tail_prob`` per tick).
+      rate: mean arrivals per tick before the diurnal ramp.
+      classes: the service-class table arrivals are drawn from.
+      burst_every / burst_mult: bursty-process shape.
+      tail_prob / tail_alpha / tail_cap: heavy-tail shape (Pareto index
+        ``tail_alpha``, clump size capped at ``tail_cap``).
+      diurnal_period / diurnal_amp: sinusoidal rate ramp — the rate at
+        tick t is ``rate * (1 + amp * sin(2 pi t / period))``; period 0
+        disables the ramp.
+    """
+    name: str
+    process: str
+    rate: float
+    classes: tuple[ClassSpec, ...]
+    burst_every: int = 16
+    burst_mult: float = 6.0
+    tail_prob: float = 0.08
+    tail_alpha: float = 1.3
+    tail_cap: int = 24
+    diurnal_period: int = 0
+    diurnal_amp: float = 0.0
+
+    def __post_init__(self):
+        if self.process not in ("poisson", "bursty", "heavy_tail"):
+            raise ValueError(f"unknown arrival process {self.process!r}; "
+                             "choose from ('poisson', 'bursty', "
+                             "'heavy_tail')")
+        if not self.classes:
+            raise ValueError("an ArrivalMix needs at least one ClassSpec")
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One generated stream arrival (the loadgen's trace unit)."""
+    name: str
+    tick: int
+    klass: str
+    priority: float
+    deadline: int | None
+    lifetime: int
+    batch: int = 1
+
+
+_STANDARD_CLASSES = (
+    ClassSpec("latency", weight=0.3, priority=4.0, deadline_slack=(2, 6),
+              lifetime=(1, 3)),
+    ClassSpec("standard", weight=0.5, priority=1.0, deadline_slack=None,
+              lifetime=(2, 5)),
+    ClassSpec("bulk", weight=0.2, priority=0.25, deadline_slack=None,
+              lifetime=(4, 8)),
+)
+
+#: Built-in arrival mixes (get_mix).  The first three are the paper-style
+#: traffic shapes; ``deadline_heavy`` is the sustained-overload mix the
+#: benchmark's fifo-vs-deadline dominance gate runs on: most arrivals
+#: carry tight admission deadlines, so queue *order* decides the miss
+#: rate.
+MIXES: dict[str, ArrivalMix] = {
+    "poisson": ArrivalMix("poisson", "poisson", rate=2.0,
+                          classes=_STANDARD_CLASSES,
+                          diurnal_period=64, diurnal_amp=0.5),
+    "bursty": ArrivalMix("bursty", "bursty", rate=2.0,
+                         classes=_STANDARD_CLASSES,
+                         burst_every=16, burst_mult=6.0),
+    "heavy_tail": ArrivalMix("heavy_tail", "heavy_tail", rate=1.5,
+                             classes=_STANDARD_CLASSES,
+                             tail_prob=0.1, tail_alpha=1.3, tail_cap=24),
+    "deadline_heavy": ArrivalMix(
+        "deadline_heavy", "poisson", rate=3.0,
+        classes=(
+            ClassSpec("urgent", weight=0.6, priority=4.0,
+                      deadline_slack=(2, 5), lifetime=(1, 3)),
+            ClassSpec("bulk", weight=0.4, priority=0.5,
+                      deadline_slack=None, lifetime=(4, 9)),
+        )),
+}
+
+
+def get_mix(name: str) -> ArrivalMix:
+    """Look up a built-in mix; unknown names raise ``ValueError``
+    listing what exists."""
+    try:
+        return MIXES[name]
+    except KeyError:
+        raise ValueError(f"unknown arrival mix {name!r}; built-ins: "
+                         f"{', '.join(MIXES)}") from None
+
+
+class LoadGen:
+    """Seeded open-loop arrival generator over an :class:`ArrivalMix`.
+
+    One private RNG stream, consumed strictly in tick order: call
+    :meth:`arrivals` once per tick, ticks ascending (enforced), and a
+    fixed ``(mix, seed)`` pair replays the identical trace — the
+    determinism property ``tests/test_serving_slo.py`` pins.
+    """
+
+    def __init__(self, mix: ArrivalMix, seed: int = 0):
+        self.mix = mix
+        self.seed = seed
+        self._rng = np.random.default_rng(
+            (int(seed), zlib.crc32(mix.name.encode())))
+        self._seq = 0
+        self._next_tick = 0
+        w = np.array([c.weight for c in mix.classes], float)
+        self._class_p = w / w.sum()
+
+    def rate_at(self, tick: int) -> float:
+        """Instantaneous mean arrival rate at ``tick`` (diurnal ramp
+        applied; never negative)."""
+        mix = self.mix
+        if not mix.diurnal_period:
+            return mix.rate
+        phase = 2.0 * np.pi * tick / mix.diurnal_period
+        return max(0.0, mix.rate * (1.0 + mix.diurnal_amp * np.sin(phase)))
+
+    def _count(self, tick: int) -> int:
+        mix, rng = self.mix, self._rng
+        rate = self.rate_at(tick)
+        if mix.process == "poisson":
+            return int(rng.poisson(rate))
+        if mix.process == "bursty":
+            n = int(rng.poisson(rate * 0.4))
+            if mix.burst_every and tick % mix.burst_every == 0:
+                n += int(rng.poisson(rate * mix.burst_mult))
+            return n
+        # heavy_tail: light baseline + occasional Pareto-sized clump.
+        n = int(rng.poisson(rate * 0.5))
+        if rng.random() < mix.tail_prob:
+            n += min(mix.tail_cap, 1 + int(rng.pareto(mix.tail_alpha)
+                                           * mix.rate))
+        return n
+
+    def arrivals(self, tick: int) -> list[Arrival]:
+        """The arrivals landing at ``tick`` (possibly empty).  Must be
+        called with strictly increasing ticks — the draw stream is the
+        determinism contract."""
+        if tick < self._next_tick:
+            raise ValueError(f"arrivals() must be called in tick order "
+                             f"(got {tick} after {self._next_tick - 1})")
+        self._next_tick = tick + 1
+        rng = self._rng
+        out = []
+        for _ in range(self._count(tick)):
+            c = self.mix.classes[int(rng.choice(len(self.mix.classes),
+                                                p=self._class_p))]
+            deadline = None
+            if c.deadline_slack is not None:
+                lo, hi = c.deadline_slack
+                deadline = tick + int(rng.integers(lo, hi + 1))
+            lo, hi = c.lifetime
+            out.append(Arrival(
+                name=f"{self.mix.name}-{self._seq}", tick=tick,
+                klass=c.klass, priority=c.priority, deadline=deadline,
+                lifetime=int(rng.integers(lo, hi + 1))))
+            self._seq += 1
+        return out
+
+
+class CacheStub:
+    """Model stub exposing only ``init_caches``: one KV ring leaf (size
+    scales with ``max_len``) plus one in-place state leaf per stream —
+    the smallest footprint that still exercises ring evictions and
+    teardown scrubs (2 leased banks per tenant)."""
+
+    def init_caches(self, batch, max_len):
+        import jax.numpy as jnp
+        return {"kv": jnp.zeros((batch, max_len, 16), jnp.int8),
+                "state": jnp.zeros((batch, 32), jnp.int8)}
+
+
+def make_slo_engine(admission_strategy: str = "fifo", *,
+                    mesh: tuple[int, int, int] = (4, 4, 2),
+                    deadline_ticks: int = 12, tenant_queue_depth: int = 16,
+                    **kw) -> Engine:
+    """The standard harness engine: a :class:`CacheStub` model over a
+    small bank mesh (capacity ~``X*Y*(Z-1)/2`` concurrent tenants, so
+    the built-in mixes genuinely overload it), queue admission with
+    aging, and the given admission strategy.  Extra kwargs pass through
+    to :class:`~repro.serving.engine.Engine`."""
+    kw.setdefault("ring_slots", 4)
+    kw.setdefault("idle_evict_ticks", 0)
+    return Engine(model=CacheStub(), cfg=None, max_len=16,
+                  cache_mesh=make_topology(mesh=mesh),
+                  admission="queue", admission_strategy=admission_strategy,
+                  deadline_ticks=deadline_ticks,
+                  tenant_queue_depth=tenant_queue_depth, **kw)
+
+
+def _quantile(samples: list[int], q: float) -> float:
+    if not samples:
+        return 0.0
+    return float(np.quantile(np.asarray(samples, float), q))
+
+
+def drive(engine: Engine, mix: ArrivalMix | str, ticks: int,
+          seed: int = 0, trace: bool = False) -> dict:
+    """Drive ``engine`` with ``mix`` for ``ticks`` engine ticks.
+
+    Open loop: every generated arrival is offered to ``open_tenant``
+    with its ticket annotations (deadline/priority/klass) regardless of
+    how loaded the engine is; admitted tenants run for their drawn
+    lifetime (their cache traffic scheduled by the engine's per-tick
+    batch) and are then closed, freeing capacity for queued waiters.
+    The engine's ``waiter_callback`` is borrowed for the run (the prior
+    callback is restored on exit) to observe the terminal admission
+    events.
+
+    Returns the stats record: totals (``arrivals`` / ``admitted`` /
+    ``shed`` / ``expired`` / ``waiting`` / ``completed``), rates
+    (``shed_rate`` / ``expiry_rate``), admission-latency percentiles in
+    ticks (``p50_wait`` / ``p99_wait``), the SLO ledger
+    (``deadline_arrivals`` / ``deadline_misses`` / ``miss_rate``), and
+    fabric-side concurrency (``circuits_per_window`` = average circuits
+    in flight per TDM window, ``max_inflight``, ``stall_cycles``,
+    ``requests`` / ``scheduled``).  With ``trace=True`` the record also
+    carries ``per_tick`` — the conservation ledger
+    ``(tick, arrivals, admitted, shed, expired, waiting)`` the property
+    suite asserts ``arrivals == admitted + shed + expired + waiting``
+    over.
+    """
+    if isinstance(mix, str):
+        mix = get_mix(mix)
+    gen = LoadGen(mix, seed)
+    by_name: dict[str, Arrival] = {}
+    admitted: dict[str, int] = {}      # name -> tick admitted
+    remaining: dict[str, int] = {}     # name -> service ticks left
+    shed: set[str] = set()
+    expired: set[str] = set()
+    waits: list[int] = []
+    completed = 0
+    events: list[tuple[str, str]] = []
+    prior_cb = engine.waiter_callback
+
+    def recorder(name, ev):
+        events.append((name, ev))
+        if prior_cb is not None:
+            prior_cb(name, ev)
+
+    engine.waiter_callback = recorder
+    per_tick = []
+    try:
+        for t in range(ticks):
+            for a in gen.arrivals(t):
+                by_name[a.name] = a
+                leases = engine.open_tenant(
+                    a.name, a.batch, deadline=a.deadline,
+                    priority=a.priority, klass=a.klass)
+                if leases is not None:           # admitted on the spot
+                    admitted[a.name] = t
+                    remaining[a.name] = a.lifetime
+                    waits.append(0)
+            engine.schedule_tick()               # ages + drains the queue
+            # Fold the tick's terminal events into the ledger.
+            for name, ev in events:
+                if ev == "admitted" and name not in admitted:
+                    a = by_name[name]
+                    admitted[name] = t
+                    remaining[name] = a.lifetime
+                    waits.append(t - a.tick)
+                elif ev == "shed":
+                    shed.add(name)
+                elif ev == "expired":
+                    expired.add(name)
+            events.clear()
+            # Retire tenants whose service lifetime has lapsed (tenants
+            # admitted this tick start counting down next tick).
+            for name in list(remaining):
+                if admitted.get(name) != t:      # admitted before this tick
+                    remaining[name] -= 1
+            for name in [n for n, left in remaining.items() if left <= 0]:
+                del remaining[name]
+                engine.close_tenant(name)        # may admit waiters ...
+                completed += 1
+            for name, ev in events:              # ... observed here
+                if ev == "admitted" and name not in admitted:
+                    a = by_name[name]
+                    admitted[name] = t
+                    remaining[name] = a.lifetime
+                    waits.append(t - a.tick)
+            events.clear()
+            if trace:
+                per_tick.append({
+                    "tick": t, "arrivals": len(by_name),
+                    "admitted": len(admitted), "shed": len(shed),
+                    "expired": len(expired),
+                    "waiting": len(engine.tenant_queue.items)})
+    finally:
+        engine.waiter_callback = prior_cb
+    tel = engine.transfer_telemetry()
+    rep = engine.last_report
+    n_arr = len(by_name)
+    n_dead = sum(1 for a in by_name.values() if a.deadline is not None)
+    misses = tel.get("deadline_misses", 0) if tel else 0
+    out = {
+        "mix": mix.name, "strategy": engine.admission_strategy,
+        "seed": seed, "ticks": ticks,
+        "arrivals": n_arr, "admitted": len(admitted), "shed": len(shed),
+        "expired": len(expired),
+        "waiting": len(engine.tenant_queue.items),
+        "completed": completed,
+        "shed_rate": len(shed) / n_arr if n_arr else 0.0,
+        "expiry_rate": len(expired) / n_arr if n_arr else 0.0,
+        "p50_wait": _quantile(waits, 0.5),
+        "p99_wait": _quantile(waits, 0.99),
+        "deadline_arrivals": n_dead,
+        "deadline_misses": misses,
+        "miss_rate": misses / n_dead if n_dead else 0.0,
+        "circuits_per_window": 0.0 if rep is None else rep.avg_inflight,
+        "max_inflight": 0 if rep is None else rep.max_inflight,
+        "stall_cycles": 0 if rep is None else rep.stall_cycles,
+        "requests": 0 if rep is None else rep.n_requests,
+        "scheduled": 0 if rep is None else rep.n_scheduled,
+    }
+    if trace:
+        out["per_tick"] = per_tick
+    return out
+
+
+__all__ = ["MIXES", "Arrival", "ArrivalMix", "CacheStub", "ClassSpec",
+           "LoadGen", "drive", "get_mix", "make_slo_engine"]
