@@ -64,6 +64,23 @@ def check_serving_api_documented() -> None:
             if not re.search(rf"\b{re.escape(name)}\b", corpus):
                 fail(f"{mod.__name__}.{name} is public but mentioned in "
                      f"no doc page ({', '.join(DOC_PAGES)})")
+    check_compiled_pipeline_documented(corpus)
+
+
+def check_compiled_pipeline_documented(corpus: str) -> None:
+    """The compiled commit pipeline's public surface (PR 8): every
+    non-module export of the slot-alloc kernel package, the backend knob
+    and the backend-split telemetry counters must appear in a doc page."""
+    import inspect
+
+    import repro.kernels.slot_alloc as slot_kernels
+    names = [n for n in slot_kernels.__all__
+             if not inspect.ismodule(getattr(slot_kernels, n))]
+    names += ["alloc_backend", "fused_waves", "host_waves"]
+    for name in names:
+        if not re.search(rf"\b{re.escape(name)}\b", corpus):
+            fail(f"compiled-pipeline name {name} is mentioned in no doc "
+                 f"page ({', '.join(DOC_PAGES)})")
 
 
 def main() -> None:

@@ -15,6 +15,9 @@ python scripts/check_api.py
 echo "== tier-1: pytest =="
 python -m pytest -q "$@"
 
+echo "== multidevice lane: 8 faked XLA devices =="
+python -m pytest -q -m multidevice tests/test_multidevice_alloc.py
+
 echo "== smoke: benchmarks (quick subset) =="
 # the gates below must see THIS run's records
 rm -f BENCH_alloc.json BENCH_multistack.json BENCH_serving.json
@@ -27,20 +30,35 @@ path = pathlib.Path("BENCH_alloc.json")
 if not path.is_file():
     sys.exit("BENCH_alloc.json missing: benchmarks/run.py --quick must write it")
 rec = json.loads(path.read_text())
+if rec.get("schema") != "nom/bench-alloc/v2":
+    sys.exit(f"BENCH_alloc.json schema {rec.get('schema')!r}: expected "
+             "nom/bench-alloc/v2 (compiled-pipeline record)")
 required = ("schema", "mesh", "n_slots", "alloc", "single_conflict",
             "circuits_per_window", "ccu")
 missing = [k for k in required if k not in rec]
 if missing:
     sys.exit(f"BENCH_alloc.json missing keys: {missing}")
 for batch, entry in rec["alloc"].items():
-    for k in ("us_serial", "us_batch", "batched_vs_serial", "speedup_vs_pr4",
-              "alloc_rate_per_s", "search_rounds", "conflicts", "n_searched"):
+    for k in ("backend", "us_serial", "us_batch", "us_batch_host",
+              "batched_vs_serial", "fused_vs_host", "speedup_vs_pr4",
+              "pr5_record_us", "speedup_vs_pr5_record", "alloc_rate_per_s",
+              "search_rounds", "conflicts", "n_searched", "fused_waves",
+              "host_waves"):
         if k not in entry:
             sys.exit(f"BENCH_alloc.json alloc[{batch}] missing {k}")
+big = rec["alloc"]["256"]
+if big["fused_waves"] < 1:
+    sys.exit("BENCH_alloc.json alloc[256]: compiled pipeline served no "
+             "waves (fused_waves=0) — the fused backend is not engaging")
+if big["us_batch"] > big["pr5_record_us"]:
+    sys.exit(f"BENCH_alloc.json alloc[256]: us_batch={big['us_batch']} "
+             f"regressed past the PR-5 record {big['pr5_record_us']}")
 for tail, entry in rec["single_conflict"].items():
     if entry["extra_rounds_beyond_waves"] > entry["conflicts"]:
         sys.exit(f"single_conflict[{tail}]: re-search not conflict-scoped")
 print(f"BENCH_alloc.json OK: batches={sorted(rec['alloc'])} "
+      f"b256 fused={big['us_batch']}us host={big['us_batch_host']}us "
+      f"({big['fused_vs_host']}x, fused_waves={big['fused_waves']}) "
       f"tails={sorted(rec['single_conflict'])}")
 EOF
 

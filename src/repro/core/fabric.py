@@ -253,12 +253,20 @@ class NomFabric:
         exploiting; retune_every: exploit flushes between re-probes.
       keep_history: per-flush reports retained on ``history`` (the
         cumulative ``report`` is exact regardless).
+      alloc_backend: who serves the allocator's prepare rounds when the
+        fabric builds its own ``TdmAllocator`` — ``"auto"`` (fused
+        compiled program for full waves, host pipeline for tiny rounds),
+        ``"fused"``, or ``"host"``.  Ignored when ``allocator=`` is
+        passed (the adopted allocator keeps its own backend).  Which
+        backend actually served each wave shows up in ``telemetry()``
+        as ``fused_waves`` / ``host_waves``.
     """
     mesh: Mesh3D | None = None
     shape: tuple[int, ...] | None = None
     torus: bool = True
     n_slots: int = 16
     allocator: TdmAllocator | None = None
+    alloc_backend: str = "auto"
     policy: str = "arrival"
     queue_depth: int = 8
     overflow: str = "block"
@@ -278,7 +286,8 @@ class NomFabric:
             self.mesh = self.allocator.mesh
             self.n_slots = self.allocator.n_slots
         elif self.mesh is not None:
-            self.allocator = TdmAllocator(self.mesh, self.n_slots)
+            self.allocator = TdmAllocator(self.mesh, self.n_slots,
+                                          backend=self.alloc_backend)
         self.backend = "tdm" if self.allocator is not None else "rounds"
         if self.policy != "auto":
             get_policy(self.policy)         # fail fast on unknown names
@@ -489,7 +498,8 @@ class NomFabric:
         """Cumulative session stats: scheduling (``flushes``,
         ``requests``/``scheduled``, ``init_requests``, concurrency,
         ``stall_cycles``, search/conflict counters incl.
-        ``searched_requests``), the live knobs
+        ``searched_requests``, and the allocator-backend split
+        ``fused_waves`` / ``host_waves``), the live knobs
         (``policy``, ``queue_depth``), and admission health
         (``pending``, ``shed``, ``full_stalls``,
         ``queue_stall_cycles``, ``policy_switches``, and the queue's
@@ -509,6 +519,8 @@ class NomFabric:
             "search_rounds": 0 if agg is None else agg.search_rounds,
             "conflicts": 0 if agg is None else agg.conflicts,
             "searched_requests": 0 if agg is None else agg.n_searched,
+            "fused_waves": 0 if agg is None else agg.fused_waves,
+            "host_waves": 0 if agg is None else agg.host_waves,
             "policy": self.effective_policy,
             "queue_depth": self.queue.depth,
             "pending": self.pending,
@@ -615,6 +627,7 @@ class FabricCluster:
     queue_depth: int = 8
     overflow: str = "block"
     allocators: list | None = None   # pre-built per-stack allocators
+    alloc_backend: str = "auto"      # per-stack allocator prepare backend
 
     def __post_init__(self):
         if self.allocators is not None:
@@ -630,7 +643,8 @@ class FabricCluster:
             self.fabrics = [NomFabric(mesh=m, n_slots=self.n_slots,
                                       policy=self.policy,
                                       queue_depth=self.queue_depth,
-                                      overflow=self.overflow)
+                                      overflow=self.overflow,
+                                      alloc_backend=self.alloc_backend)
                             for m in self.topology.stacks]
         self.segmented = SegmentedAllocator(
             self.topology, [f.allocator for f in self.fabrics], self.n_slots)
@@ -817,6 +831,8 @@ class FabricCluster:
             "max_inflight": 0 if agg is None else agg.max_inflight,
             "avg_inflight": 0.0 if agg is None else agg.avg_inflight,
             "stall_cycles": 0 if agg is None else agg.stall_cycles,
+            "fused_waves": 0 if agg is None else agg.fused_waves,
+            "host_waves": 0 if agg is None else agg.host_waves,
             "cross_requests": self.cross_requests,
             "cross_committed": self.cross_committed,
             "cross_denied": self.segmented.denied,

@@ -103,6 +103,10 @@ class ScheduleReport:
         a :class:`~repro.core.topology.StackedTopology` (scheduled as
         two-phase segmented circuits by a ``FabricCluster``); 0 on every
         single-stack fabric.
+      fused_waves: prepare rounds served by the fused compiled program
+        (tdm backend) — the allocator's per-wave backend telemetry.
+      host_waves: prepare rounds served by the split host pipeline (tiny
+        rounds, conflict re-searches, ``backend="host"`` allocators).
     """
     backend: str               # "tdm" | "rounds"
     n_requests: int
@@ -116,6 +120,8 @@ class ScheduleReport:
     n_searched: int = 0        # per-request searches over all passes (tdm)
     n_init: int = 0            # INIT-class (op="init") requests in the batch
     n_cross_stack: int = 0     # cross-stack requests (FabricCluster only)
+    fused_waves: int = 0       # prepare rounds served by the fused program
+    host_waves: int = 0        # prepare rounds served by the host pipeline
     agg_windows: int = 0       # windows folded into avg_inflight by merge()
     #   (0 on a fresh report: its own n_windows is the weight)
 
@@ -142,6 +148,8 @@ class ScheduleReport:
             n_searched=self.n_searched + other.n_searched,
             n_init=self.n_init + other.n_init,
             n_cross_stack=self.n_cross_stack + other.n_cross_stack,
+            fused_waves=self.fused_waves + other.fused_waves,
+            host_waves=self.host_waves + other.host_waves,
             agg_windows=wa + wb)
 
 
@@ -210,7 +218,8 @@ def _tdm_report(alloc: TdmAllocator, reqs: list[CopyRequest],
         stall_cycles=stall,
         search_rounds=rep.search_rounds, conflicts=rep.conflicts,
         n_searched=rep.n_searched,
-        n_init=sum(1 for rq in reqs if rq.op == "init"))
+        n_init=sum(1 for rq in reqs if rq.op == "init"),
+        fused_waves=rep.fused_waves, host_waves=rep.host_waves)
 
 
 def schedule_transfers(transfers, *, allocator: TdmAllocator | None = None,

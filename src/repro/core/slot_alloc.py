@@ -138,6 +138,11 @@ def _pow2_pad(n: int) -> int:
 _SMALL_SEARCH = 8     # at/below this batch, the host evaluation wins
 
 
+# offset enumeration of a shortest-path box, keyed by its spans — shared
+# across calls/instances (the box geometry is position-independent).
+_BOX_OFFSETS: dict[tuple[int, int, int], list] = {}
+
+
 def _wavefront_host(occ: np.ndarray, mesh: Mesh3D, n_slots: int, src: int,
                     dst: int, init_vec: int) -> np.ndarray:
     """Scalar twin of :func:`wavefront_search` for tiny batches.
@@ -164,10 +169,13 @@ def _wavefront_host(occ: np.ndarray, mesh: Mesh3D, n_slots: int, src: int,
     step = tuple(sgn[d] * strides[d] for d in range(3))
     ports = tuple(2 * d + (1 if sgn[d] < 0 else 0) for d in range(3))
     n1 = n_slots - 1
-    offsets = sorted(
-        ((ox, oy, oz) for ox in range(spans[0] + 1)
-         for oy in range(spans[1] + 1) for oz in range(spans[2] + 1)
-         if ox or oy or oz), key=lambda o: o[0] + o[1] + o[2])
+    offsets = _BOX_OFFSETS.get(spans)
+    if offsets is None:
+        offsets = sorted(
+            ((ox, oy, oz) for ox in range(spans[0] + 1)
+             for oy in range(spans[1] + 1) for oz in range(spans[2] + 1)
+             if ox or oy or oz), key=lambda o: o[0] + o[1] + o[2])
+        _BOX_OFFSETS[spans] = offsets
     vals = {src: int(init_vec) & fm}
     nodes, out = [], []
     for off in offsets:
@@ -276,13 +284,74 @@ class _PackedExpiry:
             self.version += 1
         return self.masks
 
-    def reserve_arrays(self, idx: tuple[np.ndarray, ...], until: int) -> None:
+    def reserve_arrays(self, idx: tuple[np.ndarray, ...], until: int,
+                       unique: bool = False) -> None:
         """Reserve every ``(*prefix, slot)`` in the index arrays until
-        ``until`` (exclusive), keeping the packed masks in sync."""
+        ``until`` (exclusive), keeping the packed masks in sync.
+
+        ``unique=True`` asserts the prefix tuples are pairwise distinct
+        (true for a single-slot circuit: one hop per node), allowing the
+        buffered fancy ``|=`` instead of ``np.bitwise_or.at``."""
         self.expiry[idx] = until
         if until > self.window:
-            np.bitwise_or.at(self.masks, idx[:-1], self._weights[idx[-1]])
+            if unique:
+                self.masks[idx[:-1]] |= self._weights[idx[-1]]
+            else:
+                np.bitwise_or.at(self.masks, idx[:-1],
+                                 self._weights[idx[-1]])
         self._buckets.setdefault(int(until), []).append(idx)
+        self.version += 1
+
+    def reserve_run(self, idxs: list, cat: tuple[np.ndarray, ...],
+                    untils: list[int]) -> None:
+        """Batch spelling of :meth:`reserve_arrays` for a *run* of
+        reservations whose full ``(*prefix, slot)`` entries are pairwise
+        distinct across the whole run (the pending-run commit).  ``cat``
+        is the pre-concatenated index tuple of every entry in ``idxs``;
+        ``untils`` is per-reservation.  Prefix tuples may still repeat
+        (two circuits on the same link at different slots), in which case
+        the buffered fancy ``|=`` would drop bits — detect and fall back
+        to ``np.bitwise_or.at``."""
+        reps = np.fromiter((len(ix[-1]) for ix in idxs), np.int64,
+                           len(idxs))
+        u = np.repeat(np.asarray(untils, np.int64), reps)
+        self.expiry[cat] = u
+        live = u > self.window
+        flat = cat[0]
+        for d, c in enumerate(cat[1:-1], 1):
+            flat = flat * self.expiry.shape[d] + c
+        if live.all() and np.unique(flat).size == flat.size:
+            self.masks[cat[:-1]] |= self._weights[cat[-1]]
+        else:
+            np.bitwise_or.at(self.masks, tuple(c[live] for c in cat[:-1]),
+                             self._weights[cat[-1][live]])
+        for ix, until in zip(idxs, untils):
+            self._buckets.setdefault(int(until), []).append(ix)
+        self.version += 1
+
+    def reserve_flat(self, ent: np.ndarray, until_ent: np.ndarray,
+                     idx_untils: list) -> None:
+        """Flat-index spelling of :meth:`reserve_run` for the fused wave
+        commit: ``ent`` holds raveled ``(*prefix, slot)`` entry ids
+        (pairwise distinct across the run), ``until_ent`` the per-entry
+        expiry, ``idx_untils`` the ``(idx_tuple, until)`` pairs for the
+        lazy-expiry bucket bookkeeping.  Prefixes may repeat (two
+        circuits on one link at different slots) — detected, falling
+        back to ``np.bitwise_or.at``."""
+        self.expiry.reshape(-1)[ent] = until_ent
+        live = until_ent > self.window
+        if not live.all():  # pragma: no cover - hot path reserves ahead
+            ent = ent[live]
+        # Entries are pairwise distinct, so each (prefix, slot) bit is
+        # contributed at most once — summing the single-bit weights per
+        # prefix (bincount) IS their bitwise OR, with no dup-prefix
+        # detection needed.
+        mf = self.masks.reshape(-1)
+        mf |= np.bincount(ent // self.n_slots,
+                          weights=self._weights[ent % self.n_slots],
+                          minlength=mf.size).astype(np.uint32)
+        for ix, until in idx_untils:
+            self._buckets.setdefault(until, []).append(ix)
         self.version += 1
 
     def release_arrays(self, idx: tuple[np.ndarray, ...],
@@ -350,7 +419,9 @@ class SlotTable:
         scatter of the changed rows, so a version bump re-uploads.)"""
         masks = self._ports.masks_at(window)
         if self._dev is None or self._dev_version != self._ports.version:
-            self._dev = jnp.asarray(masks)
+            # device_put is async — the transfer overlaps the host-side
+            # wave bookkeeping that runs before the next dispatch.
+            self._dev = jax.device_put(masks.copy())
             self._dev_version = self._ports.version
         return self._dev
 
@@ -607,6 +678,8 @@ class BatchReport:
     n_searched: int = 0        # per-request searches summed over all passes
     #   (conflict-scoped re-search keeps this near n_requests; the old
     #   tail-wide retry made it grow ~quadratically with the tail length)
+    fused_waves: int = 0       # prepare rounds served by the fused program
+    host_waves: int = 0        # prepare rounds served by the host pipeline
 
 
 _CONFLICT = object()   # sentinel: stale search, re-run against fresh state
@@ -630,6 +703,8 @@ class _Prepared:
     distance: int = 0
     hops: list | None = None
     idx: tuple | None = None           # (nodes, ports, slots) index arrays
+    flat: set | None = None            # flat (node,port,slot) entry ids —
+    #   the pending-run membership key (single-slot mesh circuits only)
     uses_bus: bool = False
     bus_column: int = -1
     bus_slots: list | None = None      # [(column, slot)] (NoM-Light)
@@ -660,15 +735,28 @@ class TdmAllocator:
     """
 
     def __init__(self, mesh: Mesh3D, n_slots: int = 16,
-                 link_bytes: int = 8, use_pallas: bool = False):
+                 link_bytes: int = 8, use_pallas: bool = False,
+                 backend: str = "auto"):
+        if backend not in ("auto", "host", "fused"):
+            raise ValueError(f"backend must be auto|host|fused, "
+                             f"got {backend!r}")
         self.mesh = mesh
         self.n_slots = n_slots
         self.link_bytes = link_bytes  # 64-bit links => 8 bytes/slot-cycle
         self.table = SlotTable(mesh, n_slots)
         self.last_report = BatchReport()
+        # backend picks who serves a prepare round (search + slot choice +
+        # trace-back): "fused" = always the single compiled program,
+        # "host" = always the split host pipeline, "auto" = fused for full
+        # waves, host for tiny rounds (serial allocate, conflict-scoped
+        # re-search) where dispatch overhead dwarfs the compute.
+        self.backend = backend
+        self._last_prepare_backend = "host"
         # use_pallas routes every search through the kernel (no host
-        # small-batch shortcut), so kernel tests exercise it end to end.
+        # small-batch shortcut), so kernel tests exercise it end to end;
+        # the fused program then runs its Pallas wavefront/scoring route.
         self._host_small = not use_pallas
+        self._fused_kernel = "pallas" if use_pallas else "jnp"
         if use_pallas:  # pragma: no cover - exercised in kernel tests
             from repro.kernels.slot_alloc import ops as _ops
             self._search_batch = partial(_ops.wavefront_search_pallas_batch,
@@ -769,65 +857,359 @@ class TdmAllocator:
         # fast path, not the whole tail.  (A state re-searched after a
         # conflict commits immediately, so the bitmaps never need
         # per-state sequencing.)
-        n_cols = self.mesh.X * self.mesh.Y
+        # Deferred circuit emission of the last fused wave: its
+        # reservations are final but its Circuit objects are built
+        # overlapped with the *next* wave's device program.
+        pending = None
         for lo in range(0, len(reqs), self.search_wave):
             hi = min(lo + self.search_wave, len(reqs))
             wave = reqs[lo:hi]
+            self._last_prepare_backend = "host"
+            if (self._wave_fast
+                    and self._fused_eligible(len(wave), t_readys[lo:hi])
+                    and all(r.op == "copy" and not r.max_extra_slots
+                            for r in wave)):
+                # All-simple fused wave: skip per-state materialization
+                # entirely — the struct-of-arrays commit below.
+                token = self._dispatch_wave_fused(wave, t_readys[lo:hi],
+                                                  window)
+                if pending is not None:
+                    self._emit_wave_fused(pending, results, cycle)
+                report.search_rounds += 1
+                report.n_searched += len(wave)
+                report.fused_waves += 1
+                pending = self._commit_wave_fused(
+                    token, wave, t_readys[lo:hi], lo, window, cycle,
+                    results, report)
+                continue
+            if pending is not None:
+                self._emit_wave_fused(pending, results, cycle)
+                pending = None
             states = self._prepare_states(wave, t_readys[lo:hi], window)
             report.search_rounds += 1
             report.n_searched += len(wave)
-            in_box, col_box = self._scope_boxes(wave)
-            touched = np.zeros(self.mesh.n_nodes, bool)
-            touched_cols = np.zeros(n_cols, bool)
-            any_nodes = any_cols = False
-            for k, req in enumerate(wave):
+            if self._last_prepare_backend == "fused":
+                report.fused_waves += 1
+            else:
+                report.host_waves += 1
+            # Pending *run*: consecutive single-slot states whose chosen
+            # (node, port, slot) reservation entries are pairwise
+            # disjoint.  Entry disjointness makes their commits
+            # order-independent and keeps each member's live-table
+            # validation independent of the others' (a commit only writes
+            # its own entries), so the whole run is validated with ONE
+            # vectorized expiry gather and committed with one vectorized
+            # reservation — outcome-identical to committing each
+            # serially.  A state that cannot join (bus route, extra-slot
+            # bundle, entry overlap with a pending member) flushes the
+            # run first, so the serial path always sees exactly the live
+            # table it would have seen.
+            run: list[int] = []
+            run_claims: set = set()  # entry ids of pending members
+            work = list(range(len(wave)))
+            i = 0
+            while True:
+                if i >= len(work):
+                    if not run:
+                        break
+                    redo = self._flush_pending(states, run, wave,
+                                               t_readys[lo:hi], results,
+                                               lo, window, cycle, report)
+                    run = []
+                    run_claims = set()
+                    if redo:
+                        work[i:i] = redo
+                    continue
+                k = work[i]
                 st = states[k]
-                hit = (any_nodes and bool(np.any(touched & in_box[k]))) or \
-                    (any_cols and col_box is not None
-                     and bool(np.any(touched_cols & col_box[k])))
-                out = self._commit_prepared(st, window, validate=hit)
+                if st.denied:
+                    report.n_denied += 1
+                    results[lo + k] = AllocResult(None, cycle)
+                    i += 1
+                    continue
+                if st.flat is not None and not st.conflict:
+                    if run_claims.isdisjoint(st.flat):
+                        run.append(k)
+                        run_claims |= st.flat
+                        i += 1
+                        continue
+                # k cannot ride the pending run: flush, then retry k (it
+                # may start the next run, or fall through to the serial
+                # path below once the run is empty).
+                if run:
+                    redo = self._flush_pending(states, run, wave,
+                                               t_readys[lo:hi], results,
+                                               lo, window, cycle, report)
+                    run = []
+                    run_claims = set()
+                    if redo:
+                        work[i:i] = redo
+                    continue
+                out = self._commit_prepared(st, window, validate=True)
                 if out is _CONFLICT:
-                    report.conflicts += 1
-                    st = self._prepare_states([req],
-                                              t_readys[lo + k:lo + k + 1],
-                                              window)[0]
-                    report.search_rounds += 1
-                    report.n_searched += 1
-                    out = self._commit_prepared(st, window, validate=False)
-                    assert out is not _CONFLICT, \
-                        "fresh search conflicted with itself"
+                    st, out = self._handle_conflict(
+                        wave[k], t_readys[lo + k:lo + k + 1], window,
+                        report)
                 if out is None:
                     report.n_denied += 1
                 else:
                     report.n_committed += 1
-                    touched[st.idx[0]] = True
-                    any_nodes = True
-                    for col, _s in st.bus_slots or ():
-                        touched_cols[col] = True
-                        any_cols = True
                 results[lo + k] = AllocResult(out, cycle)
+                i += 1
+        if pending is not None:
+            self._emit_wave_fused(pending, results, cycle)
         self.last_report = report
         return results
 
-    # -- conflict scoping -----------------------------------------------------
-    def _scope_boxes(self, reqs):
-        """Per-request membership masks for the conservative invalidation
-        test: ``in_box[i, v]`` iff node v lies in request i's
-        shortest-path box.  The second return is the bus-column twin for
-        cross-layer NoM-Light routes (None on the full mesh, which has no
-        shared vertical-bus resource)."""
-        coords = self.mesh.coord_array
-        srcs = np.fromiter((r.src for r in reqs), np.int64, len(reqs))
-        dsts = np.fromiter((r.dst for r in reqs), np.int64, len(reqs))
-        sc, dc = coords[srcs], coords[dsts]
-        lo = np.minimum(sc, dc)
-        hi = np.maximum(sc, dc)
-        in_box = np.ones((len(reqs), self.mesh.n_nodes), bool)
-        for d in range(3):
-            cd = coords[:, d]
-            in_box &= (cd[None] >= lo[:, d:d + 1]) \
-                & (cd[None] <= hi[:, d:d + 1])
-        return in_box, None
+    def _handle_conflict(self, req: CopyRequest, t_ready: np.ndarray,
+                         window: int, report: BatchReport):
+        """Stale-snapshot conflict: re-search ``req`` alone against the
+        live table (the conflict-scoped re-search) and commit the fresh
+        state, counter bookkeeping included.  Returns ``(state,
+        circuit_or_None)``."""
+        report.conflicts += 1
+        self._last_prepare_backend = "host"
+        st = self._reprepare_conflict(req, t_ready, window)
+        report.search_rounds += 1
+        report.n_searched += 1
+        if self._last_prepare_backend == "fused":
+            report.fused_waves += 1
+        else:
+            report.host_waves += 1
+        out = self._commit_prepared(st, window, validate=False)
+        assert out is not _CONFLICT, "fresh search conflicted with itself"
+        return st, out
+
+    def _flush_pending(self, states: list[_Prepared], ks: list[int],
+                       wave: list[CopyRequest], t_readys_w: np.ndarray,
+                       results, lo: int, window: int, cycle: int,
+                       report: BatchReport) -> list[int]:
+        """Validate + commit a pending run of entry-disjoint single-slot
+        states in one vectorized pass.
+
+        The run's expiry gather against the live table is element-wise
+        identical to the serial loop's per-state validations: members'
+        (node, port, slot) entry sets are pairwise disjoint, so
+        committing one never changes another's check.  All pass => one
+        batch reservation.  On the
+        first failure — exactly the state the serial loop would bounce —
+        the passing prefix commits, the loser re-searches fresh (the
+        conflict-scoped re-search), and the not-yet-committed tail is
+        handed back for another pass, where its members' validations see
+        the loser's fresh claims.  Returns that tail."""
+        table = self.table
+        if len(ks) == 1:
+            st = states[ks[0]]
+            out = self._commit_prepared(st, window, validate=True)
+            if out is _CONFLICT:
+                st, out = self._handle_conflict(
+                    wave[ks[0]], t_readys_w[ks[0]:ks[0] + 1], window,
+                    report)
+            if out is None:
+                report.n_denied += 1
+            else:
+                report.n_committed += 1
+            results[lo + ks[0]] = AllocResult(out, cycle)
+            return []
+        idxs = [states[k].idx for k in ks]
+        cat = tuple(np.concatenate([ix[j] for ix in idxs])
+                    for j in range(3))
+        bad = table.expiry[cat] > window
+        j = len(ks)
+        if bad.any():
+            # first member the serial loop would bounce
+            lens = np.fromiter((len(ix[0]) for ix in idxs), np.int64,
+                               len(idxs))
+            pos = int(np.flatnonzero(bad)[0])
+            j = int(np.searchsorted(np.cumsum(lens), pos, side="right"))
+            idxs = idxs[:j]
+            if j:
+                upto = int(lens[:j].sum())
+                cat = tuple(c[:upto] for c in cat)
+        if j:
+            table._ports.reserve_run(
+                idxs, cat, [states[k].w_res + states[k].n_win
+                            for k in ks[:j]])
+            n_hint = self.n_slots
+            for k in ks[:j]:
+                st = states[k]
+                report.n_committed += 1
+                results[lo + k] = AllocResult(
+                    Circuit(src=st.src, dst=st.dst,
+                            start_cycle=st.start_cycle,
+                            n_windows=st.n_win, hops=st.hops,
+                            slots_per_window=st.slots_per_window,
+                            uses_bus=st.uses_bus, bus_column=st.bus_column,
+                            distance=st.distance, _n_slots_hint=n_hint),
+                    cycle)
+        if j == len(ks):
+            return []
+        kbad = ks[j]
+        _st, out = self._handle_conflict(
+            wave[kbad], t_readys_w[kbad:kbad + 1], window, report)
+        if out is None:
+            report.n_denied += 1
+        else:
+            report.n_committed += 1
+        results[lo + kbad] = AllocResult(out, cycle)
+        return ks[j + 1:]
+
+    # Route all-simple fused waves (plain copies, no extra-slot bundles)
+    # through the struct-of-arrays commit — _Prepared objects exist only
+    # for conflict re-searches.  NoM-Light waves can carry bus hops, so
+    # they keep the generic per-state loop.
+    _wave_fast: bool = True
+
+    def _dispatch_wave_fused(self, wave: list[CopyRequest],
+                             t_w: np.ndarray, window: int):
+        """Launch the fused program for a wave without blocking (JAX
+        async dispatch) — the caller emits the previous wave's circuits
+        while the device searches this one."""
+        from repro.kernels.slot_alloc import fused as _fused
+        B = len(wave)
+        srcs = np.fromiter((r.src for r in wave), np.int64, B)
+        dsts = np.fromiter((r.dst for r in wave), np.int64, B)
+        return _fused.fused_prepare_start(
+            self.table.device_busy_masks(window), srcs, dsts, t_w,
+            mesh=self.mesh, n_slots=self.n_slots,
+            kernel=self._fused_kernel)
+
+    def _emit_wave_fused(self, pending, results, cycle: int) -> None:
+        """Deferred circuit emission for a fused wave's clean commits:
+        pure bookkeeping (no table access), so it runs overlapped with
+        the next wave's device program."""
+        wave, lo, rows, fp, n_win, dists_l = pending
+        n = self.n_slots
+        starts_l = fp.starts.tolist()
+        nwin_l = n_win.tolist()
+        hn_l = fp.hop_n.tolist()
+        hp_l = fp.hop_p.tolist()
+        hs_l = fp.hop_s.tolist()
+        for i in rows:
+            ln = dists_l[i] + 1
+            r = wave[i]
+            results[lo + i] = AllocResult(
+                Circuit(src=r.src, dst=r.dst, start_cycle=starts_l[i],
+                        n_windows=nwin_l[i],
+                        hops=list(zip(hn_l[i][:ln], hp_l[i][:ln],
+                                      hs_l[i][:ln])),
+                        distance=dists_l[i], _n_slots_hint=n), cycle)
+
+    def _commit_wave_fused(self, token, wave: list[CopyRequest],
+                           t_w: np.ndarray, lo: int, window: int,
+                           cycle: int, results, report: BatchReport):
+        """Fused-program wave commit without per-state materialization.
+
+        The wave's hop bundles stay in the program's (B, L) output
+        arrays.  Rows are cut into *segments* — maximal runs of rows
+        whose flat ``(node, port, slot)`` reservation entries are
+        pairwise disjoint — by one python scan over the raveled entry
+        ids.  Entry disjointness makes a segment's commits
+        order-independent and its members' live-table validations
+        independent of each other, so each segment is validated with a
+        single flat expiry gather and reserved with a single vectorized
+        write.  The first failing row of a segment is exactly the state
+        the serial loop would bounce: the passing prefix commits, the
+        loser re-searches against the live table (the conflict-scoped
+        re-search, scalar fast path), and the remainder is requeued as
+        its own segment — still pairwise disjoint — whose validation
+        then sees the loser's fresh claims.  Bit-identical to streaming
+        the wave through :meth:`allocate`.
+
+        Returns the deferred emission record for
+        :meth:`_emit_wave_fused` — reservations and conflict results are
+        final when this returns, but clean commits' Circuit objects are
+        not yet built."""
+        from repro.kernels.slot_alloc import fused as _fused
+        n = self.n_slots
+        B = len(wave)
+        fp = _fused.fused_prepare_wait(token)
+        self._last_prepare_backend = "fused"
+        denied = fp.denied
+        if (~denied & ~fp.ok).any():
+            i = int(np.flatnonzero(~denied & ~fp.ok)[0])
+            raise RuntimeError(
+                f"no free upstream for request "
+                f"{wave[i].src}->{wave[i].dst} slot {int(fp.arr[i])} "
+                f"(inconsistent search)")
+        hop_n, hop_p, hop_s = fp.hop_n, fp.hop_p, fp.hop_s
+        L = hop_n.shape[1]
+        lens = np.where(denied, 0, fp.dists.astype(np.int64) + 1)
+        valid = np.arange(L)[None, :] < lens[:, None]
+        # int32 throughout: flat ids top out at n_nodes*N_PORTS*n_slots.
+        ent = ((hop_n * N_PORTS + hop_p) * n + hop_s)[valid]
+        offs = np.zeros(B + 1, np.int64)
+        np.cumsum(lens, out=offs[1:])
+        nbytes = np.fromiter((r.nbytes for r in wave), np.int64, B)
+        n_win = np.maximum(1, -(-nbytes // self.link_bytes))
+        untils = t_w // n + n_win
+        ent_l = ent.tolist()
+        offs_l = offs.tolist()
+        denied_l = denied.tolist()
+        dists_l = fp.dists.tolist()
+        untils_l = untils.tolist()
+        for i in np.flatnonzero(denied).tolist():
+            report.n_denied += 1
+            results[lo + i] = AllocResult(None, cycle)
+        # Segment scan: a row whose entries hit the current segment's
+        # claims starts the next segment.  (Denied rows are zero-width:
+        # they never clash and commit nothing.)
+        segs: list[tuple[int, int]] = []
+        seen: dict[int, int] = {}
+        sid = 0
+        a = 0
+        for i in range(B):
+            row = ent_l[offs_l[i]:offs_l[i + 1]]
+            for e in row:
+                if seen.get(e, -1) == sid:
+                    segs.append((a, i))
+                    sid += 1
+                    a = i
+                    break
+            for e in row:
+                seen[e] = sid
+        segs.append((a, B))
+        ports = self.table._ports
+        ef = ports.expiry.reshape(-1)
+        emit_rows: list[int] = []
+        p = 0
+        while p < len(segs):
+            a, b = segs[p]
+            p += 1
+            pa, pb = offs_l[a], offs_l[b]
+            if pa == pb:       # all-denied segment: results already out
+                continue
+            bad = ef[ent[pa:pb]] > window
+            if not bad.any():
+                j = b
+            else:
+                pos = pa + int(np.flatnonzero(bad)[0])
+                j = int(np.searchsorted(offs, pos, side="right")) - 1
+            if offs_l[j] > pa:
+                u_ent = np.repeat(untils[a:j], lens[a:j])
+                idx_untils = []
+                for i in range(a, j):
+                    if denied_l[i]:
+                        continue
+                    ln = dists_l[i] + 1
+                    idx_untils.append(
+                        ((hop_n[i, :ln], hop_p[i, :ln], hop_s[i, :ln]),
+                         untils_l[i]))
+                    report.n_committed += 1
+                    emit_rows.append(i)
+                ports.reserve_flat(ent[pa:offs_l[j]], u_ent, idx_untils)
+            if j >= b:
+                continue
+            _st, out = self._handle_conflict(wave[j], t_w[j:j + 1],
+                                             window, report)
+            if out is None:
+                report.n_denied += 1
+            else:
+                report.n_committed += 1
+            results[lo + j] = AllocResult(out, cycle)
+            if j + 1 < b:
+                segs[p:p] = [(j + 1, b)]
+        return wave, lo, emit_rows, fp, n_win, dists_l
 
     # -- search + vectorized post-search pipeline -----------------------------
     def _run_search(self, occ, window, srcs, dsts, inits) -> np.ndarray:
@@ -859,6 +1241,8 @@ class TdmAllocator:
                         window: int) -> list[_Prepared]:
         if not reqs:
             return []
+        if self._fused_eligible(len(reqs), t_readys):
+            return self._prepare_fused(reqs, t_readys, window)
         occ = self.table._ports.masks_at(window)
         srcs = np.fromiter((r.src for r in reqs), np.int64, len(reqs))
         dsts = np.fromiter((r.dst for r in reqs), np.int64, len(reqs))
@@ -867,6 +1251,108 @@ class TdmAllocator:
         return self._prepare_full(reqs, t_readys, vecs,
                                   np.arange(len(reqs)), occ, window,
                                   srcs=srcs, dsts=dsts)
+
+    def _reprepare_conflict(self, req: CopyRequest, t_ready: np.ndarray,
+                            window: int) -> _Prepared:
+        """Fresh single-request prepare after a stale-snapshot conflict.
+
+        On the host backends this skips the batch plumbing entirely: one
+        scalar topological wavefront against the refreshed masks, then
+        the scalar slot choice / trace-back — the conflict fast path the
+        wave structure was designed around.  A forced-fused allocator
+        re-prepares through the compiled program instead, so the
+        differential harness exercises it end to end."""
+        if self._host_small and self.backend != "fused":
+            occ = self.table._ports.masks_at(window)
+            vec = _wavefront_host(occ, self.mesh, self.n_slots, req.src,
+                                  req.dst, 0)
+            return self._prepare_one(req, int(t_ready[0]), vec, occ, window)
+        return self._prepare_states([req], t_ready, window)[0]
+
+    # -- the fused compiled backend -------------------------------------------
+    def _fused_eligible(self, batch: int, t_readys: np.ndarray) -> bool:
+        """Route this prepare round through the fused program?  "auto"
+        keeps the host scalar path for tiny rounds; every backend falls
+        back to host when a start cycle could overflow the program's
+        int32 cost arithmetic (the host pipeline scores in int64)."""
+        if self.backend == "host":
+            return False
+        if self.backend == "auto" and batch <= _SMALL_SEARCH:
+            return False
+        return int(t_readys.max()) < 2 ** 31 - 2 * self.n_slots
+
+    def _prepare_fused(self, reqs: list[CopyRequest], t_readys: np.ndarray,
+                       window: int) -> list[_Prepared]:
+        """One wave through the fused program (wavefront + slot choice +
+        trace-back in a single compiled dispatch), then the same bundle
+        assembly as :meth:`_prepare_full` — identical denial semantics,
+        extra-slot order, and reservation indices."""
+        from repro.kernels.slot_alloc import fused as _fused
+        n = self.n_slots
+        B = len(reqs)
+        srcs = np.fromiter((r.src for r in reqs), np.int64, B)
+        dsts = np.fromiter((r.dst for r in reqs), np.int64, B)
+        fp = _fused.fused_prepare(
+            self.table.device_busy_masks(window), srcs, dsts, t_readys,
+            mesh=self.mesh, n_slots=n, kernel=self._fused_kernel)
+        self._last_prepare_backend = "fused"
+        denied, arr, ok = fp.denied, fp.arr, fp.ok
+        want = np.fromiter(
+            (0 if (r.op == "init" or denied[k]) else r.max_extra_slots
+             for k, r in enumerate(reqs)), np.int64, B)
+        er = ec = extra_hops = extra_ok = None
+        if want.any():
+            # Extra-slot bundles are rare: trace them on host against the
+            # program's converged vectors (bit-identical walks).
+            slots_ix = np.arange(n, dtype=np.int64)
+            er, ec = np.nonzero(fp.free & (want > 0)[:, None]
+                                & (slots_ix[None, :] != arr[:, None]))
+            occ = self.table._ports.masks_at(window)
+            extra_hops, extra_ok = _traceback_jobs(
+                fp.vecs_np(), er, occ, self.mesh, n, srcs[er], dsts[er], ec)
+        # One bulk .tolist() per column keeps the per-request assembly in
+        # plain-python territory (per-element numpy indexing is ~10x the
+        # cost of a list index at this size).
+        denied_l = denied.tolist()
+        ok_l = ok.tolist()
+        dists_l = fp.dists.tolist()
+        starts_l = fp.starts.tolist()
+        tr_l = t_readys.tolist()
+        hn_l = fp.hop_n.tolist()
+        hp_l = fp.hop_p.tolist()
+        hs_l = fp.hop_s.tolist()
+        fl_l = ((fp.hop_n.astype(np.int64) * N_PORTS + fp.hop_p) * n
+                + fp.hop_s).tolist()
+        states: list[_Prepared] = []
+        epos = 0
+        for i, r in enumerate(reqs):
+            if denied_l[i]:
+                states.append(_Prepared(denied=True, src=r.src, dst=r.dst))
+                continue
+            if not ok_l[i]:
+                raise RuntimeError(
+                    f"no free upstream for request {r.src}->{r.dst} "
+                    f"slot {int(arr[i])} (inconsistent search)")
+            dist = dists_l[i]
+            ln = dist + 1
+            hops = list(zip(hn_l[i][:ln], hp_l[i][:ln], hs_l[i][:ln]))
+            k = 1
+            if er is not None:
+                while epos < len(er) and er[epos] == i:
+                    if k < 1 + want[i] and extra_ok[epos]:
+                        hops = hops + extra_hops[epos]
+                        k += 1
+                    epos += 1
+            n_win = (self.n_windows_for_init(r.nbytes) if r.op == "init"
+                     else self.n_windows_for(r.nbytes, slots=k))
+            states.append(_Prepared(
+                src=r.src, dst=r.dst, start_cycle=starts_l[i],
+                w_res=tr_l[i] // n, n_win=n_win,
+                slots_per_window=k, distance=dist, hops=hops,
+                idx=(fp.hop_n[i, :ln], fp.hop_p[i, :ln], fp.hop_s[i, :ln])
+                if k == 1 else SlotTable._hops_idx(hops),
+                flat=set(fl_l[i][:ln]) if k == 1 else None))
+        return states
 
     def _prepare_one(self, r: CopyRequest, t_ready: int, vec: np.ndarray,
                      occ: np.ndarray, window: int) -> _Prepared:
@@ -906,7 +1392,9 @@ class TdmAllocator:
         return _Prepared(
             src=r.src, dst=r.dst, start_cycle=start, w_res=t_ready // n,
             n_win=n_win, slots_per_window=k, distance=dist, hops=hops,
-            idx=SlotTable._hops_idx(hops))
+            idx=SlotTable._hops_idx(hops),
+            flat={(hn * N_PORTS + hp) * n + hs for hn, hp, hs in hops}
+            if k == 1 else None)
 
     def _prepare_full(self, reqs, t_readys, vecs, rows, occ, window,
                       srcs=None, dsts=None) -> list[_Prepared]:
@@ -968,7 +1456,9 @@ class TdmAllocator:
                 src=r.src, dst=r.dst, start_cycle=int(starts[i]),
                 w_res=int(t_readys[i]) // n, n_win=n_win, slots_per_window=k,
                 distance=int(dists[i]), hops=hops,
-                idx=SlotTable._hops_idx(hops)))
+                idx=SlotTable._hops_idx(hops),
+                flat={(hn * N_PORTS + hp) * n + hs for hn, hp, hs in hops}
+                if k == 1 else None))
         return states
 
     # -- commit (host-side, arrival order) ------------------------------------
@@ -1004,7 +1494,8 @@ class TdmAllocator:
             # hop outside a request's shortest-path box (impossible today)
             # must fail loudly, not silently double-book.
             assert (table.expiry[st.idx] <= window).all(), "double booking"
-        table._ports.reserve_arrays(st.idx, st.w_res + st.n_win)
+        table._ports.reserve_arrays(st.idx, st.w_res + st.n_win,
+                                    unique=st.slots_per_window == 1)
         if st.bus_slots:
             for col, bslot in st.bus_slots:
                 table.reserve_bus(col, bslot, st.w_res, st.n_win)
@@ -1028,25 +1519,14 @@ class TdmAllocatorLight(TdmAllocator):
     requests batch every candidate arrival slot of both phase orders
     through the same :func:`traceback_batch` call."""
 
-    def _scope_boxes(self, reqs):
-        """Adds the bus-column membership masks: a claimed vertical-bus
-        column invalidates a cross-layer request whose XY box contains it
-        (the bus hop could have ridden it).  Same-layer requests never use
-        the bus, so their column mask is empty."""
-        in_box, _ = super()._scope_boxes(reqs)
-        mesh = self.mesh
-        coords = mesh.coord_array
-        sc = coords[[r.src for r in reqs]]
-        dc = coords[[r.dst for r in reqs]]
-        lo = np.minimum(sc, dc)
-        hi = np.maximum(sc, dc)
-        cross = sc[:, 2] != dc[:, 2]
-        cols = np.arange(mesh.X * mesh.Y)
-        cx, cy = cols % mesh.X, cols // mesh.X
-        col_box = (cross[:, None]
-                   & (cx[None] >= lo[:, :1]) & (cx[None] <= hi[:, :1])
-                   & (cy[None] >= lo[:, 1:2]) & (cy[None] <= hi[:, 1:2]))
-        return in_box, col_box
+    # Cross-layer routes carry bus hops the struct-of-arrays wave commit
+    # does not model — every NoM-Light wave takes the generic loop.
+    _wave_fast = False
+
+    def _reprepare_conflict(self, req, t_ready, window):
+        # Cross-layer routes need the bus-aware two-phase prepare; the
+        # full-mesh scalar fast path does not apply here.
+        return self._prepare_states([req], t_ready, window)[0]
 
     def _prepare_states(self, reqs, t_readys, window):
         if not reqs:

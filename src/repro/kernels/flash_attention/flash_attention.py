@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.interpret import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -73,7 +75,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 def flash_attention_fwd(q, k, v, *, causal: bool = True,
                         window: int | None = None, scale: float,
                         block_q: int = 128, block_k: int = 128,
-                        interpret: bool = True):
+                        interpret: bool | None = None):
     """q: (B, Hq, Sq, D); k/v: (B, Hkv, Sk, D) — already padded so
     Sq % block_q == Sk % block_k == 0.  Returns (B, Hq, Sq, D)."""
     b, hq, sq, d = q.shape
@@ -102,5 +104,5 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True,
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, d), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, k, v)

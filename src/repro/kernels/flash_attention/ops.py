@@ -15,7 +15,7 @@ from .flash_attention import flash_attention_fwd
 def flash_attention(q, k, v, *, causal: bool = True,
                     window: int | None = None,
                     block_q: int = 128, block_k: int = 128,
-                    interpret: bool = True):
+                    interpret: bool | None = None):
     """Model layout: q (B, Sq, Hq, D), k/v (B, Sk, Hkv, D).
     Pads sequences to block multiples (padding keys are masked inside the
     kernel; padded query rows are sliced off)."""

@@ -1,0 +1,26 @@
+"""Backend-aware default for the Pallas ``interpret`` flag.
+
+Every kernel in this package takes ``interpret: bool | None = None`` and
+resolves ``None`` through :func:`default_interpret`: compiled Pallas
+(``interpret=False``) on accelerator backends, interpreter mode on CPU —
+where JAX 0.4.x Pallas raises ``ValueError: Only interpret mode is
+supported on CPU backend.`` for compiled calls.  Passing an explicit
+``True``/``False`` always wins (the compiled/interpret parity tests pass
+``False`` on purpose and record the skip reason when the backend refuses).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["default_interpret", "resolve_interpret"]
+
+
+def default_interpret() -> bool:
+    """True iff the default JAX backend needs Pallas interpreter mode."""
+    return jax.default_backend() == "cpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve a kernel's ``interpret`` argument: explicit values pass
+    through; ``None`` picks the backend-aware default."""
+    return default_interpret() if interpret is None else bool(interpret)

@@ -9,7 +9,7 @@ from .rglru_scan import rglru_scan_fwd
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))
-def rglru_scan(a, b, *, chunk: int = 128, interpret: bool = True):
+def rglru_scan(a, b, *, chunk: int = 128, interpret: bool | None = None):
     """a, b: (B, S, W); pads S to the chunk multiple and slices back."""
     import jax.numpy as jnp
     bsz, s, w = a.shape

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.interpret import resolve_interpret
+
 
 def _kernel(a_ref, b_ref, y_ref, h_scr, *, chunk: int):
     ic = pl.program_id(1)
@@ -41,7 +43,7 @@ def _kernel(a_ref, b_ref, y_ref, h_scr, *, chunk: int):
     y_ref[0] = y.astype(y_ref.dtype)
 
 
-def rglru_scan_fwd(a, b, *, chunk: int = 128, interpret: bool = True):
+def rglru_scan_fwd(a, b, *, chunk: int = 128, interpret: bool | None = None):
     """a, b: (B, S, W) with S % chunk == 0 -> h-trajectory (B, S, W)."""
     bsz, s, w = a.shape
     nc = s // chunk
@@ -56,5 +58,5 @@ def rglru_scan_fwd(a, b, *, chunk: int = 128, interpret: bool = True):
         out_specs=pl.BlockSpec((1, chunk, w), lambda i, c: (i, c, 0)),
         out_shape=jax.ShapeDtypeStruct((bsz, s, w), a.dtype),
         scratch_shapes=[pltpu.VMEM((1, w), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(a, b)

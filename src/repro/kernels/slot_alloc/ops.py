@@ -58,7 +58,7 @@ def _geometry(mesh: Mesh3D, srcs: np.ndarray, dsts: np.ndarray):
 
 def wavefront_search_pallas_batch(occ_packed, srcs, dsts, init_vecs, *,
                                   mesh: Mesh3D, n_slots: int,
-                                  interpret: bool = True):
+                                  interpret: bool | None = None):
     """Batch contract of ``repro.core.slot_alloc.wavefront_search_batch``.
 
     occ_packed: (n, N_PORTS) uint32; srcs/dsts: (B,) int node ids;
@@ -82,7 +82,7 @@ def wavefront_search_pallas_batch(occ_packed, srcs, dsts, init_vecs, *,
 
 
 def wavefront_search_pallas(occ, src, dst, init_vec, *, mesh: Mesh3D,
-                            n_slots: int, interpret: bool = True):
+                            n_slots: int, interpret: bool | None = None):
     """Single-request contract of ``core.slot_alloc.wavefront_search``
     (drop-in for TdmAllocator(use_pallas=True))."""
     out = wavefront_search_pallas_batch(

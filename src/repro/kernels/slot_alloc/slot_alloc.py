@@ -29,6 +29,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.kernels.interpret import resolve_interpret
+
 LANES = 128
 
 
@@ -75,7 +77,7 @@ def wavefront_search_planes(sign: jax.Array, valid: jax.Array,
                             init: jax.Array, occ_planes: jax.Array,
                             *, mesh_shape: tuple[int, int, int],
                             n_slots: int,
-                            interpret: bool = True) -> jax.Array:
+                            interpret: bool | None = None) -> jax.Array:
     """Batched PE-matrix search on bit-planes.
 
     sign: (B, 3) int32; valid: (B, 3, n) int32 (upstream-exists per dim);
@@ -95,5 +97,5 @@ def wavefront_search_planes(sign: jax.Array, valid: jax.Array,
         ],
         out_specs=pl.BlockSpec((1, n, LANES), lambda b: (b, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B, n, LANES), jnp.int32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(sign, valid, init, occ_planes)

@@ -10,7 +10,8 @@ from .ssd_scan import ssd_scan_fwd
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd_scan(x, dt, B, C, A, *, chunk: int = 128, interpret: bool = True):
+def ssd_scan(x, dt, B, C, A, *, chunk: int = 128,
+             interpret: bool | None = None):
     """x: (B, S, H, hd); dt: (B, S, H); B/C: (B, S, n) (ngroups=1, shared
     across heads); A: (H,).  Returns (B, S, H, hd)."""
     b, s, h, hd = x.shape

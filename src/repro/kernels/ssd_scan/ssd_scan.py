@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.interpret import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -56,7 +58,7 @@ def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, state_scr, *,
 
 
 def ssd_scan_fwd(x, dt, B, C, A, *, chunk: int = 128,
-                 interpret: bool = True):
+                 interpret: bool | None = None):
     """x: (BH, S, hd); dt: (BH, S, 1); B/C: (BH, S, n); A: (BH, 1).
     S % chunk == 0.  Returns y (BH, S, hd)."""
     bh, s, hd = x.shape
@@ -76,5 +78,5 @@ def ssd_scan_fwd(x, dt, B, C, A, *, chunk: int = 128,
         out_specs=pl.BlockSpec((1, chunk, hd), lambda b, c: (b, c, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, s, hd), x.dtype),
         scratch_shapes=[pltpu.VMEM((hd, n), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, dt, B, C, A)

@@ -184,6 +184,10 @@ class MemorySystem:
         self._inflight_max = 0         # pruned windows: peak count
         self.nom_alloc_conflicts = 0   # stale-search commit retries
         self.nom_setup_retries = 0     # saturated-mesh re-allocations
+        # Allocator-backend split: prepare waves served by the fused
+        # compiled program vs the host pipeline (ScheduleReport passthrough)
+        self.nom_fused_waves = 0
+        self.nom_host_waves = 0
         self.nom_batches = 0
         self.nom_batched_reqs = 0
         # SerDes window occupancy (multi-stack): (channel, slot)-windows
@@ -410,6 +414,8 @@ class MemorySystem:
             reqs = bumped
         results, report = self.fabric.schedule(reqs, cycle=batch_cycle)
         self.nom_alloc_conflicts += report.conflicts
+        self.nom_fused_waves += report.fused_waves
+        self.nom_host_waves += report.host_waves
         dones = []
         spans: list[tuple[int, int]] = []
         for rq, res, (_at, r) in zip(reqs, results, items):
@@ -613,6 +619,8 @@ def simulate(reqs: list[Request], p: SimParams, name: str = "") -> SimResult:
             "nom_inflight_max": int(inflight_max),
             "nom_alloc_conflicts": sys.nom_alloc_conflicts,
             "nom_setup_retries": sys.nom_setup_retries,
+            "nom_fused_waves": sys.nom_fused_waves,
+            "nom_host_waves": sys.nom_host_waves,
             "nom_batches": sys.nom_batches,
             "nom_batch_avg": (sys.nom_batched_reqs / sys.nom_batches
                               if sys.nom_batches else 0.0),

@@ -35,3 +35,12 @@ def run_multidevice(script: str, n_devices: int = 8) -> str:
                          capture_output=True, text=True, timeout=500)
     assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
     return out.stdout
+
+
+@pytest.fixture
+def multidevice_run():
+    """Fixture spelling of :func:`run_multidevice` for the ``multidevice``
+    lane (``pytest -m multidevice``, its own ci.sh stage): re-execs the
+    given snippet under ``XLA_FLAGS=--xla_force_host_platform_device_count``
+    and returns its stdout."""
+    return run_multidevice

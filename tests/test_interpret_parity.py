@@ -1,0 +1,180 @@
+"""Compiled vs interpret parity for every Pallas kernel in the repo.
+
+Each kernel family (slot_alloc wavefront + slot scoring, flash_attention,
+ssd_scan, rglru_scan) is run twice on identical inputs — once with
+``interpret=True`` and once with ``interpret=False`` — and the outputs
+must match bit-for-bit.  On backends where compiled Pallas is not
+available (CPU raises ``ValueError: Only interpret mode is supported on
+CPU backend.``), the parity half SKIPS with the refusal recorded in the
+skip reason, so a CI log always shows *why* compiled mode wasn't proven.
+
+The module also pins the backend-aware ``interpret`` defaults
+(``kernels/interpret.py``): every public kernel entry point now takes
+``interpret: bool | None = None`` and resolves ``None`` to interpreter
+mode exactly when the default backend is CPU — calling a kernel with no
+``interpret`` argument must never crash on the shipped backend.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.slot_alloc import TdmAllocator, wavefront_search_batch
+from repro.core.topology import Mesh3D
+from repro.kernels.interpret import default_interpret, resolve_interpret
+from repro.kernels.slot_alloc import fused as fused_mod
+from repro.kernels.slot_alloc.ops import wavefront_search_pallas_batch
+
+MESH = Mesh3D(4, 4, 2, vault_span_y=1)
+N_SLOTS = 8
+
+
+def _compiled(label, fn, *args, **kwargs):
+    """Run ``fn`` with interpret=False; skip (recording the backend's
+    refusal) where compiled Pallas is unsupported."""
+    try:
+        return fn(*args, interpret=False, **kwargs)
+    except ValueError as e:
+        if "interpret mode" in str(e):
+            pytest.skip(f"{label}: compiled Pallas unavailable on "
+                        f"backend={jax.default_backend()!r}: {e}")
+        raise
+
+
+# --- the backend-aware default ------------------------------------------------
+def test_default_interpret_tracks_backend():
+    assert default_interpret() == (jax.default_backend() == "cpu")
+    assert resolve_interpret(None) == default_interpret()
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+
+
+def test_kernels_run_with_no_interpret_argument():
+    """Every public entry point works with the resolved default — no
+    caller may need to know the backend to call a kernel."""
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.rglru_scan.ops import rglru_scan
+    from repro.kernels.ssd_scan.ops import ssd_scan
+
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, 8, 2, 16)), jnp.float32)
+    kv = jnp.asarray(rng.standard_normal((1, 8, 2, 16)), jnp.float32)
+    assert flash_attention(q, kv, kv, block_q=8, block_k=8).shape == q.shape
+
+    a = jnp.full((1, 16, 8), 0.5, jnp.float32)
+    b = jnp.ones((1, 16, 8), jnp.float32)
+    assert rglru_scan(a, b, chunk=16).shape == a.shape
+
+    x = jnp.asarray(rng.standard_normal((1, 16, 2, 8)), jnp.float32)
+    dt = jnp.full((1, 16, 2), 0.1, jnp.float32)
+    B = jnp.asarray(rng.standard_normal((1, 16, 4)), jnp.float32)
+    A = jnp.full((2,), -1.0, jnp.float32)
+    assert ssd_scan(x, dt, B, B, A, chunk=16).shape == x.shape
+
+    occ = np.zeros((MESH.n_nodes, 7), np.uint32)
+    srcs, dsts = np.asarray([0, 3]), np.asarray([9, 21])
+    init = np.zeros(2, np.uint32)
+    out = wavefront_search_pallas_batch(occ, srcs, dsts, init, mesh=MESH,
+                                        n_slots=N_SLOTS)
+    np.testing.assert_array_equal(
+        np.asarray(out),
+        np.asarray(wavefront_search_batch(occ, srcs, dsts, init, mesh=MESH,
+                                          n_slots=N_SLOTS)))
+
+
+# --- per-kernel compiled/interpret parity ------------------------------------
+def _warm_occupancy():
+    rng = np.random.default_rng(3)
+    warm = TdmAllocator(MESH, N_SLOTS)
+    for _ in range(24):
+        s, d = (int(v) for v in rng.integers(MESH.n_nodes, size=2))
+        if s != d:
+            warm.allocate(s, d, 512, cycle=0)
+    return warm.table.busy_masks(0)
+
+
+def test_slot_alloc_wavefront_parity():
+    occ = _warm_occupancy()
+    rng = np.random.default_rng(4)
+    B = 16
+    srcs = rng.integers(MESH.n_nodes, size=B)
+    dsts = (srcs + 1 + rng.integers(MESH.n_nodes - 1, size=B)) % MESH.n_nodes
+    init = np.zeros(B, np.uint32)
+    interp = np.asarray(wavefront_search_pallas_batch(
+        occ, srcs, dsts, init, mesh=MESH, n_slots=N_SLOTS, interpret=True))
+    comp = np.asarray(_compiled(
+        "slot_alloc/wavefront", wavefront_search_pallas_batch,
+        occ, srcs, dsts, init, mesh=MESH, n_slots=N_SLOTS))
+    np.testing.assert_array_equal(comp, interp)
+
+
+def test_slot_alloc_slot_score_parity():
+    rng = np.random.default_rng(5)
+    avail = jnp.asarray(rng.integers(0, 2**N_SLOTS, size=24), jnp.uint32)
+    planes = fused_mod.unpack_bits(avail, N_SLOTS)
+    dists = jnp.asarray(rng.integers(0, 9, size=24), jnp.int32)
+    t = jnp.asarray(rng.integers(0, 30, size=24), jnp.int32)
+    interp = np.asarray(fused_mod.slot_score_planes(
+        planes, dists, t, n_slots=N_SLOTS, interpret=True))
+    comp = np.asarray(_compiled(
+        "slot_alloc/slot_score", fused_mod.slot_score_planes,
+        planes, dists, t, n_slots=N_SLOTS))
+    np.testing.assert_array_equal(comp, interp)
+
+
+def test_flash_attention_parity():
+    from repro.kernels.flash_attention.ops import flash_attention
+    rng = np.random.default_rng(6)
+    q = jnp.asarray(rng.standard_normal((2, 24, 4, 16)), jnp.float32)
+    kv = jnp.asarray(rng.standard_normal((2, 24, 2, 16)), jnp.float32)
+    kw = dict(causal=True, block_q=8, block_k=8)
+    interp = np.asarray(flash_attention(q, kv, kv, interpret=True, **kw))
+    comp = np.asarray(_compiled("flash_attention", flash_attention,
+                                q, kv, kv, **kw))
+    np.testing.assert_array_equal(comp, interp)
+
+
+def test_ssd_scan_parity():
+    from repro.kernels.ssd_scan.ops import ssd_scan
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((2, 32, 2, 8)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (2, 32, 2)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((2, 32, 4)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((2, 32, 4)), jnp.float32)
+    A = jnp.asarray(rng.uniform(-2.0, -0.5, 2), jnp.float32)
+    interp = np.asarray(ssd_scan(x, dt, B, C, A, chunk=16, interpret=True))
+    comp = np.asarray(_compiled("ssd_scan", ssd_scan, x, dt, B, C, A,
+                                chunk=16))
+    np.testing.assert_array_equal(comp, interp)
+
+
+def test_rglru_scan_parity():
+    from repro.kernels.rglru_scan.ops import rglru_scan
+    rng = np.random.default_rng(8)
+    a = jnp.asarray(rng.uniform(0.2, 0.99, (2, 32, 8)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((2, 32, 8)), jnp.float32)
+    interp = np.asarray(rglru_scan(a, b, chunk=16, interpret=True))
+    comp = np.asarray(_compiled("rglru_scan", rglru_scan, a, b, chunk=16))
+    np.testing.assert_array_equal(comp, interp)
+
+
+def test_fused_prepare_program_parity():
+    """The whole fused program under kernel="pallas": interpret on/off."""
+    occ = _warm_occupancy()
+    rng = np.random.default_rng(9)
+    B = 16
+    srcs = rng.integers(MESH.n_nodes, size=B).astype(np.int64)
+    dsts = (srcs + 1 + rng.integers(MESH.n_nodes - 1, size=B)) % MESH.n_nodes
+    t = rng.integers(3, 20, size=B).astype(np.int64)
+
+    def run(interpret):
+        return fused_mod.fused_prepare(occ, srcs, dsts, t, mesh=MESH,
+                                       n_slots=N_SLOTS, kernel="pallas",
+                                       interpret=interpret)
+
+    interp = run(True)
+    comp = _compiled("slot_alloc/fused", lambda *, interpret: run(interpret))
+    for field in ("starts", "arr", "dists", "denied", "ok",
+                  "hop_n", "hop_p", "hop_s"):
+        np.testing.assert_array_equal(getattr(comp, field),
+                                      getattr(interp, field), err_msg=field)

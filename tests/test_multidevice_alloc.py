@@ -1,0 +1,168 @@
+"""The ``multidevice`` lane: allocator + cluster behavior on 8 faked XLA
+devices (``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+
+Deselected from tier-1 (see pytest.ini addopts) and run as its own
+``scripts/ci.sh`` stage with ``pytest -m multidevice``.  Each test
+re-execs a snippet through the ``multidevice_run`` conftest fixture —
+device count is fixed at process start, so in-process tests cannot fake
+it.  What the lane proves:
+
+* the fused prepare program is device-placement invariant: dispatching
+  the same wave on each of the 8 devices returns bit-identical outputs;
+* a *sharded* allocator run — the request batch split across per-device
+  programs — commits bit-identically to the single-device fused batch;
+* ``FabricCluster`` schedules same-stack + cross-stack traffic with its
+  per-stack allocators' device state spread over the faked devices, and
+  the backend-split telemetry survives the trip.
+"""
+import pytest
+
+pytestmark = pytest.mark.multidevice
+
+
+def test_fused_prepare_placement_invariant(multidevice_run):
+    out = multidevice_run("""
+import jax, numpy as np
+from repro.core.slot_alloc import CopyRequest, TdmAllocator
+from repro.core.topology import Mesh3D
+from repro.kernels.slot_alloc import fused
+assert jax.device_count() == 8, jax.devices()
+mesh = Mesh3D(8, 8, 4)
+rng = np.random.default_rng(0)
+warm = TdmAllocator(mesh, 16)
+for _ in range(48):
+    s, d = rng.integers(mesh.n_nodes, size=2)
+    if s != d:
+        warm.allocate(int(s), int(d), 512, cycle=0)
+occ = warm.table.busy_masks(0)
+B = 64
+srcs = rng.integers(mesh.n_nodes, size=B)
+dsts = (srcs + 1 + rng.integers(mesh.n_nodes - 1, size=B)) % mesh.n_nodes
+t = np.full(B, 3)
+outs = []
+for dev in jax.devices():
+    occ_d = jax.device_put(occ, dev)
+    fp = fused.fused_prepare(occ_d, srcs, dsts, t, mesh=mesh, n_slots=16)
+    outs.append(fp)
+ref = outs[0]
+for fp in outs[1:]:
+    np.testing.assert_array_equal(fp.starts, ref.starts)
+    np.testing.assert_array_equal(fp.denied, ref.denied)
+    np.testing.assert_array_equal(fp.hop_n, ref.hop_n)
+    np.testing.assert_array_equal(fp.hop_p, ref.hop_p)
+    np.testing.assert_array_equal(fp.hop_s, ref.hop_s)
+print("PLACEMENT_OK", len(outs))
+""")
+    assert "PLACEMENT_OK 8" in out
+
+
+def test_sharded_allocator_matches_single_device(multidevice_run):
+    """Split one wave's search across the 8 devices (each device runs the
+    fused program on its shard of the requests against the same
+    occupancy snapshot), reassemble, and check the per-row outputs are
+    bit-identical to the unsharded program — the device axis is a pure
+    throughput axis, invisible in the results."""
+    out = multidevice_run("""
+import jax, numpy as np
+from repro.core.slot_alloc import TdmAllocator
+from repro.core.topology import Mesh3D
+from repro.kernels.slot_alloc import fused
+assert jax.device_count() == 8
+mesh = Mesh3D(8, 8, 4)
+rng = np.random.default_rng(1)
+warm = TdmAllocator(mesh, 16)
+for _ in range(32):
+    s, d = rng.integers(mesh.n_nodes, size=2)
+    if s != d:
+        warm.allocate(int(s), int(d), 512, cycle=0)
+occ = warm.table.busy_masks(0)
+B = 64
+srcs = rng.integers(mesh.n_nodes, size=B)
+dsts = (srcs + 1 + rng.integers(mesh.n_nodes - 1, size=B)) % mesh.n_nodes
+t = np.full(B, 3)
+whole = fused.fused_prepare(occ, srcs, dsts, t, mesh=mesh, n_slots=16)
+shard = B // 8
+for i, dev in enumerate(jax.devices()):
+    sl = slice(i * shard, (i + 1) * shard)
+    part = fused.fused_prepare(jax.device_put(occ, dev), srcs[sl], dsts[sl],
+                               t[sl], mesh=mesh, n_slots=16)
+    np.testing.assert_array_equal(part.starts, whole.starts[sl])
+    np.testing.assert_array_equal(part.arr, whole.arr[sl])
+    np.testing.assert_array_equal(part.denied, whole.denied[sl])
+    np.testing.assert_array_equal(part.hop_n, whole.hop_n[sl])
+    np.testing.assert_array_equal(part.hop_s, whole.hop_s[sl])
+print("SHARDED_OK")
+""")
+    assert "SHARDED_OK" in out
+
+
+def test_fused_batch_matches_serial_on_8_devices(multidevice_run):
+    """The end-to-end differential property (fused batch == serial
+    stream) holds unchanged when jax exposes 8 devices."""
+    out = multidevice_run("""
+import jax, numpy as np
+from repro.core.slot_alloc import CopyRequest, TdmAllocator
+from repro.core.topology import Mesh3D
+assert jax.device_count() == 8
+mesh = Mesh3D(8, 8, 4)
+rng = np.random.default_rng(2)
+reqs = []
+for _ in range(128):
+    s, d = rng.integers(mesh.n_nodes, size=2)
+    while s == d:
+        d = rng.integers(mesh.n_nodes)
+    reqs.append(CopyRequest(int(s), int(d), 512))
+a_f = TdmAllocator(mesh, 16, backend="fused")
+a_s = TdmAllocator(mesh, 16)
+rf = a_f.allocate_batch(reqs, cycle=0)
+rs = [a_s.allocate(r.src, r.dst, r.nbytes, 0) for r in reqs]
+def key(c):
+    return None if c is None else (c.src, c.dst, c.start_cycle,
+                                   c.n_windows, tuple(c.hops), c.distance)
+assert all(key(f.circuit) == key(s.circuit) for f, s in zip(rf, rs))
+assert (a_f.table.expiry == a_s.table.expiry).all()
+assert a_f.last_report.fused_waves > 0
+print("DIFF_OK", a_f.last_report.fused_waves)
+""")
+    assert "DIFF_OK" in out
+
+
+def test_fabric_cluster_on_8_devices(multidevice_run):
+    """FabricCluster with per-stack allocators whose device occupancy is
+    pinned round-robin over the faked devices: same-stack and
+    cross-stack traffic schedules, and the fused/host wave telemetry
+    survives aggregation."""
+    out = multidevice_run("""
+import jax, numpy as np
+from repro.core.fabric import FabricCluster
+from repro.core.scheduler import TransferRequest
+from repro.core.slot_alloc import TdmAllocator
+from repro.core.topology import Mesh3D, make_topology
+assert jax.device_count() == 8
+mesh = Mesh3D(4, 4, 2)
+topo = make_topology(4, mesh)
+allocs = [TdmAllocator(m, 16, backend="auto") for m in topo.stacks]
+# Pin each stack's device-resident occupancy to its own fake device.
+for i, a in enumerate(allocs):
+    dev = jax.devices()[i % jax.device_count()]
+    masks = a.table.busy_masks(0)
+    a.table._dev = jax.device_put(masks.copy(), dev)
+    a.table._dev_version = a.table._ports.version
+cluster = FabricCluster(topology=topo, allocators=allocs)
+rng = np.random.default_rng(3)
+reqs = []
+for _ in range(96):
+    s = (int(rng.integers(4)), int(rng.integers(mesh.n_nodes)))
+    d = (int(rng.integers(4)), int(rng.integers(mesh.n_nodes)))
+    if s != d:
+        reqs.append(TransferRequest(src=s, dst=d, nbytes=256))
+results, rep = cluster.schedule(reqs)
+committed = sum(r.circuit is not None for r in results)
+tel = cluster.telemetry()
+assert committed > 0
+assert rep.n_cross_stack > 0
+assert tel["fused_waves"] + tel["host_waves"] >= 1
+assert len(tel["stacks"]) == 4
+print("CLUSTER_OK", committed, tel["fused_waves"], tel["host_waves"])
+""")
+    assert "CLUSTER_OK" in out
