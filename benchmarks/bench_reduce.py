@@ -1,0 +1,140 @@
+"""Compute-class reduce vs copy-then-compute on the paper mesh.
+
+The third transfer class moves the merge *into* the fabric: a fan-in
+circuit streams every operand to the destination bank's ALU in one
+circuit lifetime, so a k-way reduce costs about one transfer's worth of
+TDM windows.  The conventional path pays twice — all operands are first
+copied to a gather bank, the processor (or gather-bank ALU) sums them,
+and the result is copied out to its consumer — two dependent batches
+through the same fabric, ~2x the windows at any fan-in.
+
+Sweeps fan-in (2, 4, 8) x 4 KB pages over the paper's 8x8x4 mesh with
+the same slot policy on both sides (``max_extra_slots=0``: the fan-in
+streams one slot per source, so the copies get one slot too).  Also
+records one memsim ``gradAgg40`` run on the ``nom`` config so the
+destination-ALU element count and its pJ share land in the record.
+
+Writes ``BENCH_reduce.json`` (schema ``nom/bench-reduce/v1``);
+``scripts/ci.sh`` gates the schema and the dominance claim
+(``reduce_windows < baseline_windows`` at fan-in >= 4).
+"""
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core.fabric import NomFabric
+from repro.core.scheduler import TransferRequest, reduce_request
+from repro.core.topology import make_topology
+from repro.memsim.energy import energy_pj
+from repro.memsim.simulator import SimParams, simulate
+from repro.memsim.workloads import WorkloadSpec, generate
+
+RECORD_PATH = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_reduce.json"
+
+NBYTES = 4096          # one page per operand, as in the memsim workloads
+FANINS = (2, 4, 8)
+TRIALS = 4
+
+
+def _endpoints(rng, n_nodes: int, k: int):
+    """k distinct sources + destination + downstream consumer bank."""
+    banks = rng.choice(n_nodes, size=k + 2, replace=False)
+    return [int(b) for b in banks[:k]], int(banks[k]), int(banks[k + 1])
+
+
+def _fabric() -> NomFabric:
+    return NomFabric(mesh=make_topology(1))
+
+
+def _reduce_windows(srcs, dst) -> int | None:
+    """In-fabric fan-in: one circuit lifetime, merge at the dst ALU.
+    Returns None when the fan-in is unroutable at cycle 0 (wide fan-ins
+    on boundary destinations can exhaust the slot window — the caller
+    redraws endpoints and counts the denial)."""
+    fabric = _fabric()
+    _res, rep = fabric.schedule([reduce_request(srcs, dst, nbytes=NBYTES)])
+    assert rep.n_reduce == 1
+    return rep.n_windows if rep.n_scheduled == 1 else None
+
+
+def _baseline_windows(srcs, dst, consumer) -> int:
+    """Copy-then-compute: gather every operand at ``dst``, sum there,
+    copy the result out to ``consumer``.  The copy-out depends on the
+    gather, so the two batch spans add."""
+    fabric = _fabric()
+    _res, rep1 = fabric.schedule(
+        [TransferRequest(src=s, dst=dst, nbytes=NBYTES) for s in srcs])
+    assert rep1.n_scheduled == len(srcs)
+    _res, rep2 = fabric.schedule(
+        [TransferRequest(src=dst, dst=consumer, nbytes=NBYTES)])
+    assert rep2.n_scheduled == 1
+    return rep1.n_windows + rep2.n_windows
+
+
+def _memsim_record() -> dict:
+    reqs = generate(WorkloadSpec("gradAgg40", n_requests=400))
+    res = simulate(reqs, SimParams(config="nom"), name="gradAgg40")
+    energy = energy_pj(res)
+    return {
+        "workload": "gradAgg40",
+        "n_requests": 400,
+        "nom_reduce_elems": res.extra.get("nom_reduce_elems", 0),
+        "nom_reduce_stalls": res.extra.get("nom_reduce_stalls", 0),
+        "reduce_alu_pj": round(energy["reduce_alu"], 2),
+        "total_pj": round(energy["total"], 2),
+    }
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(11)
+    mesh = make_topology(1)
+    record = {
+        "schema": "nom/bench-reduce/v1",
+        "mesh": [mesh.X, mesh.Y, mesh.Z],
+        "nbytes": NBYTES,
+        "trials": TRIALS,
+        "fanin": {},
+        "memsim": {},
+    }
+    for k in FANINS:
+        red = base = denied = 0
+        t0 = time.perf_counter()
+        for _ in range(TRIALS):
+            for _attempt in range(16):
+                srcs, dst, consumer = _endpoints(rng, mesh.n_nodes, k)
+                w = _reduce_windows(srcs, dst)
+                if w is not None:
+                    break
+                denied += 1
+            else:
+                raise RuntimeError(f"fan-in {k} unroutable 16x in a row")
+            red += w
+            base += _baseline_windows(srcs, dst, consumer)
+        us = (time.perf_counter() - t0) * 1e6 / TRIALS
+        speedup = base / red if red else 0.0
+        record["fanin"][str(k)] = {
+            "fanin": k,
+            "reduce_windows": red,
+            "baseline_windows": base,
+            "denied_draws": denied,
+            "speedup": round(speedup, 4),
+        }
+        rows.append((f"reduce_fanin{k}", us,
+                     f"red_w={red};base_w={base};x={speedup:.2f}"))
+    t0 = time.perf_counter()
+    record["memsim"] = _memsim_record()
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(("reduce_memsim_gradAgg40", us,
+                 f"elems={record['memsim']['nom_reduce_elems']}"
+                 f";alu_pj={record['memsim']['reduce_alu_pj']}"))
+    RECORD_PATH.write_text(json.dumps(record, indent=1, sort_keys=True))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

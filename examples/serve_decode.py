@@ -9,6 +9,7 @@ import jax
 from repro.launch.mesh import make_mesh, set_ambient_mesh
 
 from repro.configs import ARCHS, get_config
+from repro.core import nom_allreduce_banks, nom_reduce
 from repro.models import make_model
 from repro.serving import Engine
 
@@ -76,6 +77,20 @@ def main():
           f"(engine fabric session: {eng.fabric.n_flushes} flushes)")
     print(f"  eviction/INIT: {tel['init_requests']}/{tel['requests']} "
           f"requests (ring wraps past {args.ring_slots} slots + teardown)")
+
+    # Compute-class demo on the same session: a gradient-accumulation
+    # style fan-in (4 operand banks merge at bank 0's ALU) plus a small
+    # bank-level all-reduce — both land in the fabric's reduce telemetry.
+    _res, rrep = nom_reduce(eng.fabric, srcs=[1, 2, 3, 4], dst=0,
+                            nbytes=256)
+    _res2, arep = nom_allreduce_banks(eng.fabric, banks=[0, 5, 10],
+                                      nbytes=768)
+    ftel = eng.fabric.telemetry()
+    print(f"  reduce: {ftel['reduce_requests']} fan-ins "
+          f"(demo fan-in {rrep.n_windows} windows; all-reduce over 3 "
+          f"banks {arep.n_reduce} scatter fan-ins)")
+    print(f"  auto-tuned slot widening: "
+          f"nom_extra_slots={ftel['nom_extra_slots']}")
 
 
 if __name__ == "__main__":

@@ -37,6 +37,14 @@ PATTERNS = (
     ("bare Mesh3D/StackedTopology construction",
      re.compile(r"\b(?:Mesh3D|StackedTopology)\s*\("),
      ("benchmarks/",), "construct topologies via repro.core.make_topology"),
+    # Compute-class fan-ins are validated by reduce_request (distinct
+    # sources, dst not among them) — raw op="reduce" construction skips
+    # that.  memsim's simulator is the one translator allowed to lower
+    # its Op.REDUCE requests onto allocator-level CopyRequests itself.
+    ("raw multi-source reduce construction",
+     re.compile(r"op\s*=\s*[\"']reduce[\"']"),
+     ("src/repro/memsim/simulator.py",),
+     "build fan-ins via repro.core.reduce_request / nom_reduce"),
 )
 
 

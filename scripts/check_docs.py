@@ -65,6 +65,7 @@ def check_serving_api_documented() -> None:
                 fail(f"{mod.__name__}.{name} is public but mentioned in "
                      f"no doc page ({', '.join(DOC_PAGES)})")
     check_compiled_pipeline_documented(corpus)
+    check_reduce_documented(corpus)
 
 
 def check_compiled_pipeline_documented(corpus: str) -> None:
@@ -81,6 +82,20 @@ def check_compiled_pipeline_documented(corpus: str) -> None:
         if not re.search(rf"\b{re.escape(name)}\b", corpus):
             fail(f"compiled-pipeline name {name} is mentioned in no doc "
                  f"page ({', '.join(DOC_PAGES)})")
+
+
+def check_reduce_documented(corpus: str) -> None:
+    """The compute-class reduce surface (PR 9): the planners, the
+    request constructor, the report/telemetry counters and the energy
+    knob must each appear in a doc page."""
+    names = ["plan_combine", "nom_allreduce", "nom_reduce",
+             "nom_allreduce_banks", "reduce_request", "ReduceTree",
+             "n_reduce", "e_reduce_elem", "reduce_dwell",
+             "nom_reduce_elems", "nom_extra_slots"]
+    for name in names:
+        if not re.search(rf"\b{re.escape(name)}\b", corpus):
+            fail(f"compute-class reduce name {name} is mentioned in no "
+                 f"doc page ({', '.join(DOC_PAGES)})")
 
 
 def main() -> None:

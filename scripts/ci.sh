@@ -20,7 +20,8 @@ python -m pytest -q -m multidevice tests/test_multidevice_alloc.py
 
 echo "== smoke: benchmarks (quick subset) =="
 # the gates below must see THIS run's records
-rm -f BENCH_alloc.json BENCH_multistack.json BENCH_serving.json
+rm -f BENCH_alloc.json BENCH_multistack.json BENCH_serving.json \
+      BENCH_reduce.json
 python benchmarks/run.py --quick
 
 echo "== perf record: BENCH_alloc.json =="
@@ -135,4 +136,41 @@ print(f"BENCH_serving.json OK: {len(mixes)} mixes x "
       f"{len(strategies)} strategies, dominance on {dom['mix']}: "
       f"deadline={dom['deadline_miss_rate']:.3f} < "
       f"fifo={dom['fifo_miss_rate']:.3f}")
+EOF
+
+echo "== perf record: BENCH_reduce.json =="
+python - <<'EOF'
+import json, pathlib, sys
+path = pathlib.Path("BENCH_reduce.json")
+if not path.is_file():
+    sys.exit("BENCH_reduce.json missing: benchmarks/run.py --quick "
+             "must write it")
+rec = json.loads(path.read_text())
+if rec.get("schema") != "nom/bench-reduce/v1":
+    sys.exit(f"BENCH_reduce.json schema {rec.get('schema')!r}: expected "
+             "nom/bench-reduce/v1")
+required = ("schema", "mesh", "nbytes", "trials", "fanin", "memsim")
+missing = [k for k in required if k not in rec]
+if missing:
+    sys.exit(f"BENCH_reduce.json missing keys: {missing}")
+for k, entry in rec["fanin"].items():
+    for key in ("fanin", "reduce_windows", "baseline_windows", "speedup"):
+        if key not in entry:
+            sys.exit(f"BENCH_reduce.json fanin[{k}] missing {key}")
+    # Dominance: the in-fabric fan-in must beat copy-then-compute (fewer
+    # total TDM windows) at every measured fan-in >= 4 on the paper mesh.
+    if entry["fanin"] >= 4 and \
+            entry["reduce_windows"] >= entry["baseline_windows"]:
+        sys.exit(f"BENCH_reduce.json: in-fabric reduce lost to "
+                 f"copy-then-compute at fan-in {k} "
+                 f"({entry['reduce_windows']} >= "
+                 f"{entry['baseline_windows']} windows)")
+if not any(e["fanin"] >= 4 for e in rec["fanin"].values()):
+    sys.exit("BENCH_reduce.json: no fan-in >= 4 measured")
+if rec["memsim"].get("nom_reduce_elems", 0) <= 0:
+    sys.exit("BENCH_reduce.json: memsim record merged no elements at the "
+             "destination ALU (nom_reduce_elems=0)")
+dom = {k: round(e["speedup"], 2) for k, e in sorted(rec["fanin"].items())}
+print(f"BENCH_reduce.json OK: windows speedup per fan-in {dom}, "
+      f"memsim elems={rec['memsim']['nom_reduce_elems']}")
 EOF

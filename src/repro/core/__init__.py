@@ -3,13 +3,15 @@
 # ppermute collectives + bulk-transfer planner).
 from .bitvec import bit_is_free, free_slots, full_mask, rotr, rotr_np
 from .fabric import (AdmissionQueue, FabricCluster, FabricOverflow,
-                     NomFabric, PolicyContext, get_policy, register_policy,
-                     registered_policies, unregister_policy)
+                     NomFabric, PolicyContext, ReduceTree, get_policy,
+                     register_policy, registered_policies, unregister_policy)
 from .nom_collectives import (Transfer, TransferPlan, a2a_link_chunks,
-                              nom_all_gather, nom_all_to_all,
+                              nom_all_gather, nom_all_to_all, nom_allreduce,
+                              nom_allreduce_banks, nom_reduce,
                               nom_reduce_scatter, plan_transfers,
                               ring_offsets)
-from .scheduler import ScheduleReport, TransferRequest, schedule_transfers
+from .scheduler import (ScheduleReport, TransferRequest, reduce_request,
+                        schedule_transfers)
 from .slot_alloc import (AllocResult, BatchReport, Circuit, CopyRequest,
                          SegmentedAllocator, SlotTable, StackedCircuit,
                          TdmAllocator, TdmAllocatorLight, traceback,
@@ -19,15 +21,17 @@ from .topology import (PAPER_MESH, Mesh3D, N_PORTS, PORT_LOCAL, StackLink,
 
 __all__ = [
     "AdmissionQueue", "FabricCluster", "FabricOverflow", "NomFabric",
-    "PolicyContext",
+    "PolicyContext", "ReduceTree",
     "get_policy", "register_policy", "registered_policies",
     "unregister_policy",
     "bit_is_free", "free_slots", "full_mask", "rotr", "rotr_np",
     "Transfer", "TransferPlan", "a2a_link_chunks", "nom_all_gather",
-    "nom_all_to_all", "nom_reduce_scatter", "plan_transfers", "ring_offsets",
+    "nom_all_to_all", "nom_allreduce", "nom_allreduce_banks", "nom_reduce",
+    "nom_reduce_scatter", "plan_transfers", "ring_offsets",
     "AllocResult", "BatchReport", "Circuit", "CopyRequest", "ScheduleReport",
     "SegmentedAllocator", "SlotTable", "StackedCircuit", "TdmAllocator",
-    "TdmAllocatorLight", "TransferRequest", "schedule_transfers",
+    "TdmAllocatorLight", "TransferRequest", "reduce_request",
+    "schedule_transfers",
     "traceback", "wavefront_search", "wavefront_search_batch", "PAPER_MESH",
     "Mesh3D", "N_PORTS", "PORT_LOCAL", "StackLink", "StackedTopology",
     "make_topology", "port_for",

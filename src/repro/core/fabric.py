@@ -42,8 +42,8 @@ import numpy as np
 from .nom_collectives import _dor_path, plan_transfers
 from .scheduler import (ScheduleReport, TransferRequest, _as_copy_requests,
                         _as_transfers, _tdm_report)
-from .slot_alloc import (AllocResult, CopyRequest, SegmentedAllocator,
-                         TdmAllocator)
+from .slot_alloc import (AllocResult, Circuit, CopyRequest,
+                         SegmentedAllocator, TdmAllocator)
 from .topology import Mesh3D, StackedTopology
 
 
@@ -62,22 +62,35 @@ class PolicyContext:
     Attributes:
       backend: ``"tdm"`` or ``"rounds"``.
       distances: per-request route length in hops — Manhattan distance on
-        the bank mesh (0 for an in-place INIT), DOR path length on the
-        device mesh — the quantity ``longest_first`` sorts by.  Computed
-        on first access, so distance-blind policies (``"arrival"``) pay
-        nothing for it.
+        the bank mesh (0 for an in-place INIT, the farthest source for a
+        fan-in reduce), DOR path length on the device mesh — the quantity
+        ``longest_first`` sorts by.  Computed on first access, so
+        distance-blind policies (``"arrival"``) pay nothing for it.
+      fanin: per-request fan-in width — ``len(srcs)`` for compute-class
+        ``op="reduce"`` requests, 1 for copies/inits — so packing
+        policies can weigh how many destination-port slots a request
+        will pin.  Lazy like ``distances``.
     """
 
-    def __init__(self, backend: str, distance_fn):
+    def __init__(self, backend: str, distance_fn, fanin_fn=None):
         self.backend = backend
         self._distance_fn = distance_fn
         self._distances: tuple[int, ...] | None = None
+        self._fanin_fn = fanin_fn
+        self._fanin: tuple[int, ...] | None = None
 
     @property
     def distances(self) -> tuple[int, ...]:
         if self._distances is None:
             self._distances = tuple(self._distance_fn())
         return self._distances
+
+    @property
+    def fanin(self) -> tuple[int, ...]:
+        if self._fanin is None:
+            self._fanin = (tuple(self._fanin_fn())
+                           if self._fanin_fn is not None else ())
+        return self._fanin
 
 
 _POLICIES: dict[str, object] = {}
@@ -150,6 +163,20 @@ def _is_init(payload) -> bool:
     enum (matched by name so core never imports memsim)."""
     op = getattr(payload, "op", "copy")
     return op == "init" or getattr(op, "name", "") == "INIT"
+
+
+def _is_reduce(payload) -> bool:
+    """Compute-class detection across both request vocabularies (the
+    scheduler's ``op="reduce"`` and the simulator's ``Op.REDUCE``)."""
+    op = getattr(payload, "op", "copy")
+    return op == "reduce" or getattr(op, "name", "") == "REDUCE"
+
+
+def _reduce_srcs(payload) -> tuple:
+    """The fan-in source tuple of a reduce-class request (empty for
+    copies/inits; memsim requests carry it as ``src_banks``)."""
+    srcs = getattr(payload, "srcs", ()) or getattr(payload, "src_banks", ())
+    return tuple(srcs)
 
 
 @dataclasses.dataclass
@@ -310,6 +337,10 @@ class NomFabric:
         self._exploit_flushes = 0
         self._last_full_stalls = 0
         self._calm_flushes = 0         # consecutive quiet, under-filled drains
+        # auto-learned per-window slot budget for copies (0 = paper default
+        # of one slot/window); grown under sustained conflict-free stalls,
+        # shrunk when the wider reservations start colliding.
+        self._nom_extra_slots = 0
 
     # -- introspection -------------------------------------------------------
     @property
@@ -332,13 +363,21 @@ class NomFabric:
     # -- policy application --------------------------------------------------
     def _distances(self, reqs) -> tuple[int, ...]:
         if self.backend == "tdm":
-            return tuple(0 if _is_init(r) else
-                         self.mesh.manhattan(r.src, r.dst) for r in reqs)
+            return tuple(
+                0 if _is_init(r) else
+                max(self.mesh.manhattan(int(s), r.dst)
+                    for s in _reduce_srcs(r)) if _is_reduce(r) else
+                self.mesh.manhattan(r.src, r.dst) for r in reqs)
         return tuple(len(_dor_path(t.src, t.dst, self.shape, self.torus))
                      for t in reqs)
 
+    def _fanins(self, reqs) -> tuple[int, ...]:
+        return tuple(max(1, len(_reduce_srcs(r))) if _is_reduce(r) else 1
+                     for r in reqs)
+
     def _order(self, reqs, policy: str) -> list[int]:
-        ctx = PolicyContext(self.backend, lambda: self._distances(reqs))
+        ctx = PolicyContext(self.backend, lambda: self._distances(reqs),
+                            lambda: self._fanins(reqs))
         order = list(get_policy(policy)(reqs, ctx))
         if sorted(order) != list(range(len(reqs))):
             raise ValueError(f"policy {policy!r} returned an invalid "
@@ -368,6 +407,24 @@ class NomFabric:
         for t in transfers:
             if _is_init(t) and t.src != t.dst:
                 raise ValueError(f"init requires src == dst, got {t!r}")
+            if _is_reduce(t):
+                if self.backend != "tdm":
+                    raise ValueError(
+                        "compute-class reduce is a bank-level op (fan-in "
+                        "circuits need the tdm slot tables); on the rounds "
+                        "backend use the device collectives "
+                        "(nom_allreduce) instead")
+                srcs = _reduce_srcs(t)
+                if not srcs:
+                    raise ValueError(f"reduce requires fan-in sources "
+                                     f"(srcs), got {t!r}")
+                if len(set(srcs)) != len(srcs):
+                    raise ValueError(f"reduce sources must be distinct, "
+                                     f"got {t!r}")
+                if t.dst in srcs:
+                    raise ValueError(f"reduce destination {t.dst} is "
+                                     f"already a source in {t!r} (resident "
+                                     "operands need no transfer)")
         chosen = policy or self.effective_policy
         if self.policy == "auto" and policy is None:
             chosen = self._auto_pick()
@@ -381,6 +438,14 @@ class NomFabric:
 
     def _schedule_tdm(self, transfers, cycle, policy):
         reqs = _as_copy_requests(transfers)
+        if self.policy == "auto" and self._nom_extra_slots:
+            # Learned widening: let plain copies claim up to the tuned
+            # extra slots per window.  Requests that pin their own budget
+            # (max_extra_slots != 0) and non-copy classes keep it.
+            reqs = [dataclasses.replace(r,
+                                        max_extra_slots=self._nom_extra_slots)
+                    if r.op == "copy" and not r.max_extra_slots else r
+                    for r in reqs]
         anchor = self.clock if cycle is None else cycle
         order = self._order(reqs, policy)
         permuted = [reqs[i] for i in order]
@@ -496,11 +561,13 @@ class NomFabric:
 
     def telemetry(self) -> dict:
         """Cumulative session stats: scheduling (``flushes``,
-        ``requests``/``scheduled``, ``init_requests``, concurrency,
+        ``requests``/``scheduled``, ``init_requests`` /
+        ``reduce_requests`` op-class counters, concurrency,
         ``stall_cycles``, search/conflict counters incl.
         ``searched_requests``, and the allocator-backend split
         ``fused_waves`` / ``host_waves``), the live knobs
-        (``policy``, ``queue_depth``), and admission health
+        (``policy``, ``queue_depth``, the learned ``nom_extra_slots``
+        copy-widening budget), and admission health
         (``pending``, ``shed``, ``full_stalls``,
         ``queue_stall_cycles``, ``policy_switches``, and the queue's
         service-latency record ``queue_admitted`` /
@@ -513,6 +580,7 @@ class NomFabric:
             "requests": 0 if agg is None else agg.n_requests,
             "scheduled": 0 if agg is None else agg.n_scheduled,
             "init_requests": 0 if agg is None else agg.n_init,
+            "reduce_requests": 0 if agg is None else agg.n_reduce,
             "max_inflight": 0 if agg is None else agg.max_inflight,
             "avg_inflight": 0.0 if agg is None else agg.avg_inflight,
             "stall_cycles": 0 if agg is None else agg.stall_cycles,
@@ -523,6 +591,7 @@ class NomFabric:
             "host_waves": 0 if agg is None else agg.host_waves,
             "policy": self.effective_policy,
             "queue_depth": self.queue.depth,
+            "nom_extra_slots": self._nom_extra_slots,
             "pending": self.pending,
             "shed": self.queue.n_shed,
             "full_stalls": self.queue.full_stalls,
@@ -569,6 +638,25 @@ class NomFabric:
                 self._auto_stats = {n: [0.0, 0]
                                     for n in self.auto_candidates}
         self._auto_queue_depth(report)
+        self._auto_extra_slots(report)
+
+    def _auto_extra_slots(self, report: ScheduleReport) -> None:
+        """Conflict feedback on the per-window slot budget: heavy stalls
+        with a clean conflict record mean circuits queue behind window
+        capacity — widen copies by one extra slot (up to half the TDM
+        frame); once the wider reservations start colliding in the
+        batched commit (conflict rate over a quarter of the scheduled
+        requests), back off.  Deterministic, like the rest of the tuner;
+        the live value shows in ``telemetry()["nom_extra_slots"]``."""
+        if self.backend != "tdm" or not report.n_requests:
+            return
+        conflict_rate = report.conflicts / max(1, report.n_scheduled)
+        stall_per_req = report.stall_cycles / report.n_requests
+        if conflict_rate > 0.25 and self._nom_extra_slots:
+            self._nom_extra_slots -= 1
+        elif stall_per_req > self.n_slots and conflict_rate <= 0.05:
+            self._nom_extra_slots = min(self._nom_extra_slots + 1,
+                                        max(0, self.n_slots // 2 - 1))
 
     def _auto_queue_depth(self, report: ScheduleReport) -> None:
         """Stall feedback on the admission buffer: overflow blocking (or
@@ -597,6 +685,55 @@ class NomFabric:
 # ---------------------------------------------------------------------------
 # Multi-stack: one CCU authority per stack + cross-stack negotiation
 # ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ReduceTree:
+    """A committed cross-stack compute-class reduce.
+
+    Three kinds of reserved components stream as one logical operation:
+    ``partials`` — per-remote-stack fan-in :class:`~repro.core.slot_alloc.
+    Circuit`\\ s merging that stack's operands at its bridge bank;
+    ``legs`` — one :class:`~repro.core.slot_alloc.StackedCircuit` SerDes
+    delivery per remote stack, bridge to destination, anchored at the
+    partial's drain (store-and-forward at the bridge's logic-die buffer);
+    ``local`` — the destination stack's own fan-in, when it holds
+    operands.  Remote partials merge at the destination without extra
+    ALU dwell (the SerDes inter-arrival gap already exceeds the merge
+    latency — a documented simplification vs the same-stack dwell
+    model).  Cycles span the earliest component injection to the last
+    component's final beat."""
+    dst: tuple[int, int]      # (stack, local node)
+    srcs: tuple               # (stack, node) operand endpoints, source order
+    start_cycle: int
+    arrival_cycle: int        # first beat of the last-arriving component
+    end_cycle: int            # last beat landed (reservations drained)
+    n_windows: int            # window span of the whole tree
+    distance: int             # arrival_cycle - start_cycle
+    partials: list            # remote-stack bridge fan-in Circuits
+    legs: list                # StackedCircuits bridge -> destination
+    local: object | None = None   # destination-stack fan-in Circuit
+    slots_per_window: int = 1
+    _n_slots_hint: int = 16
+
+    @property
+    def cross_stack(self) -> bool:
+        return True
+
+    @property
+    def hops(self) -> list[tuple[int, int, int]]:
+        """Mesh hops of every component (node ids are stack-local);
+        SerDes hops are in :attr:`link_slots`."""
+        out = []
+        for c in (*self.partials, *self.legs,
+                  *((self.local,) if self.local is not None else ())):
+            out.extend(c.hops)
+        return out
+
+    @property
+    def link_slots(self) -> list[tuple[int, int]]:
+        """(channel, slot) SerDes reservations across all legs."""
+        return [ls for leg in self.legs for ls in leg.link_slots]
+
+
 @dataclasses.dataclass
 class FabricCluster:
     """Multi-authority NoM over a :class:`StackedTopology`.
@@ -656,6 +793,8 @@ class FabricCluster:
         self.n_flushes = 0
         self.cross_requests = 0
         self.cross_committed = 0
+        self.cross_reduce_trees = 0    # committed cross-stack reduce trees
+        self.reduce_rollbacks = 0      # trees aborted (state restored)
 
     # -- introspection -------------------------------------------------------
     @property
@@ -687,25 +826,50 @@ class FabricCluster:
         return self.topology.locate(int(v))
 
     def _split(self, transfers):
-        """Partition a batch: same-stack requests (localized, grouped per
-        stack) vs cross-stack ones (kept with their endpoints)."""
+        """Partition a batch three ways: same-stack requests (localized,
+        grouped per stack), cross-stack copies (kept with their
+        endpoints), and cross-stack reduces (kept with every operand
+        endpoint — they become reduce trees)."""
         groups: dict[int, list] = {}
         cross: list = []
+        cross_red: list = []
         for pos, t in enumerate(transfers):
-            if isinstance(t, TransferRequest):
-                se = self._endpoint(t.src, t.src_stack)
-                de = self._endpoint(t.dst, t.dst_stack)
-            elif isinstance(t, CopyRequest):
-                se = self._endpoint(t.src, None)
-                de = self._endpoint(t.dst, None)
-            else:
+            if not isinstance(t, (TransferRequest, CopyRequest)):
                 t = CopyRequest(*t)
-                se = self._endpoint(t.src, None)
-                de = self._endpoint(t.dst, None)
+            is_tr = isinstance(t, TransferRequest)
+            if _is_reduce(t):
+                srcs = _reduce_srcs(t)
+                if not srcs:
+                    raise ValueError(f"reduce requires fan-in sources "
+                                     f"(srcs), got {t!r}")
+                s_stack = t.src_stack if is_tr else None
+                eps = [self._endpoint(s, s_stack) for s in srcs]
+                de = self._endpoint(t.dst, t.dst_stack if is_tr else None)
+                if len(set(eps)) != len(eps):
+                    raise ValueError(f"reduce sources must be distinct, "
+                                     f"got {t!r}")
+                if de in eps:
+                    raise ValueError(f"reduce destination {de} is already "
+                                     f"a source in {t!r}")
+                if all(st == de[0] for st, _n in eps):
+                    locs = tuple(n for _st, n in eps)
+                    if is_tr:
+                        local = dataclasses.replace(
+                            t, src=locs[0], dst=de[1], srcs=locs,
+                            src_stack=None, dst_stack=None)
+                    else:
+                        local = dataclasses.replace(t, src=locs[0],
+                                                    dst=de[1], srcs=locs)
+                    groups.setdefault(de[0], []).append((pos, local))
+                else:
+                    cross_red.append((pos, t, eps, de))
+                continue
+            se = self._endpoint(t.src, t.src_stack if is_tr else None)
+            de = self._endpoint(t.dst, t.dst_stack if is_tr else None)
             if _is_init(t) and se != de:
                 raise ValueError(f"init requires src == dst, got {t!r}")
             if se[0] == de[0]:
-                if isinstance(t, TransferRequest):
+                if is_tr:
                     local = dataclasses.replace(t, src=se[1], dst=de[1],
                                                 src_stack=None,
                                                 dst_stack=None)
@@ -714,7 +878,7 @@ class FabricCluster:
                 groups.setdefault(se[0], []).append((pos, local))
             else:
                 cross.append((pos, t, se, de))
-        return groups, cross
+        return groups, cross, cross_red
 
     # -- the synchronous batch path ------------------------------------------
     def schedule(self, transfers, cycle: int | None = None,
@@ -731,7 +895,7 @@ class FabricCluster:
         cross-stack share in ``n_cross_stack``.
         """
         transfers = list(transfers)
-        groups, cross = self._split(transfers)
+        groups, cross, cross_red = self._split(transfers)
         results: list = [None] * len(transfers)
         reports = []
         for stack in sorted(groups):
@@ -763,8 +927,31 @@ class FabricCluster:
                 for s in (se[0], de[0]):
                     fab = self.fabrics[s]
                     fab.clock = max(fab.clock, nxt)
-        if cross:
-            reports.append(self._cross_report(len(cross), circuits, stalls))
+        for pos, t, eps, de in cross_red:
+            self.cross_requests += 1
+            involved = sorted({de[0], *(s for s, _n in eps)})
+            anchor = (cycle if cycle is not None
+                      else max(self.fabrics[s].clock for s in involved))
+            rq_cycle = getattr(t, "cycle", None)
+            if rq_cycle is not None:
+                anchor = max(anchor, rq_cycle)
+            tree = self._reduce_tree(t, eps, de, anchor)
+            results[pos] = AllocResult(circuit=tree, searched_cycle=anchor)
+            if tree is None:
+                continue
+            self.cross_committed += 1
+            self.cross_reduce_trees += 1
+            circuits.append(tree)
+            stalls += max(0, tree.start_cycle - (anchor + 3))
+            if cycle is None:
+                nxt = ((tree.end_cycle // self.n_slots) + 1) * self.n_slots
+                for s in involved:
+                    fab = self.fabrics[s]
+                    fab.clock = max(fab.clock, nxt)
+        if cross or cross_red:
+            reports.append(self._cross_report(
+                len(cross) + len(cross_red), circuits, stalls,
+                n_reduce=len(cross_red)))
         if not reports:
             reports = [ScheduleReport(backend="tdm", n_requests=0,
                                       n_scheduled=0, n_windows=0,
@@ -776,7 +963,7 @@ class FabricCluster:
             self.last_cycle = (cycle if cycle is not None else
                                min(self.fabrics[s].last_cycle
                                    for s in groups))
-        elif cross:
+        elif cross or cross_red:
             self.last_cycle = min(r.searched_cycle
                                   for r in results if r is not None)
         self.clock = max([self.clock] + [f.clock for f in self.fabrics])
@@ -785,7 +972,8 @@ class FabricCluster:
                        else self.report.merge(report))
         return results, report
 
-    def _cross_report(self, n_cross: int, circuits, stalls) -> ScheduleReport:
+    def _cross_report(self, n_cross: int, circuits, stalls,
+                      n_reduce: int = 0) -> ScheduleReport:
         n = self.n_slots
         starts = [c.start_cycle // n for c in circuits]
         w0 = min(starts, default=0)
@@ -800,7 +988,102 @@ class FabricCluster:
             n_windows=int(span),
             max_inflight=int(busy.max()) if busy.size else 0,
             avg_inflight=float(busy.mean()) if busy.size else 0.0,
-            stall_cycles=stalls, n_cross_stack=n_cross)
+            stall_cycles=stalls, n_cross_stack=n_cross, n_reduce=n_reduce)
+
+    # -- cross-stack reduce trees --------------------------------------------
+    def _tree_snapshot(self):
+        """Every expiry table a reduce tree may touch (per-stack ports +
+        SerDes links), copied — the all-or-nothing restore point."""
+        tables = [f.allocator.table._ports for f in self.fabrics]
+        tables.append(self.segmented.links)
+        return ([(pe, pe.expiry.copy()) for pe in tables],
+                self.segmented.link_windows)
+
+    def _tree_restore(self, snap) -> None:
+        saved, link_windows = snap
+        for pe, exp in saved:
+            if not np.array_equal(pe.expiry, exp):
+                pe.expiry[...] = exp
+                pe._recompute(pe.window)
+        self.segmented.link_windows = link_windows
+
+    def _commit_local_reduce(self, stack: int, srcs, dst: int, nbytes: int,
+                             cycle: int):
+        """Reserve one same-stack fan-in (a reduce-tree component)
+        directly against the stack's slot table.  Returns the Circuit or
+        None when infeasible; the caller owns tree-level rollback."""
+        alloc = self.fabrics[stack].allocator
+        n = alloc.n_slots
+        t_ready = cycle + 3
+        window = t_ready // n
+        occ = alloc.table._ports.masks_at(window)
+        st = alloc._prepare_reduce(
+            CopyRequest(src=srcs[0], dst=dst, nbytes=max(1, nbytes),
+                        op="reduce", srcs=tuple(srcs)),
+            t_ready, occ, window)
+        if st.denied:
+            return None
+        alloc.table._ports.reserve_arrays(st.idx, st.w_res + st.n_win)
+        return Circuit(src=st.src, dst=st.dst, start_cycle=st.start_cycle,
+                       n_windows=st.n_win, hops=st.hops,
+                       distance=st.distance, _n_slots_hint=n, srcs=st.srcs)
+
+    def _reduce_tree(self, t, eps, de, anchor: int) -> ReduceTree | None:
+        """Commit one cross-stack reduce as a tree, all-or-nothing.
+
+        Per remote stack: fan-in partial reduction at the bridge bank
+        (bridge-resident operands merge for free), then one SerDes leg
+        delivering the partial to the destination, anchored at the
+        partial's drain (store-and-forward in the bridge's logic-die
+        buffer).  Destination-stack operands fan in locally at the
+        anchor.  Any infeasible component restores every expiry table
+        byte-identically — the :class:`SegmentedAllocator` two-phase
+        discipline widened to the whole tree."""
+        ds, d_loc = de
+        by_stack: dict[int, list[int]] = {}
+        for st_, node in eps:
+            by_stack.setdefault(st_, []).append(node)
+        local_srcs = by_stack.pop(ds, [])
+        snap = self._tree_snapshot()
+        partials, legs = [], []
+        ok = True
+        for st_ in sorted(by_stack):
+            bridge = self.topology.bridge_of(st_)
+            fan = [nd for nd in by_stack[st_] if nd != bridge]
+            leg_anchor = anchor
+            if fan:
+                part = self._commit_local_reduce(st_, fan, bridge,
+                                                 t.nbytes, anchor)
+                if part is None:
+                    ok = False
+                    break
+                partials.append(part)
+                leg_anchor = part.end_cycle
+            leg = self.segmented.allocate((st_, bridge), (ds, d_loc),
+                                          max(1, t.nbytes), leg_anchor)
+            if leg is None:
+                ok = False
+                break
+            legs.append(leg)
+        local = None
+        if ok and local_srcs:
+            local = self._commit_local_reduce(ds, local_srcs, d_loc,
+                                              t.nbytes, anchor)
+            ok = local is not None
+        if not ok:
+            self._tree_restore(snap)
+            self.reduce_rollbacks += 1
+            return None
+        comps = partials + legs + ([local] if local is not None else [])
+        start = min(c.start_cycle for c in comps)
+        arrival = max(c.arrival_cycle for c in comps)
+        end = max(c.end_cycle for c in comps)
+        return ReduceTree(dst=de, srcs=tuple(eps), start_cycle=start,
+                          arrival_cycle=arrival, end_cycle=end,
+                          n_windows=(end - start) // self.n_slots + 1,
+                          distance=arrival - start, partials=partials,
+                          legs=legs, local=local,
+                          _n_slots_hint=self.n_slots)
 
     # -- the admission-queue path --------------------------------------------
     def submit(self, request, at: int | None = None) -> bool:
@@ -818,8 +1101,9 @@ class FabricCluster:
         """Cluster-wide stats: the merged scheduling counters, the
         cross-stack protocol counters (``cross_requests`` /
         ``cross_committed`` / ``cross_denied`` / ``cross_rollbacks``,
-        SerDes ``link_windows``), and each stack's own fabric telemetry
-        under ``"stacks"``."""
+        the reduce-tree counters ``cross_reduce_trees`` /
+        ``reduce_rollbacks``, SerDes ``link_windows``), and each
+        stack's own fabric telemetry under ``"stacks"``."""
         agg = self.report
         return {
             "backend": self.backend,
@@ -828,6 +1112,7 @@ class FabricCluster:
             "requests": 0 if agg is None else agg.n_requests,
             "scheduled": 0 if agg is None else agg.n_scheduled,
             "init_requests": 0 if agg is None else agg.n_init,
+            "reduce_requests": 0 if agg is None else agg.n_reduce,
             "max_inflight": 0 if agg is None else agg.max_inflight,
             "avg_inflight": 0.0 if agg is None else agg.avg_inflight,
             "stall_cycles": 0 if agg is None else agg.stall_cycles,
@@ -837,6 +1122,8 @@ class FabricCluster:
             "cross_committed": self.cross_committed,
             "cross_denied": self.segmented.denied,
             "cross_rollbacks": self.segmented.rollbacks,
+            "cross_reduce_trees": self.cross_reduce_trees,
+            "reduce_rollbacks": self.reduce_rollbacks,
             "link_windows": self.segmented.link_windows,
             "policy": self.effective_policy,
             "queue_depth": self.queue.depth,
@@ -853,5 +1140,5 @@ class FabricCluster:
 
 
 __all__ = ["AdmissionQueue", "FabricCluster", "FabricOverflow", "NomFabric",
-           "PolicyContext", "get_policy", "register_policy",
+           "PolicyContext", "ReduceTree", "get_policy", "register_policy",
            "registered_policies", "unregister_policy"]

@@ -115,6 +115,73 @@ def nom_reduce_scatter(x: jax.Array, axis_name: str) -> jax.Array:
     return acc
 
 
+def nom_allreduce(x: jax.Array, axis_name: str) -> jax.Array:
+    """All-reduce (sum) as reduce-scatter + all-gather ring rounds.
+
+    The device-level spelling of the compute-class NoM op: the vector is
+    split into N bank-homed shards, each shard's partials flow to its
+    home and are merged *in transit* (:func:`nom_reduce_scatter` — the
+    fan-in circuit), then the reduced shards are gathered back
+    (:func:`nom_all_gather`).  Works on any ``x`` shape (padded
+    internally to a multiple of the axis size); must be called inside
+    ``shard_map`` with ``axis_name`` bound.  Equals
+    ``lax.psum(x, axis_name)`` up to float summation order — the ring
+    order is fixed, so results are bitwise-reproducible run to run.
+    """
+    n = lax.psum(1, axis_name)
+    if isinstance(n, jax.Array):
+        n = int(n)
+    if n == 1:
+        return x
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    mine = nom_reduce_scatter(flat.reshape(n, -1), axis_name)
+    full = nom_all_gather(mine, axis_name).reshape(-1)
+    if pad:
+        full = full[:-pad]
+    return full.reshape(x.shape)
+
+
+def nom_reduce(fabric, srcs, dst: int, nbytes: int = 1, cycle=None):
+    """One memory-side fan-in on a fabric session: ``nbytes`` operands
+    from each bank in ``srcs`` merged at ``dst`` over a compute-class
+    circuit.  The planner spelling every subsystem should use (raw
+    ``op="reduce"`` construction outside ``core/`` is CI-banned).
+    Returns ``(AllocResult, ScheduleReport)``."""
+    from .scheduler import reduce_request
+    (res,), report = fabric.schedule(
+        [reduce_request(srcs, dst, nbytes=nbytes)], cycle=cycle)
+    return res, report
+
+
+def nom_allreduce_banks(fabric, banks, nbytes: int, cycle=None):
+    """Memory-side all-reduce of an ``nbytes`` vector replicated across
+    ``banks``: a reduce-scatter batch (each bank is the fan-in
+    destination of its own shard) followed by an all-gather batch (each
+    bank streams its reduced shard to every peer).  Both batches go
+    through ``fabric.schedule``, so they pack under the session policy
+    and land in its telemetry.  Returns ``(results, report)`` with the
+    scatter results first and the two batch reports merged."""
+    from .scheduler import TransferRequest, reduce_request
+    banks = [int(b) for b in banks]
+    if len(set(banks)) != len(banks):
+        raise ValueError(f"all-reduce banks must be distinct: {banks}")
+    if len(banks) < 2:
+        raise ValueError("all-reduce needs at least two banks")
+    shard = -(-nbytes // len(banks))
+    scatter = [reduce_request([s for s in banks if s != d], d, nbytes=shard,
+                              tag=("reduce_scatter", d))
+               for d in banks]
+    res1, rep1 = fabric.schedule(scatter, cycle=cycle)
+    gather = [TransferRequest(src=d, dst=o, nbytes=shard,
+                              tag=("allgather", d, o))
+              for d in banks for o in banks if o != d]
+    res2, rep2 = fabric.schedule(gather)
+    return res1 + res2, rep1.merge(rep2)
+
+
 def a2a_link_chunks(n: int) -> dict[str, float]:
     """Per-link chunk counts for the analysis tables: NoM ring schedule vs
     a naive single-shot schedule that serializes on one 'bus' hop."""

@@ -61,6 +61,11 @@ class TransferRequest:
         single-stack fabric, global ids (see
         :meth:`~repro.core.topology.StackedTopology.global_id`) on a
         cluster.  Single-stack fabrics ignore these fields.
+      srcs: compute-class fan-in only (``op="reduce"``): the N source
+        banks whose operands are combined at ``dst``.  ``src`` mirrors
+        ``srcs[0]`` for backend compatibility.  Build these through
+        :func:`reduce_request` (enforced by ``scripts/check_api.py``
+        outside ``core/``).
     """
     src: object
     dst: object
@@ -71,6 +76,42 @@ class TransferRequest:
     op: str = "copy"
     src_stack: int | None = None
     dst_stack: int | None = None
+    srcs: tuple = ()
+
+
+def reduce_request(srcs, dst, nbytes: int = 1, **kw) -> TransferRequest:
+    """Build a compute-class fan-in request: combine one ``nbytes``
+    operand from each bank in ``srcs`` at ``dst`` (``op="reduce"``).
+
+    This is the one sanctioned constructor for multi-source requests —
+    planners (``nom_reduce``/``nom_allreduce_banks``, MoE
+    ``plan_combine``) and callers outside ``core/`` must come through
+    here (or through those planners); ``scripts/check_api.py`` bans raw
+    ``op="reduce"`` spellings elsewhere.  Sources must be pairwise
+    distinct and must not include the destination: the destination bank
+    holds the accumulator, it contributes its resident operand for free.
+    """
+    def _endpoint(e):
+        # flat bank id, or a tuple endpoint ((stack, node) on a cluster,
+        # device coords on the rounds backend — rejected at schedule()).
+        return (tuple(int(v) for v in e) if isinstance(e, (tuple, list))
+                else int(e))
+
+    srcs = tuple(_endpoint(s) for s in srcs)
+    if not srcs:
+        raise ValueError("reduce_request needs at least one source bank")
+    if len(set(srcs)) != len(srcs):
+        raise ValueError(f"reduce sources must be distinct: {srcs}")
+    dst = _endpoint(dst)
+    dst_stack = kw.get("dst_stack")
+    src_stack = kw.get("src_stack")
+    if src_stack is None and dst_stack is None:
+        if dst in srcs:
+            raise ValueError(
+                f"reduce destination {dst} is already a source "
+                "(the accumulator bank contributes in place)")
+    return TransferRequest(src=srcs[0], dst=dst, nbytes=nbytes,
+                           op="reduce", srcs=srcs, **kw)
 
 
 @dataclasses.dataclass
@@ -99,6 +140,8 @@ class ScheduleReport:
         quadratically with the batch.
       n_init: INIT-class requests (``op="init"``) in this batch — the
         eviction/initialization share of the traffic.
+      n_reduce: compute-class requests (``op="reduce"``, fan-in
+        circuits) in this batch — the in-memory combine share.
       n_cross_stack: requests whose endpoints live in different stacks of
         a :class:`~repro.core.topology.StackedTopology` (scheduled as
         two-phase segmented circuits by a ``FabricCluster``); 0 on every
@@ -119,6 +162,7 @@ class ScheduleReport:
     conflicts: int = 0         # stale-snapshot retries (tdm backend)
     n_searched: int = 0        # per-request searches over all passes (tdm)
     n_init: int = 0            # INIT-class (op="init") requests in the batch
+    n_reduce: int = 0          # compute-class (op="reduce") requests
     n_cross_stack: int = 0     # cross-stack requests (FabricCluster only)
     fused_waves: int = 0       # prepare rounds served by the fused program
     host_waves: int = 0        # prepare rounds served by the host pipeline
@@ -147,6 +191,7 @@ class ScheduleReport:
             conflicts=self.conflicts + other.conflicts,
             n_searched=self.n_searched + other.n_searched,
             n_init=self.n_init + other.n_init,
+            n_reduce=self.n_reduce + other.n_reduce,
             n_cross_stack=self.n_cross_stack + other.n_cross_stack,
             fused_waves=self.fused_waves + other.fused_waves,
             host_waves=self.host_waves + other.host_waves,
@@ -162,7 +207,8 @@ def _as_copy_requests(transfers) -> list[CopyRequest]:
         elif isinstance(t, TransferRequest):
             out.append(CopyRequest(int(t.src), int(t.dst), t.nbytes,
                                    max_extra_slots=t.max_extra_slots,
-                                   cycle=t.cycle, op=t.op))
+                                   cycle=t.cycle, op=t.op,
+                                   srcs=tuple(int(s) for s in t.srcs)))
         else:
             out.append(CopyRequest(*t))
     return out
@@ -219,6 +265,7 @@ def _tdm_report(alloc: TdmAllocator, reqs: list[CopyRequest],
         search_rounds=rep.search_rounds, conflicts=rep.conflicts,
         n_searched=rep.n_searched,
         n_init=sum(1 for rq in reqs if rq.op == "init"),
+        n_reduce=sum(1 for rq in reqs if rq.op == "reduce"),
         fused_waves=rep.fused_waves, host_waves=rep.host_waves)
 
 
@@ -253,4 +300,4 @@ def schedule_transfers(transfers, *, allocator: TdmAllocator | None = None,
 
 
 __all__ = ["CopyRequest", "ScheduleReport", "Transfer", "TransferPlan",
-           "TransferRequest", "schedule_transfers"]
+           "TransferRequest", "reduce_request", "schedule_transfers"]

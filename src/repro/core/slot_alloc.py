@@ -224,6 +224,13 @@ class Circuit:
         return self.arrival_cycle + (self.n_windows - 1) * self._n_slots_hint
 
     _n_slots_hint: int = 16
+    # Compute-class fan-in (op="reduce"): the N source banks whose
+    # operands this circuit merges at ``dst``.  ``hops`` then holds every
+    # per-source route (in source order — the fixed summation tree) plus
+    # the ALU-dwell slots on the destination's LOCAL port; ``src`` mirrors
+    # ``srcs[0]``; ``distance`` spans injection of the first beat to
+    # arrival of the last operand.  Empty for copy/init circuits.
+    srcs: tuple = ()
 
 
 class _PackedExpiry:
@@ -658,13 +665,17 @@ class CopyRequest:
     zero-hop circuit that occupies only the bank's LOCAL port while the
     bank clears rows internally (RowClone-FPM style), so INIT traffic
     shares the CCU's admission/telemetry pipeline without consuming mesh
-    links."""
+    links; ``"reduce"`` is the compute-class fan-in — one ``nbytes``
+    operand from every bank in ``srcs`` is combined at ``dst`` over
+    per-source circuits sharing the destination port under the ALU-dwell
+    occupancy model (``src`` mirrors ``srcs[0]``)."""
     src: int
     dst: int
     nbytes: int
     max_extra_slots: int = 0
     cycle: int | None = None
     op: str = "copy"
+    srcs: tuple = ()
 
 
 @dataclasses.dataclass
@@ -708,6 +719,10 @@ class _Prepared:
     uses_bus: bool = False
     bus_column: int = -1
     bus_slots: list | None = None      # [(column, slot)] (NoM-Light)
+    reduce: bool = False               # compute-class fan-in bundle: the
+    #   (dst, LOCAL) prefix repeats across arrival + dwell slots, so the
+    #   commit must take the duplicate-prefix-safe reservation path
+    srcs: tuple = ()                   # fan-in sources (reduce only)
 
 
 class TdmAllocator:
@@ -769,6 +784,12 @@ class TdmAllocator:
     # the bank; no bytes cross the mesh), so its zero-hop circuit holds the
     # LOCAL port for ceil(nbytes / init_row_bytes) windows.
     init_row_bytes: int = 8192
+
+    # Compute-class fan-in (op="reduce"): extra TDM slot(s) the
+    # destination bank's ALU holds on its LOCAL port per merged operand
+    # (every operand after the first) — the dwell the fold into the
+    # accumulator costs before the port can accept the next arrival.
+    reduce_dwell: int = 1
 
     # Requests searched per vectorized wavefront pass.  The accelerator's
     # cost is linear in the wave size, so waves cost no extra search time,
@@ -1239,6 +1260,92 @@ class TdmAllocator:
 
     def _prepare_states(self, reqs: list[CopyRequest], t_readys: np.ndarray,
                         window: int) -> list[_Prepared]:
+        """Prepare one wave: compute-class fan-ins through the scalar
+        :meth:`_prepare_reduce` (identical on every backend), the rest
+        through the copy/init pipeline — all against the same occupancy
+        snapshot, reassembled in request order."""
+        if not reqs:
+            return []
+        red_ix = {i for i, r in enumerate(reqs) if r.op == "reduce"}
+        if not red_ix:
+            return self._prepare_copy_states(reqs, t_readys, window)
+        occ = self.table._ports.masks_at(window)
+        red = {i: self._prepare_reduce(reqs[i], int(t_readys[i]), occ,
+                                       window)
+               for i in sorted(red_ix)}
+        rest_ix = [i for i in range(len(reqs)) if i not in red_ix]
+        rest = iter(self._prepare_copy_states(
+            [reqs[i] for i in rest_ix], t_readys[rest_ix], window)
+            if rest_ix else [])
+        return [red[i] if i in red_ix else next(rest)
+                for i in range(len(reqs))]
+
+    def _prepare_reduce(self, r: CopyRequest, t_ready: int, occ: np.ndarray,
+                        window: int) -> _Prepared:
+        """Prepare a fan-in reduce bundle: one single-slot circuit per
+        source bank, chosen in *request source order* (the fixed
+        summation tree), each searched against the snapshot plus the
+        bundle's own earlier reservations.  Every operand after the
+        first additionally holds ``reduce_dwell`` ALU-dwell slot(s) on
+        the destination's LOCAL port right after its arrival slot — the
+        cycles the bank ALU needs to fold the operand into the
+        accumulator — so the destination port carries
+        ``k + (k-1)*reduce_dwell`` reservations for a fan-in of k.
+
+        The routine is scalar and snapshot-pure on every backend
+        (host == fused by construction); serial-vs-batch bit-identity
+        follows from the same monotone feasible-set argument as copies:
+        commits validate the whole bundle against the live table and a
+        stale bundle re-prepares fresh.
+        """
+        n = self.n_slots
+        mesh = self.mesh
+        dwell = max(0, int(self.reduce_dwell))
+        occ2 = occ.copy()
+        hops_all: list[tuple[int, int, int]] = []
+        start = last_arrival = None
+        for j, s in enumerate(r.srcs):
+            s = int(s)
+            if s == r.dst:
+                return _Prepared(denied=True, src=r.src, dst=r.dst)
+            vec = _wavefront_host(occ2, mesh, n, s, r.dst, 0)
+            avail = int(vec[r.dst]) | int(occ2[r.dst, PORT_LOCAL])
+            local = int(occ2[r.dst, PORT_LOCAL])
+            dist = mesh.manhattan(s, r.dst)
+            best = None
+            for a in range(n):
+                if (avail >> a) & 1:
+                    continue
+                if j and dwell and any((local >> ((a + q) % n)) & 1
+                                       for q in range(1, dwell + 1)):
+                    continue        # ALU busy right after this arrival
+                s_inj = (a - dist) % n
+                c = t_ready + ((s_inj - t_ready) % n)
+                if best is None or c < best[0]:
+                    best = (c, a)
+            if best is None:
+                return _Prepared(denied=True, src=r.src, dst=r.dst)
+            c, a = best
+            hops = traceback(vec, occ2, mesh, n, s, r.dst, a)
+            if j and dwell:
+                hops = hops + [(r.dst, PORT_LOCAL, (a + q) % n)
+                               for q in range(1, dwell + 1)]
+            for hn, hp, hs in hops:
+                occ2[hn, hp] |= np.uint32(1) << np.uint32(hs)
+            hops_all += hops
+            start = c if start is None else min(start, c)
+            last_arrival = (c + dist if last_arrival is None
+                            else max(last_arrival, c + dist))
+        return _Prepared(
+            src=r.src, dst=r.dst, start_cycle=start, w_res=t_ready // n,
+            n_win=self.n_windows_for(r.nbytes), slots_per_window=1,
+            distance=last_arrival - start, hops=hops_all,
+            idx=SlotTable._hops_idx(hops_all), flat=None, reduce=True,
+            srcs=tuple(int(s) for s in r.srcs))
+
+    def _prepare_copy_states(self, reqs: list[CopyRequest],
+                             t_readys: np.ndarray,
+                             window: int) -> list[_Prepared]:
         if not reqs:
             return []
         if self._fused_eligible(len(reqs), t_readys):
@@ -1261,7 +1368,12 @@ class TdmAllocator:
         the scalar slot choice / trace-back — the conflict fast path the
         wave structure was designed around.  A forced-fused allocator
         re-prepares through the compiled program instead, so the
-        differential harness exercises it end to end."""
+        differential harness exercises it end to end.  Fan-in bundles
+        always re-prepare through the scalar reduce routine (their one
+        prepare path on every backend)."""
+        if req.op == "reduce":
+            occ = self.table._ports.masks_at(window)
+            return self._prepare_reduce(req, int(t_ready[0]), occ, window)
         if self._host_small and self.backend != "fused":
             occ = self.table._ports.masks_at(window)
             vec = _wavefront_host(occ, self.mesh, self.n_slots, req.src,
@@ -1494,8 +1606,12 @@ class TdmAllocator:
             # hop outside a request's shortest-path box (impossible today)
             # must fail loudly, not silently double-book.
             assert (table.expiry[st.idx] <= window).all(), "double booking"
+        # A reduce bundle repeats the (dst, LOCAL) prefix across its
+        # arrival + dwell slots — unique=True's buffered fancy |= would
+        # drop bits there, so fan-ins take the duplicate-safe path.
         table._ports.reserve_arrays(st.idx, st.w_res + st.n_win,
-                                    unique=st.slots_per_window == 1)
+                                    unique=(st.slots_per_window == 1
+                                            and not st.reduce))
         if st.bus_slots:
             for col, bslot in st.bus_slots:
                 table.reserve_bus(col, bslot, st.w_res, st.n_win)
@@ -1503,7 +1619,8 @@ class TdmAllocator:
                        n_windows=st.n_win, hops=st.hops,
                        slots_per_window=st.slots_per_window,
                        uses_bus=st.uses_bus, bus_column=st.bus_column,
-                       distance=st.distance, _n_slots_hint=self.n_slots)
+                       distance=st.distance, _n_slots_hint=self.n_slots,
+                       srcs=st.srcs)
 
 
 class TdmAllocatorLight(TdmAllocator):
@@ -1525,10 +1642,23 @@ class TdmAllocatorLight(TdmAllocator):
 
     def _reprepare_conflict(self, req, t_ready, window):
         # Cross-layer routes need the bus-aware two-phase prepare; the
-        # full-mesh scalar fast path does not apply here.
+        # full-mesh scalar fast path does not apply here.  (The shared
+        # _prepare_states split still routes fan-ins to _prepare_reduce.)
         return self._prepare_states([req], t_ready, window)[0]
 
-    def _prepare_states(self, reqs, t_readys, window):
+    def _prepare_reduce(self, r, t_ready, occ, window):
+        # Fan-in routes are XY-monotone single-layer circuits; a
+        # cross-layer operand would need a bus hop the reduce search does
+        # not model — reject loudly rather than route over absent Z links.
+        coords = self.mesh.coord_array
+        if any(int(coords[int(s)][2]) != int(coords[r.dst][2])
+               for s in r.srcs):
+            raise ValueError(
+                "NoM-Light reduce requires same-layer sources (vertical "
+                "operands must ride the TSV bus as explicit copies first)")
+        return super()._prepare_reduce(r, t_ready, occ, window)
+
+    def _prepare_copy_states(self, reqs, t_readys, window):
         if not reqs:
             return []
         mesh, n = self.mesh, self.n_slots

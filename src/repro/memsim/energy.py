@@ -35,6 +35,12 @@ class EnergyParams:
     # I/O leaves the mats, so per-row cost sits at the ACT/PRE energy (the
     # RowClone paper's FPM accounting; LISA adds hops only for *copies*).
     e_init_row: float = 909.0
+    # Compute-class reduce: one 64-bit integer/FP merge in the destination
+    # bank's logic-die ALU (pJ per merged element) — a near-memory adder
+    # operates at a small multiple of a TSV bit crossing, far below any
+    # path that moves the operand off-stack.  Charged per
+    # ``extra["nom_reduce_elems"]``.
+    e_reduce_elem: float = 0.08
 
 
 def init_energy_per_row(params: EnergyParams = EnergyParams()) -> float:
@@ -60,10 +66,11 @@ def energy_pj(res: SimResult, params: EnergyParams = EnergyParams()) -> dict:
     nom = res.nom_hop_beats * 64 * p.e_hop_bit
     bus = res.bus_busy_cycles * 64 * p.e_bus_bit
     serdes = res.extra.get("serdes_bytes", 0) * 8 * p.e_serdes_bit
+    reduce_alu = res.extra.get("nom_reduce_elems", 0) * p.e_reduce_elem
     static = (res.cycles * p.e_router_static_per_cycle * p.n_routers
               if res.config.startswith("nom") else 0.0)
-    total = dram + init + offchip + nom + bus + serdes + static
+    total = dram + init + offchip + nom + bus + serdes + reduce_alu + static
     return {"dram": dram, "dram_init": init, "offchip": offchip,
             "nom_links": nom, "shared_bus": bus, "serdes_links": serdes,
-            "router_static": static,
+            "reduce_alu": reduce_alu, "router_static": static,
             "total": total, "per_access": total / max(1, accesses)}

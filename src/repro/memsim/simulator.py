@@ -28,7 +28,8 @@ import numpy as np
 
 from repro.core.fabric import (AdmissionQueue, FabricCluster, FabricOverflow,
                                NomFabric)
-from repro.core.slot_alloc import CopyRequest, TdmAllocator, TdmAllocatorLight
+from repro.core.slot_alloc import (PORT_LOCAL, CopyRequest, TdmAllocator,
+                                   TdmAllocatorLight)
 from repro.core.topology import Mesh3D, StackedTopology, make_topology
 
 from .dram import OffChipLink, SharedInternalBus, Timing, VaultController
@@ -196,6 +197,12 @@ class MemorySystem:
         self.serdes_windows = 0
         self.serdes_bytes = 0
         self.nom_cross_stack = 0
+        # Compute-class (Op.REDUCE) telemetry: 64-bit merges executed by
+        # destination-bank ALUs, and cycles lost to a busy ALU (a second
+        # fan-in landing on a bank whose merge pipeline hasn't drained).
+        self.nom_reduce_elems = 0
+        self.nom_reduce_stalls = 0
+        self._reduce_alu_free: dict[int, int] = {}  # dst bank -> ALU free-at
 
     # -- helpers -------------------------------------------------------------
     @property
@@ -339,6 +346,63 @@ class MemorySystem:
         dvc._tsv(start, lines * t.tBURST)
         return end
 
+    def reduce_processor(self, at: int, r: Request) -> int:
+        """Copy-then-compute fallback for Op.REDUCE on the non-NoM
+        configs: every operand page round-trips through the processor
+        (read over vault TSV + off-chip link, accumulate in the core,
+        write the running sum back) — the traffic the compute-class NoM
+        op eliminates.  Sequential in the operands: each pass
+        read-modify-writes the same destination row."""
+        done = at
+        for s in r.src_banks:
+            step = Request(Op.COPY, int(s), r.src_row, r.dst_bank,
+                           r.dst_row, nbytes=r.nbytes)
+            done = self.copy_conventional(done, step)
+        return done
+
+    def _finish_reduce(self, rq: CopyRequest, r: Request, c,
+                       xfer_done: int) -> int:
+        """Post-circuit accounting for one committed fan-in: mesh/SerDes
+        beat counts, destination-bank ALU occupancy (with backpressure
+        when a second fan-in lands on a busy ALU), and the destination
+        row write.  Returns the drain cycle."""
+        p, t = self.p, self.p.timing
+        k = len(rq.srcs)
+        beats = max(1, r.nbytes // 8)
+        # Each per-source route carries `beats` over its own mesh hops;
+        # LOCAL entries (arrival + ALU dwell) are occupancy, not traffic.
+        mesh_hops = sum(1 for _n, prt, _s in c.hops if prt != PORT_LOCAL)
+        self.nom_hop_beats += beats * mesh_hops
+        link_slots = getattr(c, "link_slots", None)
+        if link_slots:
+            self.serdes_bytes += r.nbytes * len(link_slots)
+            self.serdes_windows += c.n_windows * len(link_slots)
+            self.nom_cross_stack += 1
+        if p.config == "nom":
+            d_stack, d_loc = self._locate(r.dst_bank)
+            dz = self.mesh.coords(d_loc)[2]
+            vert = 0
+            for s in rq.srcs:
+                s_stack, s_loc = self._locate(int(s))
+                sz = self.mesh.coords(s_loc)[2]
+                vert += (sz + dz) if s_stack != d_stack else abs(sz - dz)
+            self.nom_vertical_cycles += vert * beats
+        # Destination-bank ALU: merges k-1 operands into the resident
+        # running sum at stream rate (one 64-bit lane), draining one
+        # dwell window past the final beat.  A fan-in that lands while
+        # the ALU is still draining a previous merge backpressures.
+        elems = (k - 1) * beats
+        self.nom_reduce_elems += elems
+        free = self._reduce_alu_free.get(r.dst_bank, 0)
+        if free > c.start_cycle:
+            stall = free - c.start_cycle
+            self.nom_reduce_stalls += stall
+            xfer_done += stall
+        dwell = max(0, getattr(self.alloc, "reduce_dwell", 1))
+        self._reduce_alu_free[r.dst_bank] = xfer_done + dwell * p.n_slots
+        dvc, db = self._vault_bank(r.dst_bank)
+        return dvc.bank_row_op(xfer_done, db, t.tRCD + t.tWR)
+
     def copy_nom(self, at: int, r: Request) -> int:
         """Inter-bank copy over the TDM circuit-switched mesh (batch of 1)."""
         return self.copy_nom_batch([(at, r)])[0]
@@ -379,6 +443,19 @@ class MemorySystem:
             if r.op == Op.INIT:
                 reqs.append(CopyRequest(r.src_bank, r.src_bank, r.nbytes,
                                         op="init", cycle=pick))
+                continue
+            if r.op == Op.REDUCE:
+                # Every operand bank reads its row into the CS buffer; the
+                # fan-in circuit is anchored at the slowest one.
+                ready = pick + 3
+                for s in r.src_banks:
+                    svc, sb = self._vault_bank(int(s))
+                    ready = max(ready, svc.bank_row_op(pick + 3, sb,
+                                                       t.tRCD + t.tCL))
+                reqs.append(CopyRequest(
+                    int(r.src_banks[0]), r.dst_bank, r.nbytes, op="reduce",
+                    srcs=tuple(int(s) for s in r.src_banks),
+                    cycle=max(ready - 3, pick)))
                 continue
             svc, sb = self._vault_bank(r.src_bank)
             ready = svc.bank_row_op(pick + 3, sb, t.tRCD + t.tCL)
@@ -466,6 +543,9 @@ class MemorySystem:
             link_cycles = dist + (c.n_windows - 1) * p.n_slots
             xfer_done = c.start_cycle + int(np.ceil(link_cycles
                                                     / p.nom_link_ratio))
+            if rq.op == "reduce":
+                dones.append(self._finish_reduce(rq, r, c, xfer_done))
+                continue
             link_slots = getattr(c, "link_slots", None)
             if link_slots:
                 # Cross-stack: only the two mesh segments move beats over
@@ -580,6 +660,15 @@ def simulate(reqs: list[Request], p: SimParams, name: str = "") -> SimResult:
                 # occupancy lands in the nom_ccu_* telemetry.
                 core_time = max(core_time, enqueue_nom(issue, r))
                 continue
+        elif r.op == Op.REDUCE:
+            k = max(1, len(r.src_banks))
+            # k loads + 1 accumulate-store per line, config-independent.
+            total_instr += r.nbytes // LINE * (k + 1)
+            copy_bytes += r.nbytes * k
+            if nom:
+                core_time = max(core_time, enqueue_nom(issue, r))
+                continue
+            done = sys.reduce_processor(issue, r)
         else:  # COPY
             total_instr += r.nbytes // LINE * p.instr_per_line
             copy_bytes += r.nbytes
@@ -633,6 +722,10 @@ def simulate(reqs: list[Request], p: SimParams, name: str = "") -> SimResult:
             "nom_ccu_init_reqs": sys.ccu.init_reqs,
             "nom_ccu_init_peak": sys.ccu.peak_init,
             "nom_ccu_init_windows": sys.nom_init_windows,
+            # Compute-class occupancy: destination-bank ALU merges and
+            # the cycles fan-ins lost to a still-draining ALU.
+            "nom_reduce_elems": sys.nom_reduce_elems,
+            "nom_reduce_stalls": sys.nom_reduce_stalls,
         }
     if nom and p.stacks > 1:
         seg = sys.fabric.segmented

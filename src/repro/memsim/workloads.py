@@ -20,6 +20,7 @@ class Op(enum.Enum):
     WRITE = 1
     COPY = 2       # src page -> dst page
     INIT = 3       # zero a page
+    REDUCE = 4     # combine N source pages at the destination bank
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,6 +33,9 @@ class Request:
     nbytes: int = 64
     intra_bank: bool = False
     same_subarray: bool = False
+    # REDUCE fan-in: every source bank whose operand merges at dst_bank
+    # (src_bank mirrors src_banks[0]); empty for the other classes.
+    src_banks: tuple = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,19 +45,25 @@ class TrafficMix:
     intra_bank_copy: float
     init: float
     regular: float
+    reduce: float = 0.0
 
     def __post_init__(self):
         total = (self.inter_bank_copy + self.intra_bank_copy + self.init
-                 + self.regular)
+                 + self.regular + self.reduce)
         assert abs(total - 1.0) < 1e-9, total
 
 
 # Fig. 3 mixes (inter-bank copy share is the workload's defining number).
+# The *Reduce* mixes are ours, not the paper's: optimizer-state
+# accumulation / gradient-aggregation services where a compute-class
+# fan-in (Op.REDUCE) replaces the copy-then-compute round trip.
 WORKLOADS: dict[str, TrafficMix] = {
     "fork":       TrafficMix(0.25, 0.20, 0.15, 0.40),
     "fileCopy20": TrafficMix(0.20, 0.10, 0.10, 0.60),
     "fileCopy40": TrafficMix(0.40, 0.10, 0.08, 0.42),
     "fileCopy60": TrafficMix(0.60, 0.08, 0.05, 0.27),
+    "gradAgg20":  TrafficMix(0.10, 0.05, 0.05, 0.60, 0.20),
+    "gradAgg40":  TrafficMix(0.10, 0.05, 0.05, 0.40, 0.40),
 }
 
 PAGE = 4096
@@ -69,6 +79,7 @@ class WorkloadSpec:
     seed: int = 0
     locality: float = 0.5   # P(regular access hits the currently open row)
     same_subarray_frac: float = 0.5  # intra-bank copies in the same subarray
+    reduce_fanin: int = 4   # operands per Op.REDUCE fan-in
 
 
 def generate(spec: WorkloadSpec) -> list[Request]:
@@ -78,12 +89,14 @@ def generate(spec: WorkloadSpec) -> list[Request]:
     # page (PAGE bytes), a regular request moves LINE bytes.  Counts are
     # stratified (not sampled) so the realized byte mix matches Fig. 3
     # exactly up to rounding, then the order is shuffled.
+    # A reduce request moves fanin operand pages to one destination.
     w = np.array([mix.inter_bank_copy / PAGE, mix.intra_bank_copy / PAGE,
-                  mix.init / PAGE, mix.regular / LINE])
+                  mix.init / PAGE, mix.regular / LINE,
+                  mix.reduce / (PAGE * max(1, spec.reduce_fanin))])
     p = w / w.sum()
     counts = np.floor(p * spec.n_requests).astype(int)
     counts[np.argmax(p)] += spec.n_requests - counts.sum()
-    kinds = np.repeat(np.arange(4), counts)
+    kinds = np.repeat(np.arange(5), counts)
     rng.shuffle(kinds)
     reqs: list[Request] = []
     open_rows = np.full(spec.n_banks, -1)
@@ -104,6 +117,15 @@ def generate(spec: WorkloadSpec) -> list[Request]:
         elif k == 2:  # init
             row = int(rng.integers(spec.rows_per_bank))
             reqs.append(Request(Op.INIT, src, row, src, row, nbytes=PAGE))
+        elif k == 4:  # compute-class fan-in reduce
+            fanin = min(max(1, spec.reduce_fanin), spec.n_banks - 1)
+            banks = rng.choice(spec.n_banks, size=fanin + 1, replace=False)
+            srcs, dst = banks[:-1], int(banks[-1])
+            reqs.append(Request(Op.REDUCE, int(srcs[0]),
+                                int(rng.integers(spec.rows_per_bank)),
+                                dst, int(rng.integers(spec.rows_per_bank)),
+                                nbytes=PAGE,
+                                src_banks=tuple(int(b) for b in srcs)))
         else:  # regular read/write
             if open_rows[src] >= 0 and rng.random() < spec.locality:
                 row = int(open_rows[src])
@@ -119,7 +141,7 @@ def generate(spec: WorkloadSpec) -> list[Request]:
 def traffic_breakdown(reqs: list[Request]) -> dict[str, float]:
     """Byte-share per class — reproduces the paper's Fig. 3."""
     buckets = {"inter_bank_copy": 0, "intra_bank_copy": 0, "init": 0,
-               "regular": 0}
+               "regular": 0, "reduce": 0}
     for r in reqs:
         if r.op == Op.COPY and not r.intra_bank:
             buckets["inter_bank_copy"] += r.nbytes
@@ -127,6 +149,8 @@ def traffic_breakdown(reqs: list[Request]) -> dict[str, float]:
             buckets["intra_bank_copy"] += r.nbytes
         elif r.op == Op.INIT:
             buckets["init"] += r.nbytes
+        elif r.op == Op.REDUCE:
+            buckets["reduce"] += r.nbytes * max(1, len(r.src_banks))
         else:
             buckets["regular"] += r.nbytes
     total = sum(buckets.values())

@@ -34,8 +34,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.fabric import FabricCluster, NomFabric
 from repro.core.nom_collectives import nom_all_to_all
-from repro.core.scheduler import TransferRequest
-from repro.core.topology import StackedTopology
+from repro.core.scheduler import TransferRequest, reduce_request
+from repro.core.topology import StackedTopology, make_topology
 from repro.parallel.compat import get_ambient_mesh, shard_map
 
 from .common import AxesTree, Params, dense_init
@@ -267,6 +267,65 @@ class MoE:
             reqs, policy=policy)
         object.__setattr__(self, "_last_dispatch", (results, report))
         return results, report
+
+    def plan_combine(self, p: Params, x: jax.Array, ep: int | None = None,
+                     policy: str = "arrival"):
+        """Expert-output combine as compute-class reduce traffic.
+
+        The return leg of the a2a is a *sum*: destination rank ``r`` adds
+        the expert outputs coming back from every rank it dispatched
+        tokens to.  :meth:`plan_dispatch` models that leg as plain
+        ``("combine", q, r)`` copies; this planner instead emits one
+        fan-in :func:`~repro.core.scheduler.reduce_request` per
+        destination rank — sources are the ranks with a non-empty
+        ``blocks[r, q]`` block, the merge happens in the destination
+        bank's ALU, and no copy-then-compute round trip touches the
+        processor.
+
+        Wire model: the fan-in streams every operand through the shared
+        destination port, so the request is sized to the *widest*
+        incoming block (``max_q blocks[r, q] * d * itemsize``) — slot
+        occupancy is set by the longest operand stream, narrower
+        operands ride the same circuit windows.
+
+        Ranks are homed identity-mapped onto a square single-stack mesh
+        (rank ``r`` = bank ``r``) and scheduled through a per-``ep``
+        bank-level TDM fabric (:meth:`_combine_fabric` — the
+        rounds-backend :meth:`_dispatch_fabric` cannot carry reduce, by
+        design).  Returns ``(results, report)`` with
+        ``report.n_reduce`` counting the fan-ins, and updates
+        :attr:`last_dispatch_report`.
+        """
+        ep = self._ep_size() if ep is None else int(ep)
+        blocks, d, itemsize = self._dispatch_blocks(p, x, ep)
+        reqs = []
+        for r in range(ep):
+            srcs = [q for q in range(ep) if q != r and blocks[r, q]]
+            if not srcs:
+                continue
+            widest = int(max(blocks[r, q] for q in srcs)) * d * itemsize
+            reqs.append(reduce_request(srcs, r, nbytes=widest,
+                                       tag=("combine_reduce", r)))
+        results, report = self._combine_fabric(ep).schedule(
+            reqs, policy=policy)
+        object.__setattr__(self, "_last_dispatch", (results, report))
+        return results, report
+
+    def _combine_fabric(self, ep: int) -> NomFabric:
+        """Per-EP-size bank-level fabric for :meth:`plan_combine`: a
+        square mesh just large enough to home every rank on its own
+        bank, kept across forwards like :meth:`_dispatch_fabric`."""
+        fabrics = getattr(self, "_reduce_fabrics", None)
+        if fabrics is None:
+            fabrics = {}
+            object.__setattr__(self, "_reduce_fabrics", fabrics)
+        if ep not in fabrics:
+            side = 1
+            while side * side < ep:
+                side += 1
+            mesh = make_topology(1, mesh=(side, side, 1), vault_span_y=1)
+            fabrics[ep] = NomFabric(mesh=mesh)
+        return fabrics[ep]
 
     def _stacked_cluster(self, topology: StackedTopology) -> FabricCluster:
         """Per-topology :class:`FabricCluster` session for

@@ -166,3 +166,35 @@ assert len(tel["stacks"]) == 4
 print("CLUSTER_OK", committed, tel["fused_waves"], tel["host_waves"])
 """)
     assert "CLUSTER_OK" in out
+
+
+def test_nom_allreduce_matches_psum_on_8_devices(multidevice_run):
+    """Compute-class satellite: the device-level ``nom_allreduce``
+    (reduce-scatter + all-gather ring rounds) equals the axis sum on the
+    8-device lane — including a ragged shape that forces internal
+    padding — and is bitwise-reproducible across runs (fixed ring
+    summation order)."""
+    out = multidevice_run("""
+import jax, numpy as np, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.parallel.compat import shard_map
+from repro.launch.mesh import make_mesh
+from repro.core import nom_allreduce
+assert jax.device_count() == 8
+mesh = make_mesh((8,), ("x",))
+f = shard_map(lambda v: nom_allreduce(v[0], "x")[None], mesh=mesh,
+              in_specs=P("x", None), out_specs=P("x", None))
+x = jnp.asarray(np.random.RandomState(7).randn(8, 6), jnp.float32)
+got = np.asarray(f(x))
+want = np.asarray(x).sum(axis=0)
+assert all(np.allclose(got[i], want, atol=1e-5) for i in range(8))
+# Ragged per-device shape: 5 elements pad to 8 internally.
+xr = jnp.asarray(np.random.RandomState(8).randn(8, 5), jnp.float32)
+got_r = np.asarray(f(xr))
+assert np.allclose(got_r[0], np.asarray(xr).sum(axis=0), atol=1e-5)
+# Fixed ring order: a second evaluation is bit-identical.
+again = np.asarray(f(x))
+np.testing.assert_array_equal(got, again)
+print("ALLREDUCE_OK")
+""")
+    assert "ALLREDUCE_OK" in out

@@ -1,0 +1,415 @@
+"""Compute-class reduce: fan-in circuits, dwell occupancy, bit-identity
+across commit paths, cross-stack trees, memsim timing/energy, and the
+host-side collective planners."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fabric import FabricCluster, NomFabric, ReduceTree
+from repro.core.nom_collectives import nom_allreduce_banks, nom_reduce
+from repro.core.scheduler import (ScheduleReport, TransferRequest,
+                                  reduce_request)
+from repro.core.slot_alloc import (CopyRequest, TdmAllocator,
+                                   TdmAllocatorLight)
+from repro.core.topology import Mesh3D, PORT_LOCAL, make_topology
+from repro.memsim.energy import EnergyParams, energy_pj
+from repro.memsim.simulator import SimParams, simulate
+from repro.memsim.workloads import (Op, Request, WorkloadSpec, generate,
+                                    traffic_breakdown)
+
+MESH = Mesh3D(8, 8, 4)
+N_SLOTS = 16
+
+
+def _mixed_stream(seed: int, n: int, reduce_every: int = 3):
+    """Random stream of copies with a fan-in reduce every few requests."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        if i % reduce_every == 0:
+            k = int(rng.integers(2, 6))
+            banks = rng.choice(MESH.n_nodes, size=k + 1, replace=False)
+            reqs.append(CopyRequest(
+                int(banks[0]), int(banks[-1]), int(rng.integers(64, 1024)),
+                op="reduce", srcs=tuple(int(b) for b in banks[:-1])))
+        else:
+            s, d = rng.integers(MESH.n_nodes, size=2)
+            while s == d:
+                d = rng.integers(MESH.n_nodes)
+            reqs.append(CopyRequest(int(s), int(d),
+                                    int(rng.integers(64, 1024))))
+    return reqs
+
+
+# --- fan-in circuit structure and occupancy ---------------------------------
+def test_fanin_circuit_structure_and_dwell_occupancy():
+    """A k-way fan-in holds k arrival slots plus (k-1)*reduce_dwell
+    ALU-dwell slots on the destination's LOCAL port — recounted from the
+    circuit's own hop list (the oracle) and from the live slot table."""
+    alloc = TdmAllocator(MESH, N_SLOTS)
+    srcs = [MESH.node_id(1, 1, 0), MESH.node_id(5, 2, 1),
+            MESH.node_id(2, 6, 2), MESH.node_id(7, 7, 3)]
+    dst = MESH.node_id(4, 4, 1)
+    res = alloc.allocate_batch(
+        [CopyRequest(srcs[0], dst, 512, op="reduce", srcs=tuple(srcs))],
+        cycle=0)[0]
+    c = res.circuit
+    assert c is not None and c.srcs == tuple(srcs)
+    k, dwell = len(srcs), alloc.reduce_dwell
+    local = [h for h in c.hops if h[0] == dst and h[1] == PORT_LOCAL]
+    assert len(local) == k + (k - 1) * dwell
+    # All reservation entries of the bundle are pairwise distinct.
+    assert len(set(c.hops)) == len(c.hops)
+    # The first route starts at srcs[0]: the fixed summation tree roots
+    # the accumulator at the first-listed operand.
+    assert c.hops[0][0] == srcs[0]
+    # Live-table recount: the busy mask at the start window carries
+    # exactly the bundle's LOCAL-port slots.
+    occ = alloc.table._ports.masks_at(c.start_cycle // N_SLOTS)
+    busy = bin(int(occ[dst, PORT_LOCAL])).count("1")
+    assert busy == k + (k - 1) * dwell
+
+
+def test_dwell_knob_scales_local_port_occupancy():
+    srcs = (MESH.node_id(0, 0, 0), MESH.node_id(3, 0, 0),
+            MESH.node_id(0, 3, 0))
+    dst = MESH.node_id(2, 2, 0)
+    for dwell in (0, 1, 3):
+        alloc = TdmAllocator(MESH, N_SLOTS)
+        alloc.reduce_dwell = dwell
+        c = alloc.allocate_batch(
+            [CopyRequest(srcs[0], dst, 64, op="reduce", srcs=srcs)],
+            cycle=0)[0].circuit
+        local = [h for h in c.hops if h[0] == dst and h[1] == PORT_LOCAL]
+        assert len(local) == 3 + 2 * dwell, dwell
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_fanin_routes_are_slot_disjoint_property(seed):
+    """Guarantee (1) extended to fan-ins: across a committed mixed batch
+    no (router, port, slot) is claimed twice — reduce bundles included,
+    checked from the circuits themselves."""
+    alloc = TdmAllocator(MESH, N_SLOTS)
+    results = alloc.allocate_batch(_mixed_stream(seed, 24), cycle=0)
+    claimed = set()
+    n_reduce = 0
+    for res in results:
+        if res.circuit is None:
+            continue
+        n_reduce += bool(res.circuit.srcs)
+        for hop in res.circuit.hops:
+            assert hop not in claimed, hop
+            claimed.add(hop)
+    assert n_reduce >= 1
+
+
+def test_fanin_route_obeys_increasing_slot_invariant():
+    """Each per-source route inside the bundle advances one slot per
+    hop (guarantee 2); dwell entries continue the rotation after the
+    arrival slot."""
+    alloc = TdmAllocator(MESH, N_SLOTS)
+    srcs = (MESH.node_id(1, 0, 0), MESH.node_id(0, 2, 0))
+    dst = MESH.node_id(3, 3, 0)
+    c = alloc.allocate_batch(
+        [CopyRequest(srcs[0], dst, 64, op="reduce", srcs=srcs)],
+        cycle=0)[0].circuit
+    routes, cur = [], []
+    for node, port, slot in c.hops:
+        cur.append((node, port, slot))
+        if node == dst and port == PORT_LOCAL and \
+                (not routes or len(cur) > 1):
+            routes.append(cur)
+            cur = []
+    for route in routes[:2]:   # the two operand routes
+        slots = [s for _n, _p, s in route]
+        for a, b in zip(slots, slots[1:]):
+            assert (a + 1) % N_SLOTS == b
+
+
+# --- bit-identity across commit paths ---------------------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_reduce_serial_vs_batch_bit_identical(seed):
+    """A mixed copy+reduce stream committed one request at a time equals
+    the batched commit bit for bit — circuits, hop lists, and the final
+    slot table."""
+    reqs = _mixed_stream(seed, 30)
+    serial, batched = TdmAllocator(MESH, N_SLOTS), TdmAllocator(MESH, N_SLOTS)
+    want = [serial.allocate_batch([r], cycle=0)[0] for r in reqs]
+    got = batched.allocate_batch(reqs, cycle=0)
+    for i, (w, g) in enumerate(zip(want, got)):
+        assert (w.circuit is None) == (g.circuit is None), i
+        if w.circuit is not None:
+            assert w.circuit.start_cycle == g.circuit.start_cycle, i
+            assert w.circuit.hops == g.circuit.hops, i
+            assert w.circuit.srcs == g.circuit.srcs, i
+    np.testing.assert_array_equal(serial.table.expiry, batched.table.expiry)
+
+
+@pytest.mark.parametrize("seed", [3, 4])
+def test_reduce_host_vs_fused_backend_bit_identical(seed):
+    """The compiled commit pipeline and the host path schedule identical
+    fan-ins (the reduce prepare is scalar on both backends by
+    construction; the surrounding copies exercise the fused waves)."""
+    reqs = _mixed_stream(seed, 48)
+    host = TdmAllocator(MESH, N_SLOTS, backend="host")
+    fused = TdmAllocator(MESH, N_SLOTS, backend="fused")
+    rh = host.allocate_batch(list(reqs), cycle=0)
+    rf = fused.allocate_batch(list(reqs), cycle=0)
+    for i, (h, f) in enumerate(zip(rh, rf)):
+        assert (h.circuit is None) == (f.circuit is None), i
+        if h.circuit is not None:
+            assert h.circuit.hops == f.circuit.hops, i
+            assert h.circuit.srcs == f.circuit.srcs, i
+    np.testing.assert_array_equal(host.table.expiry, fused.table.expiry)
+
+
+def test_fixed_tree_is_reproducible_and_source_ordered():
+    """Two fresh allocators produce byte-identical fan-ins; reversing
+    the source list roots the tree at the other end."""
+    srcs = (MESH.node_id(0, 0, 0), MESH.node_id(7, 7, 3))
+    dst = MESH.node_id(4, 4, 2)
+    circs = []
+    for order in (srcs, srcs, srcs[::-1]):
+        alloc = TdmAllocator(MESH, N_SLOTS)
+        circs.append(alloc.allocate_batch(
+            [CopyRequest(order[0], dst, 128, op="reduce", srcs=order)],
+            cycle=0)[0].circuit)
+    assert circs[0].hops == circs[1].hops
+    assert circs[2].hops[0][0] == srcs[1]   # reversed order, other root
+
+
+# --- request validation and backend contracts --------------------------------
+def test_reduce_request_validation():
+    with pytest.raises(ValueError):
+        reduce_request([], 3)
+    with pytest.raises(ValueError):
+        reduce_request([1, 1], 3)
+    with pytest.raises(ValueError):
+        reduce_request([1, 3], 3)        # dst among sources
+    r = reduce_request([1, 2], 3, nbytes=64)
+    assert r.op == "reduce" and r.srcs == (1, 2)
+
+
+def test_rounds_backend_rejects_reduce():
+    ring = NomFabric(shape=(8,), torus=True)
+    with pytest.raises(ValueError, match="nom_allreduce"):
+        ring.schedule([reduce_request([(1,), (2,)], (0,), nbytes=64)])
+
+
+def test_nom_light_rejects_cross_layer_sources():
+    light = TdmAllocatorLight(MESH, N_SLOTS)
+    srcs = (MESH.node_id(1, 1, 0), MESH.node_id(2, 2, 3))  # two layers
+    with pytest.raises(ValueError, match="same-layer"):
+        light.allocate_batch(
+            [CopyRequest(srcs[0], MESH.node_id(4, 4, 0), 64,
+                         op="reduce", srcs=srcs)], cycle=0)
+
+
+def test_fabric_session_counts_and_policy_context_fanin():
+    fab = NomFabric(mesh=make_topology(1, mesh=(4, 4, 2)))
+    seen = {}
+
+    from repro.core.fabric import register_policy, unregister_policy
+
+    @register_policy("probe_fanin")
+    def probe(reqs, ctx):
+        seen["fanin"] = ctx.fanin
+        seen["dist"] = ctx.distances
+        return list(range(len(reqs)))
+
+    try:
+        _res, rep = fab.schedule(
+            [reduce_request([1, 2, 3, 9], 0, nbytes=128),
+             TransferRequest(src=5, dst=6, nbytes=128)],
+            policy="probe_fanin")
+    finally:
+        unregister_policy("probe_fanin")
+    assert rep.n_reduce == 1 and rep.n_scheduled == 2
+    assert seen["fanin"] == (4, 1)
+    mesh = fab.mesh
+    assert seen["dist"][0] == max(mesh.manhattan(s, 0) for s in (1, 2, 3, 9))
+    assert fab.telemetry()["reduce_requests"] == 1
+
+
+# --- cross-stack reduce trees -------------------------------------------------
+def _cluster():
+    return FabricCluster(topology=make_topology(2, mesh=(4, 4, 2)))
+
+
+def test_cross_stack_reduce_builds_tree():
+    cluster = _cluster()
+    t = reduce_request([(0, 5), (0, 9), (1, 6), (1, 10)], (0, 2), nbytes=256)
+    (res,), rep = cluster.schedule([t])
+    tree = res.circuit
+    assert isinstance(tree, ReduceTree) and tree.cross_stack
+    assert len(tree.legs) == 1          # one SerDes leg for stack 1
+    assert len(tree.partials) == 1      # stack 1 partial at its bridge
+    assert tree.local is not None       # stack-0 operands fan in locally
+    # Store-and-forward: the leg cannot inject before its partial drains.
+    assert tree.legs[0].start_cycle >= tree.partials[0].end_cycle
+    assert rep.n_reduce == 1
+    tel = cluster.telemetry()
+    assert tel["cross_reduce_trees"] == 1 and tel["reduce_rollbacks"] == 0
+
+
+def test_cross_stack_reduce_rollback_is_byte_identical():
+    """Saturate the destination bank's LOCAL port so the tree's local
+    fan-in cannot commit: the whole tree must roll back leaving every
+    slot table and the SerDes link state untouched."""
+    cluster = _cluster()
+    mesh0 = cluster.topology.stacks[0]
+    dst = 2
+    # 16 long same-stack copies into dst fill all LOCAL-port slots for
+    # hundreds of windows past cycle 0, far beyond the search wave.
+    fill = [TransferRequest(src=(s + 3) % mesh0.n_nodes, dst=dst,
+                            nbytes=8 * N_SLOTS * 256,
+                            src_stack=0, dst_stack=0)
+            for s in range(N_SLOTS + 8)]
+    cluster.schedule(fill, cycle=0)
+    saved, link_windows = cluster._tree_snapshot()
+    before = [exp.copy() for _pe, exp in saved]
+    # One stack-1 partial + SerDes leg commit first; the local fan-in at
+    # the saturated destination then fails, unwinding both.  Pinning the
+    # anchor at cycle 0 stops the tree from sliding past the fill.
+    t = reduce_request([(1, 5), (1, 9), (0, 6)], (0, dst), nbytes=256)
+    (res,), _rep = cluster.schedule([t], cycle=0)
+    assert res.circuit is None
+    assert cluster.telemetry()["reduce_rollbacks"] == 1
+    after, after_links = cluster._tree_snapshot()
+    for (pe, _), exp in zip(after, before):
+        np.testing.assert_array_equal(pe.expiry, exp)
+    assert after_links == link_windows
+
+
+def test_same_stack_reduce_localizes_to_stack_fabric():
+    cluster = _cluster()
+    t = reduce_request([(1, 5), (1, 9)], (1, 2), nbytes=128)
+    (res,), rep = cluster.schedule([t])
+    c = res.circuit
+    assert not isinstance(c, ReduceTree) and c.srcs == (5, 9)
+    assert rep.n_reduce == 1 and rep.n_cross_stack == 0
+    assert cluster.telemetry()["cross_reduce_trees"] == 0
+
+
+# --- memsim: timing, backpressure, energy ------------------------------------
+def test_gradagg_breakdown_has_reduce_share():
+    reqs = generate(WorkloadSpec("gradAgg40", n_requests=4000))
+    mix = traffic_breakdown(reqs)
+    assert abs(mix["reduce"] - 0.40) < 0.05
+    assert any(r.op == Op.REDUCE and len(r.src_banks) == 4 for r in reqs)
+
+
+def test_memsim_reduce_elems_and_energy():
+    """Every fan-in merges (k-1) * nbytes/8 elements at the destination
+    ALU; the energy model charges e_reduce_elem per element on the nom
+    config and nothing on configs that never engage the fabric ALU."""
+    reqs = [Request(Op.REDUCE, 3, 0, 40, 1, nbytes=4096,
+                    src_banks=(3, 17, 25, 33)),
+            Request(Op.REDUCE, 5, 2, 80, 3, nbytes=4096,
+                    src_banks=(5, 50))]
+    res = simulate(reqs, SimParams(config="nom"))
+    want = 3 * (4096 // 8) + 1 * (4096 // 8)
+    assert res.extra["nom_reduce_elems"] == want
+    e = energy_pj(res)
+    assert e["reduce_alu"] == pytest.approx(
+        want * EnergyParams().e_reduce_elem)
+    conv = simulate(reqs, SimParams(config="conventional"))
+    assert conv.extra.get("nom_reduce_elems", 0) == 0
+    assert energy_pj(conv)["reduce_alu"] == 0.0
+    # Instruction/byte accounting is config-independent: (k+1) lines
+    # touched per line of payload, k operand pages moved.
+    assert res.instructions == conv.instructions
+    assert res.copy_bytes == conv.copy_bytes == 4096 * 4 + 4096 * 2
+
+
+def test_memsim_busy_alu_backpressures_second_fanin():
+    """Two immediate fan-ins at one destination: the second arrives
+    while the first still owns the ALU (transfer + dwell windows) and
+    must wait — visible as nom_reduce_stalls."""
+    reqs = [Request(Op.REDUCE, 3, 0, 40, 1, nbytes=4096,
+                    src_banks=(3, 17, 25, 33)),
+            Request(Op.REDUCE, 5, 2, 40, 3, nbytes=4096,
+                    src_banks=(5, 50, 66, 70))]
+    res = simulate(reqs, SimParams(config="nom"))
+    assert res.extra["nom_reduce_stalls"] >= 1
+    far = [Request(Op.REDUCE, 3, 0, 40, 1, nbytes=4096,
+                   src_banks=(3, 17, 25, 33)),
+           Request(Op.REDUCE, 5, 2, 90, 3, nbytes=4096,
+                   src_banks=(5, 50, 66, 70))]
+    res2 = simulate(far, SimParams(config="nom"))
+    assert res2.extra["nom_reduce_stalls"] == 0   # distinct destinations
+
+
+def test_memsim_nom_beats_conventional_on_gradagg():
+    spec = WorkloadSpec("gradAgg40", n_requests=1200)
+    reqs = generate(spec)
+    ipc = {cfg: simulate(reqs, SimParams(config=cfg)).ipc
+           for cfg in ("conventional", "rowclone", "nom")}
+    assert ipc["nom"] > ipc["rowclone"] > ipc["conventional"]
+
+
+# --- host-side collective planners -------------------------------------------
+def test_nom_reduce_planner_roundtrip():
+    fab = NomFabric(mesh=make_topology(1, mesh=(4, 4, 2)))
+    res, rep = nom_reduce(fab, srcs=[1, 2, 3], dst=0, nbytes=256)
+    assert rep.n_reduce == 1 and res.circuit.srcs == (1, 2, 3)
+
+
+def test_nom_allreduce_banks_window_accounting():
+    """len(banks) scatter fan-ins + len(banks)*(len(banks)-1) gather
+    copies, all through one session; every bank both reduces its shard
+    and receives every peer's reduced shard."""
+    fab = NomFabric(mesh=make_topology(1, mesh=(4, 4, 2)))
+    banks = [0, 5, 10, 15]
+    results, rep = nom_allreduce_banks(fab, banks, nbytes=4096)
+    n = len(banks)
+    assert len(results) == n + n * (n - 1)
+    assert rep.n_reduce == n
+    assert rep.n_scheduled == n + n * (n - 1)
+    # Shards partition the vector: ceil(nbytes / n) bytes per fan-in.
+    shard = -(-4096 // n)
+    scatter = results[:n]
+    for res in scatter:
+        assert res.circuit.srcs and len(res.circuit.srcs) == n - 1
+        assert res.circuit.n_windows >= fab.allocator.n_windows_for(shard)
+    assert fab.telemetry()["reduce_requests"] == n
+    with pytest.raises(ValueError):
+        nom_allreduce_banks(fab, [1, 1, 2], nbytes=64)
+    with pytest.raises(ValueError):
+        nom_allreduce_banks(fab, [1], nbytes=64)
+
+
+def _tdm_report(n: int, stall: int, conflicts: int) -> ScheduleReport:
+    return ScheduleReport(backend="tdm", n_requests=n, n_scheduled=n,
+                          n_windows=1, max_inflight=n, avg_inflight=1.0,
+                          stall_cycles=stall, conflicts=conflicts)
+
+
+def test_auto_policy_learns_extra_slots():
+    """Satellite: the auto policy's slot-budget tuner grows
+    ``nom_extra_slots`` on stall-heavy, conflict-free flush reports
+    (capped at half the TDM frame), shrinks it back under commit
+    conflicts, and the live session actually applies the learned budget
+    to bare copies that did not ask for a wider one."""
+    fab = NomFabric(mesh=make_topology(1, mesh=(4, 4, 2)), policy="auto")
+    assert fab.telemetry()["nom_extra_slots"] == 0
+    cap = fab.n_slots // 2 - 1
+    # Grow regime: stalls past a full frame per request, clean commits.
+    for _ in range(cap + 3):
+        fab._auto_extra_slots(
+            _tdm_report(4, stall=4 * (fab.n_slots + 1), conflicts=0))
+    assert fab.telemetry()["nom_extra_slots"] == cap
+    # The learned budget widens a bare copy on an idle corridor: the
+    # `_schedule_tdm` path rewrites max_extra_slots before allocation.
+    (res,), _rep = fab.schedule(
+        [TransferRequest(src=20, dst=23, nbytes=1 << 14)])
+    assert res.circuit.slots_per_window > 1
+    # Shrink regime: conflict rate over a quarter of the batch backs off
+    # one step per flush, never below zero.
+    for _ in range(cap + 2):
+        fab._auto_extra_slots(_tdm_report(4, stall=0, conflicts=2))
+    assert fab.telemetry()["nom_extra_slots"] == 0
+    # Quiet flushes leave the budget untouched.
+    fab._auto_extra_slots(_tdm_report(4, stall=0, conflicts=0))
+    assert fab.telemetry()["nom_extra_slots"] == 0
