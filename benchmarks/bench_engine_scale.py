@@ -1,0 +1,181 @@
+"""Control-plane scale sweep: vectorized vs scalar serving engine.
+
+PR 7's SLO harness proved the admission *semantics*; this benchmark
+measures whether the control plane itself can serve the ROADMAP's
+millions-of-tenants regime.  For each tenant-queue scale it drives the
+same four phases through an `Engine(control_plane="vector")` and the
+scalar reference plane:
+
+* **open** — N ``open_tenant`` calls against an exhausted pool (the
+  duplicate check + queue push; scalar pays an O(queue) name scan per
+  open, the vector plane an indexed lookup);
+* **admit** — capacity-freeing ``close_tenant`` calls, each triggering
+  one strategy drain over the ~N-deep queue (scalar: ``sorted`` with a
+  Python key per waiter; vector: one numpy lexsort);
+* **tick** — control-plane-only ``schedule_tick([])`` heartbeats
+  (scalar: a Python expiry scan of the queue; vector: one boolean
+  mask);
+* **close** — a mass expiry past the aging horizon plus teardown of the
+  remaining active tenants (terminal accounting is per-ticket Python on
+  both planes, so this phase is reported but not gated).
+
+The scalar plane is measured up to ``SCALAR_CAP`` tenants (it is
+quadratic in the open phase — the point of the PR); the vector plane
+continues to the 1M-tenant soak.  ``run()`` writes
+``BENCH_engine_scale.json``: the per-size throughput grid with
+vector/scalar speedups, the soak record for the largest vector size,
+and the ``differential`` section asserting every registered strategy's
+vector form returns the byte-identical admission order as its scalar
+reference (healthy and stalled fabric).  ``scripts/ci.sh`` gates the
+schema, the differential, and vector >= 10x scalar on open/admit/tick
+at 10k+ tenants; ``run(quick=True)`` downsizes to {1k, 10k} but keeps
+both planes so the dominance gate is always exercised.
+"""
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.serving.admission import (AdmissionContext, AdmissionTicket,
+                                     TicketColumns, get_admission,
+                                     registered_admissions)
+from repro.serving.loadgen import make_slo_engine
+
+RECORD_PATH = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_engine_scale.json"
+
+SIZES = (1_000, 10_000, 100_000, 1_000_000)
+SIZES_QUICK = (1_000, 10_000)
+SCALAR_CAP = 10_000      # the scalar plane is quadratic in the open phase
+STRATEGY = "deadline"
+AGE = 1 << 20            # deadline_ticks horizon, beyond every phase
+DRAINS = 16
+TICKS = 8
+DIFF_N = 512
+GATE_MIN_SPEEDUP = 10.0
+GATE_MIN_SIZE = 10_000
+
+
+def _measure(plane: str, n: int) -> dict:
+    eng = make_slo_engine(STRATEGY, tenant_queue_depth=n,
+                          deadline_ticks=AGE, control_plane=plane)
+    wall0 = time.perf_counter()
+    t0 = time.perf_counter()
+    for i in range(n):
+        eng.open_tenant(f"t{i}", 1,
+                        deadline=2 * AGE if i % 2 else None,
+                        priority=float(1 + i % 3), klass=f"k{i % 4}")
+    t_open = time.perf_counter() - t0
+    waiting = len(eng.tenant_queue.items)
+    t0 = time.perf_counter()
+    for _ in range(DRAINS):
+        eng.close_tenant(eng.tenants()[0])   # frees capacity -> one drain
+    t_admit = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(TICKS):
+        eng.schedule_tick([])                # ages the queue, moves nothing
+    t_tick = time.perf_counter() - t0
+    remaining = len(eng.tenant_queue.items)
+    active = len(eng.tenants())
+    t0 = time.perf_counter()
+    eng._tick = AGE                          # jump to the aging horizon
+    eng.schedule_tick([])                    # mass expiry of the queue
+    for name in eng.tenants():
+        eng.close_tenant(name)
+    t_close = time.perf_counter() - t0
+    tel = eng.transfer_telemetry()
+    assert not eng.tenant_queue.items and not eng.tenants()
+    return {
+        "tenants": n,
+        "waiting_peak": waiting,
+        "open_per_s": n / max(t_open, 1e-9),
+        # admit/tick rates are queue entries processed per second (each
+        # drain orders, and each tick ages, the whole waiting queue).
+        "admit_per_s": DRAINS * waiting / max(t_admit, 1e-9),
+        "tick_per_s": TICKS * remaining / max(t_tick, 1e-9),
+        "close_per_s": (remaining + active) / max(t_close, 1e-9),
+        "drains": DRAINS,
+        "expired": tel.get("tenant_queue_expired", 0),
+        "open_s": round(t_open, 4), "admit_s": round(t_admit, 4),
+        "tick_s": round(t_tick, 4), "close_s": round(t_close, 4),
+        "wall_s": round(time.perf_counter() - wall0, 4),
+    }
+
+
+def _differential() -> dict:
+    """Admission-order identity: every registered strategy's vector form
+    vs its scalar reference over one permuted random queue, under a
+    healthy and a stalled fabric snapshot."""
+    rng = np.random.default_rng(42)
+    waiters = [(int(rng.integers(0, 64)), AdmissionTicket(
+        name=f"d{i}", batch=int(rng.integers(1, 9)),
+        klass=f"k{int(rng.integers(0, 5))}",
+        priority=float(rng.choice([0.25, 1.0, 2.0, 4.0])),
+        deadline=(None if rng.random() < 0.3
+                  else int(rng.integers(0, 256))),
+        seq=i)) for i in range(DIFF_N)]
+    waiters = [waiters[int(i)] for i in rng.permutation(DIFF_N)]
+    cols = TicketColumns()
+    cols.rebuild(waiters)
+    admits = {"k0": 3, "k2": 7}
+    out = {}
+    for label, fab in (("", {}),
+                       ("@stalled", {"stall_cycles": 999, "scheduled": 10})):
+        for name in registered_admissions():
+            fn = get_admission(name)
+            if fn.vector is None:
+                continue
+            ref = list(fn(waiters, AdmissionContext(37, admits,
+                                                    fabric=dict(fab))))
+            vec = [int(x) for x in fn.vector(
+                cols, AdmissionContext(37, admits, fabric=dict(fab)))]
+            out[name + label] = ref == vec
+    return out
+
+
+def run(quick: bool = False):
+    sizes = SIZES_QUICK if quick else SIZES
+    record = {
+        "schema": "nom/bench-engine-scale/v1",
+        "quick": quick,
+        "engine": {"mesh": [4, 4, 2], "strategy": STRATEGY,
+                   "deadline_ticks": AGE},
+        "sizes": {},
+        "soak": {},
+        "differential": _differential(),
+    }
+    rows = []
+    for n in sizes:
+        entry = {"vector": _measure("vector", n)}
+        if n <= SCALAR_CAP:
+            entry["scalar"] = _measure("scalar", n)
+            entry["speedup"] = {
+                k: round(entry["vector"][f"{k}_per_s"]
+                         / max(entry["scalar"][f"{k}_per_s"], 1e-9), 2)
+                for k in ("open", "admit", "tick", "close")}
+        record["sizes"][str(n)] = entry
+        for plane in ("vector", "scalar"):
+            if plane not in entry:
+                continue
+            e = entry[plane]
+            rows.append((f"engine_scale/{plane}/{n}",
+                         e["wall_s"] * 1e6,
+                         f"open={e['open_per_s']:.0f}/s"
+                         f";admit={e['admit_per_s']:.0f}/s"
+                         f";tick={e['tick_per_s']:.0f}/s"
+                         f";close={e['close_per_s']:.0f}/s"))
+    big = record["sizes"][str(sizes[-1])]["vector"]
+    record["soak"] = {"tenants": sizes[-1], "completed": True,
+                      "expired": big["expired"],
+                      "wall_s": big["wall_s"]}
+    all_match = all(record["differential"].values())
+    rows.append(("engine_scale/differential", 0.0,
+                 f"strategies_identical={all_match}"))
+    RECORD_PATH.write_text(json.dumps(record, indent=1, sort_keys=True))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

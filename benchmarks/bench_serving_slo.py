@@ -31,7 +31,7 @@ RECORD_PATH = pathlib.Path(__file__).resolve().parent.parent / \
 SEED = 7
 TICKS = 160
 TICKS_QUICK = 48
-STRATEGIES = ("fifo", "deadline", "priority", "hybrid")
+STRATEGIES = ("fifo", "deadline", "priority", "hybrid", "stall_aware")
 DOMINANCE_MIX = "deadline_heavy"
 
 

@@ -5,12 +5,13 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_ablations, bench_energy, bench_fabric_autotune,
-                        bench_freq_scaling, bench_ipc, bench_multistack,
-                        bench_nom_a2a, bench_reduce, bench_roofline,
-                        bench_sched_policies, bench_serving_slo,
-                        bench_serving_tenancy, bench_slot_alloc,
-                        bench_traffic_mix, bench_tsv_conflict)
+from benchmarks import (bench_ablations, bench_energy, bench_engine_scale,
+                        bench_fabric_autotune, bench_freq_scaling, bench_ipc,
+                        bench_multistack, bench_nom_a2a, bench_reduce,
+                        bench_roofline, bench_sched_policies,
+                        bench_serving_slo, bench_serving_tenancy,
+                        bench_slot_alloc, bench_traffic_mix,
+                        bench_tsv_conflict)
 
 ALL = [
     ("traffic_mix(Fig3)", bench_traffic_mix),
@@ -24,6 +25,7 @@ ALL = [
     ("fabric_autotune", bench_fabric_autotune),
     ("serving_tenancy", bench_serving_tenancy),
     ("serving_slo", bench_serving_slo),
+    ("engine_scale", bench_engine_scale),
     ("multistack", bench_multistack),
     ("reduce", bench_reduce),
     ("ablations", bench_ablations),
@@ -35,8 +37,8 @@ ALL = [
 # A bench whose run() accepts a ``quick`` kwarg is told which mode it is
 # in (serving_slo shrinks its tick budget but keeps its record grid).
 QUICK = ("tsv_conflict", "slot_alloc", "nom_a2a", "sched_policies",
-         "fabric_autotune", "serving_tenancy", "serving_slo", "multistack",
-         "reduce")
+         "fabric_autotune", "serving_tenancy", "serving_slo", "engine_scale",
+         "multistack", "reduce")
 
 
 def main() -> None:

@@ -53,7 +53,8 @@ def check_serving_api_documented() -> None:
     from repro.serving import admission, loadgen
     corpus = "\n".join((ROOT / rel).read_text() for rel in DOC_PAGES)
     for cls in (Engine, BankPool, NomFabric, StackedTopology, FabricCluster,
-                loadgen.LoadGen, admission.AdmissionContext):
+                loadgen.LoadGen, admission.AdmissionContext,
+                admission.TicketColumns):
         for m in public_methods(cls):
             # Word-boundary match: "release" must not satisfy "lease".
             if not re.search(rf"\b{re.escape(m)}\b", corpus):
@@ -66,6 +67,21 @@ def check_serving_api_documented() -> None:
                      f"no doc page ({', '.join(DOC_PAGES)})")
     check_compiled_pipeline_documented(corpus)
     check_reduce_documented(corpus)
+    check_control_plane_documented(corpus)
+
+
+def check_control_plane_documented(corpus: str) -> None:
+    """The batched control-plane surface (PR 10): the plane knob and its
+    vocabulary, the stall-coupled strategy and its threshold/signal, and
+    the closed-loop retry ledger must each appear in a doc page."""
+    names = ["CONTROL_PLANES", "control_plane", "TicketColumns",
+             "STALL_PRESSURE", "stall_aware", "stall_pressure",
+             "retry_budget", "retries", "retry_admitted", "backoff_ticks",
+             "retrying"]
+    for name in names:
+        if not re.search(rf"\b{re.escape(name)}\b", corpus):
+            fail(f"control-plane name {name} is mentioned in no doc "
+                 f"page ({', '.join(DOC_PAGES)})")
 
 
 def check_compiled_pipeline_documented(corpus: str) -> None:

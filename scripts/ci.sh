@@ -21,7 +21,7 @@ python -m pytest -q -m multidevice tests/test_multidevice_alloc.py
 echo "== smoke: benchmarks (quick subset) =="
 # the gates below must see THIS run's records
 rm -f BENCH_alloc.json BENCH_multistack.json BENCH_serving.json \
-      BENCH_reduce.json
+      BENCH_reduce.json BENCH_engine_scale.json
 python benchmarks/run.py --quick
 
 echo "== perf record: BENCH_alloc.json =="
@@ -136,6 +136,59 @@ print(f"BENCH_serving.json OK: {len(mixes)} mixes x "
       f"{len(strategies)} strategies, dominance on {dom['mix']}: "
       f"deadline={dom['deadline_miss_rate']:.3f} < "
       f"fifo={dom['fifo_miss_rate']:.3f}")
+EOF
+
+echo "== perf record: BENCH_engine_scale.json =="
+python - <<'EOF'
+import json, pathlib, sys
+path = pathlib.Path("BENCH_engine_scale.json")
+if not path.is_file():
+    sys.exit("BENCH_engine_scale.json missing: benchmarks/run.py --quick "
+             "must write it")
+rec = json.loads(path.read_text())
+if rec.get("schema") != "nom/bench-engine-scale/v1":
+    sys.exit(f"BENCH_engine_scale.json schema {rec.get('schema')!r}: "
+             "expected nom/bench-engine-scale/v1")
+required = ("schema", "engine", "sizes", "soak", "differential")
+missing = [k for k in required if k not in rec]
+if missing:
+    sys.exit(f"BENCH_engine_scale.json missing keys: {missing}")
+bad = [k for k, ok in rec["differential"].items() if not ok]
+if bad:
+    sys.exit(f"BENCH_engine_scale.json: vectorized admission order "
+             f"diverged from the scalar reference for {bad}")
+if not rec["differential"]:
+    sys.exit("BENCH_engine_scale.json: differential section is empty")
+per_plane = ("open_per_s", "admit_per_s", "tick_per_s", "close_per_s")
+gated = 0
+for n, entry in rec["sizes"].items():
+    if "vector" not in entry:
+        sys.exit(f"BENCH_engine_scale.json sizes[{n}] missing vector plane")
+    for plane in ("vector", "scalar"):
+        for k in per_plane:
+            if plane in entry and k not in entry[plane]:
+                sys.exit(f"BENCH_engine_scale.json sizes[{n}][{plane}] "
+                         f"missing {k}")
+    # Dominance: the vector plane must beat scalar >= 10x on the three
+    # control-plane phases wherever both are measured at 10k+ tenants.
+    if int(n) >= 10_000 and "speedup" in entry:
+        gated += 1
+        for k in ("open", "admit", "tick"):
+            if entry["speedup"][k] < 10.0:
+                sys.exit(f"BENCH_engine_scale.json: vector plane only "
+                         f"{entry['speedup'][k]}x scalar on {k} at {n} "
+                         f"tenants (gate: >=10x)")
+if not gated:
+    sys.exit("BENCH_engine_scale.json: no 10k+ size with both planes "
+             "measured — the dominance gate never ran")
+if not rec["soak"].get("completed"):
+    sys.exit("BENCH_engine_scale.json: soak did not complete")
+sizes = sorted(int(n) for n in rec["sizes"])
+big = rec["sizes"][str(sizes[-1])]["vector"]
+print(f"BENCH_engine_scale.json OK: sizes={sizes} "
+      f"soak={rec['soak']['tenants']} tenants in {rec['soak']['wall_s']}s, "
+      f"10k speedups={rec['sizes'].get('10000', {}).get('speedup')} "
+      f"top open={big['open_per_s']:.0f}/s")
 EOF
 
 echo "== perf record: BENCH_reduce.json =="

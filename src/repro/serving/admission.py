@@ -22,7 +22,8 @@ Vocabulary:
   queued ``(arrival_tick, ticket)`` pairs.  Earlier positions get first
   claim on freed bank capacity;
 * :class:`AdmissionContext` is what a strategy may consult besides the
-  waiters themselves (the engine tick, per-class admission frequencies).
+  waiters themselves (the engine tick, per-class admission frequencies,
+  and — new — the fabric's stall/queue-wait telemetry).
 
 Shipped strategies (:func:`registered_admissions`):
 
@@ -43,20 +44,51 @@ Shipped strategies (:func:`registered_admissions`):
     ticks of slack) go first, strictest-first; everything else falls
     back to the priority weighting — urgent SLOs preempt, bulk traffic
     is otherwise utility-ordered.
+``"stall_aware"``
+    Telemetry-coupled: while the fabric underneath is healthy
+    (:meth:`AdmissionContext.stall_pressure` at or below
+    :data:`STALL_PRESSURE` stall cycles per scheduled circuit) it is
+    exactly the ``deadline`` discipline; once the fabric is stalling,
+    the lightest waiters (smallest ``batch`` — the fewest new circuits
+    per tick) admit first, so admission stops feeding a congested
+    fabric its heaviest streams.
 
 New strategies register with :func:`register_admission` without touching
 the engine; :func:`unregister_admission` removes experiments (built-ins
 are protected).  ``Engine(admission_strategy=...)`` selects per engine;
 per-class outcomes land in ``Engine.transfer_telemetry()``.
+
+Vectorized control plane
+------------------------
+
+At the scale the ROADMAP aims for (millions of tenant arrivals per run)
+a per-waiter ``sorted(..., key=lambda)`` is the control plane's
+bottleneck, not the fabric.  Every built-in therefore ships a second,
+*vectorized* form operating on :class:`TicketColumns` — the packed
+structure-of-arrays mirror of the queue (``seq`` / ``deadline`` /
+``priority`` / klass-id / ``batch`` / arrival tick as numpy columns) —
+computing the identical permutation as one ``numpy.lexsort`` per drain.
+``register_admission(name, vector=...)`` attaches the vector form;
+strategies without one (experiments) simply fall back to the scalar
+function.  Bit-identity of every built-in's two forms is pinned by the
+differential harness in ``tests/test_serving_slo.py`` and recorded in
+``BENCH_engine_scale.json``.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Mapping
 
+import numpy as np
+
 #: Slack (in engine ticks) under which the hybrid strategy treats a
 #: deadline waiter as urgent and lets it preempt the priority ordering.
 HYBRID_SLACK = 8
+
+#: Fabric stall pressure (stall cycles per scheduled circuit) above
+#: which the ``stall_aware`` strategy switches from deadline order to
+#: lightest-first admission.
+STALL_PRESSURE = 2.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,22 +124,138 @@ class AdmissionContext:
       tick: the engine tick the drain runs at (slack = deadline - tick).
       klass_admits: admissions granted so far per service class — the
         frequency signal the ``priority`` strategy weights by.
+      fabric: the engine's fabric telemetry snapshot (the dict
+        ``NomFabric.telemetry()`` / ``FabricCluster.telemetry()``
+        returns), resolved lazily on first access so strategies that
+        never look pay nothing; ``{}`` when the engine runs without a
+        fabric.
     """
 
-    def __init__(self, tick: int, klass_admits: Mapping[str, int]):
+    def __init__(self, tick: int, klass_admits: Mapping[str, int],
+                 fabric=None):
         self.tick = tick
         self.klass_admits = klass_admits
+        self._fabric = fabric
 
     def frequency(self, klass: str) -> int:
         """Admissions granted to ``klass`` so far (0 for a new class)."""
         return self.klass_admits.get(klass, 0)
 
+    @property
+    def fabric(self) -> Mapping:
+        """The fabric telemetry mapping (lazily resolved; ``{}`` when
+        the engine has no fabric)."""
+        if callable(self._fabric):
+            self._fabric = self._fabric()
+        return self._fabric or {}
+
+    def stall_pressure(self) -> float:
+        """Fabric stall cycles per scheduled circuit — the congestion
+        signal ``stall_aware`` switches on (0.0 without a fabric)."""
+        tel = self.fabric
+        return tel.get("stall_cycles", 0) / max(1, tel.get("scheduled", 0))
+
+
+class TicketColumns:
+    """Packed structure-of-arrays mirror of a tenant admission queue.
+
+    One row per queued ``(arrival_tick, AdmissionTicket)`` pair, in
+    queue-list order; columns are numpy arrays (``at`` arrival tick,
+    ``seq``, ``deadline`` with ``-1`` for deadline-less, ``priority``,
+    ``klass`` id, ``batch``), capacity-doubled so :meth:`append` is
+    amortized O(1) and :meth:`compact` is one boolean-mask pass.  Klass
+    labels are interned to small ints (``klass_names`` maps back);
+    :meth:`frequencies` expands a per-klass admission count mapping to a
+    per-row vector.  This is what the vector form of a strategy sorts —
+    one ``numpy.lexsort`` over columns instead of a Python ``sorted``
+    over tickets.
+    """
+
+    _FIELDS = (("at", np.int64), ("seq", np.int64), ("deadline", np.int64),
+               ("priority", np.float64), ("klass", np.int32),
+               ("batch", np.int64))
+
+    def __init__(self, capacity: int = 64):
+        self.n = 0
+        self._cap = max(1, capacity)
+        for name, dt in self._FIELDS:
+            setattr(self, "_" + name, np.zeros(self._cap, dt))
+        self._klass_ids: dict[str, int] = {}
+        self.klass_names: list[str] = []
+
+    def __len__(self) -> int:
+        return self.n
+
+    def __getattr__(self, name):
+        # Column views: cols.seq is the live prefix of the backing array.
+        if any(name == f for f, _dt in self._FIELDS):
+            return getattr(self, "_" + name)[:self.n]
+        raise AttributeError(name)
+
+    def klass_id(self, klass: str) -> int:
+        """Intern a klass label to its small-int column value."""
+        kid = self._klass_ids.get(klass)
+        if kid is None:
+            kid = self._klass_ids[klass] = len(self.klass_names)
+            self.klass_names.append(klass)
+        return kid
+
+    def _grow(self, need: int) -> None:
+        while self._cap < need:
+            self._cap *= 2
+        for name, _dt in self._FIELDS:
+            old = getattr(self, "_" + name)
+            fresh = np.zeros(self._cap, old.dtype)
+            fresh[:self.n] = old[:self.n]
+            setattr(self, "_" + name, fresh)
+
+    def append(self, at: int, tk: AdmissionTicket) -> None:
+        """Add one queued waiter's row (amortized O(1))."""
+        if self.n == self._cap:
+            self._grow(self.n + 1)
+        i = self.n
+        self._at[i] = at
+        self._seq[i] = tk.seq
+        self._deadline[i] = -1 if tk.deadline is None else tk.deadline
+        self._priority[i] = tk.priority
+        self._klass[i] = self.klass_id(tk.klass)
+        self._batch[i] = tk.batch
+        self.n = i + 1
+
+    def compact(self, keep: np.ndarray) -> None:
+        """Drop the rows where boolean ``keep`` is False (one mask pass)."""
+        kept = int(np.count_nonzero(keep))
+        if kept == self.n:
+            return
+        for name, _dt in self._FIELDS:
+            col = getattr(self, "_" + name)
+            col[:kept] = col[:self.n][keep]
+        self.n = kept
+
+    def rebuild(self, items) -> None:
+        """Resynchronize from the queue's backing list (used after an
+        external mutation of ``AdmissionQueue.items`` is detected)."""
+        self.n = 0
+        if len(items) > self._cap:
+            self._grow(len(items))
+        for at, tk in items:
+            self.append(at, tk)
+
+    def frequencies(self, klass_admits: Mapping[str, int]) -> np.ndarray:
+        """Per-row admitted-so-far counts for the rows' klasses."""
+        table = np.array([klass_admits.get(k, 0)
+                          for k in self.klass_names], np.float64)
+        if not len(table):
+            return np.zeros(self.n, np.float64)
+        return table[self.klass]
+
 
 _ADMISSIONS: dict[str, object] = {}
-_BUILTINS = ("fifo", "deadline", "priority", "hybrid")
+_BUILTINS = ("fifo", "deadline", "priority", "hybrid", "stall_aware")
 
 
-def register_admission(name: str, *, head_blocking: bool = False):
+def register_admission(name: str, *, head_blocking: bool = False,
+                       vector=None):
     """Decorator registering an admission strategy under ``name``.
 
     A strategy is ``fn(waiters, ctx: AdmissionContext) -> iterable[int]``
@@ -117,7 +265,10 @@ def register_admission(name: str, *, head_blocking: bool = False):
     the first waiter that does not fit blocks the rest of the drain
     (``fifo`` uses this to preserve exact arrival order); the default is
     best-effort — a waiter that does not fit is skipped and keeps its
-    place for the next drain.  Registering a taken name raises
+    place for the next drain.  ``vector`` optionally attaches the
+    batched form ``vec(cols: TicketColumns, ctx) -> numpy permutation``
+    that a vectorized engine uses instead of the scalar function — it
+    must compute the *identical* order.  Registering a taken name raises
     ``ValueError``.
     """
     def deco(fn):
@@ -125,6 +276,7 @@ def register_admission(name: str, *, head_blocking: bool = False):
             raise ValueError(f"admission strategy {name!r} is already "
                              "registered")
         fn.head_blocking = head_blocking
+        fn.vector = vector
         _ADMISSIONS[name] = fn
         return fn
     return deco
@@ -160,14 +312,61 @@ def _seq(waiters, i: int) -> int:
     return waiters[i][1].seq
 
 
-@register_admission("fifo", head_blocking=True)
+# -- vector forms ------------------------------------------------------------
+# Each computes the exact permutation its scalar twin returns.  lexsort
+# orders by the LAST key first, so every form passes ``cols.seq`` as the
+# first (least-significant) key — the universal FIFO tie-break.
+
+def _fifo_vec(cols: TicketColumns, ctx: AdmissionContext) -> np.ndarray:
+    return np.argsort(cols.seq, kind="stable")
+
+
+def _deadline_keys(cols: TicketColumns):
+    has = cols.deadline >= 0
+    return np.where(has, cols.deadline, 0), (~has).astype(np.int64)
+
+
+def _deadline_vec(cols: TicketColumns, ctx: AdmissionContext) -> np.ndarray:
+    dl, no_dl = _deadline_keys(cols)
+    return np.lexsort((cols.seq, dl, no_dl))
+
+
+def _weight_vec(cols: TicketColumns, ctx: AdmissionContext) -> np.ndarray:
+    return cols.priority * (1.0 + cols.frequencies(ctx.klass_admits))
+
+
+def _priority_vec(cols: TicketColumns, ctx: AdmissionContext) -> np.ndarray:
+    return np.lexsort((cols.seq, -_weight_vec(cols, ctx)))
+
+
+def _hybrid_vec(cols: TicketColumns, ctx: AdmissionContext) -> np.ndarray:
+    has = cols.deadline >= 0
+    slack = cols.deadline - ctx.tick
+    urgent = has & (slack <= HYBRID_SLACK)
+    k1 = (~urgent).astype(np.int64)                 # urgent first
+    k2 = np.where(urgent, slack, 0)                 # strictest first
+    k3 = np.where(urgent, 0.0, -_weight_vec(cols, ctx))
+    return np.lexsort((cols.seq, k3, k2, k1))
+
+
+def _stall_aware_vec(cols: TicketColumns,
+                     ctx: AdmissionContext) -> np.ndarray:
+    if ctx.stall_pressure() <= STALL_PRESSURE:
+        return _deadline_vec(cols, ctx)
+    dl, no_dl = _deadline_keys(cols)
+    return np.lexsort((cols.seq, dl, no_dl, cols.batch))
+
+
+# -- scalar forms (the reference semantics) ----------------------------------
+
+@register_admission("fifo", head_blocking=True, vector=_fifo_vec)
 def _fifo(waiters, ctx: AdmissionContext):
     """Stable arrival order (by ticket ``seq``, never list position),
     head-blocking — the engine's legacy discipline."""
     return sorted(range(len(waiters)), key=lambda i: _seq(waiters, i))
 
 
-@register_admission("deadline")
+@register_admission("deadline", vector=_deadline_vec)
 def _deadline(waiters, ctx: AdmissionContext):
     """Strictest-deadline-first; deadline-less waiters trail in FIFO
     order.  Ties (equal deadlines) break by arrival ``seq``."""
@@ -182,7 +381,7 @@ def _weight(tk: AdmissionTicket, ctx: AdmissionContext) -> float:
     return tk.priority * (1.0 + ctx.frequency(tk.klass))
 
 
-@register_admission("priority")
+@register_admission("priority", vector=_priority_vec)
 def _priority(waiters, ctx: AdmissionContext):
     """Descending frequency-weighted priority
     (``priority * (1 + admitted_so_far(klass))``), FIFO among equals."""
@@ -191,7 +390,7 @@ def _priority(waiters, ctx: AdmissionContext):
                                  _seq(waiters, i)))
 
 
-@register_admission("hybrid")
+@register_admission("hybrid", vector=_hybrid_vec)
 def _hybrid(waiters, ctx: AdmissionContext):
     """Urgent deadlines first, utility-weighted otherwise: a deadline
     waiter with slack <= :data:`HYBRID_SLACK` preempts (strictest
@@ -206,6 +405,25 @@ def _hybrid(waiters, ctx: AdmissionContext):
     return sorted(range(len(waiters)), key=key)
 
 
-__all__ = ["HYBRID_SLACK", "AdmissionContext", "AdmissionTicket",
-           "get_admission", "register_admission", "registered_admissions",
+@register_admission("stall_aware", vector=_stall_aware_vec)
+def _stall_aware(waiters, ctx: AdmissionContext):
+    """Fabric-coupled admission: deadline order while the fabric is
+    healthy; lightest-first (ascending ``batch``, then strictest
+    deadline, then ``seq``) once :meth:`AdmissionContext.stall_pressure`
+    exceeds :data:`STALL_PRESSURE` — a congested fabric should not be
+    fed its heaviest waiters first."""
+    if ctx.stall_pressure() <= STALL_PRESSURE:
+        return _deadline(waiters, ctx)
+
+    def key(i):
+        tk = waiters[i][1]
+        has = tk.deadline is not None
+        return (tk.batch, 0 if has else 1,
+                tk.deadline if has else 0, tk.seq)
+    return sorted(range(len(waiters)), key=key)
+
+
+__all__ = ["HYBRID_SLACK", "STALL_PRESSURE", "AdmissionContext",
+           "AdmissionTicket", "TicketColumns", "get_admission",
+           "register_admission", "registered_admissions",
            "unregister_admission"]

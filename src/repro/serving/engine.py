@@ -30,6 +30,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.fabric import AdmissionQueue, FabricCluster, NomFabric
@@ -37,12 +38,43 @@ from repro.core.scheduler import ScheduleReport, TransferRequest
 from repro.core.topology import Mesh3D, StackedTopology, make_topology
 from repro.models.lm import CausalLM, EncDecLM
 from repro.serving.admission import (AdmissionContext, AdmissionTicket,
-                                     get_admission)
+                                     TicketColumns, get_admission)
 from repro.serving.placement import (BankPool, LeafSpec, step_requests,
                                      teardown_requests)
 
 # Engine admission mode -> fabric/queue overflow behavior.
 _ADMISSION = {"queue": "block", "shed": "shed", "raise": "raise"}
+
+CONTROL_PLANES = ("vector", "scalar")
+
+
+class _ObservedList(list):
+    """The tenant queue's backing list, instrumented: any mutation made
+    *outside* the engine's own helpers (tests shuffle / filter
+    ``tenant_queue.items`` directly as a stand-in for arbitrary queue
+    states) fires the hook, so the engine's packed ticket columns and
+    queued-name index know to resynchronize before their next use."""
+
+    __slots__ = ("_hook",)
+
+    def __init__(self, iterable, hook):
+        super().__init__(iterable)
+        self._hook = hook
+
+    def _make(name):
+        base = getattr(list, name)
+
+        def method(self, *args, **kw):
+            self._hook()
+            return base(self, *args, **kw)
+        method.__name__ = name
+        return method
+
+    for _name in ("append", "extend", "insert", "pop", "remove", "clear",
+                  "sort", "reverse", "__setitem__", "__delitem__",
+                  "__iadd__", "__imul__"):
+        locals()[_name] = _make(_name)
+    del _make, _name
 
 
 @dataclasses.dataclass
@@ -53,6 +85,62 @@ class _Tenant:
     pos: int = 0               # write position (ring wrap -> evictions)
     stall_mark: int = 0        # tenant's attributed stalls at last repack
     last_active: int = 0       # engine tick of the last scheduled step
+    slot: int = -1             # row in the engine's SoA tenant table
+
+
+class _TenantTable:
+    """Structure-of-arrays mirror of the active-tenant set.
+
+    One row per admitted tenant (rows are recycled through a free list),
+    columns ``last_active`` (engine tick of the last scheduled step) and
+    ``lease_count`` (banks held).  Idle detection — previously a Python
+    scan over every ``_Tenant`` per exhausted admission — becomes one
+    boolean mask over the ``last_active`` column; only the (typically
+    tiny) idle candidate set is ever touched per-element again, to apply
+    the scalar path's exact ``(last_active, name)`` victim tie-break.
+    """
+
+    def __init__(self, capacity: int = 64):
+        self._cap = max(1, capacity)
+        self.last_active = np.zeros(self._cap, np.int64)
+        self.lease_count = np.zeros(self._cap, np.int64)
+        self.used = np.zeros(self._cap, bool)
+        self.names: list[str | None] = [None] * self._cap
+        self._free: list[int] = list(range(self._cap - 1, -1, -1))
+
+    def add(self, name: str, last_active: int, lease_count: int) -> int:
+        if not self._free:
+            old = self._cap
+            self._cap *= 2
+            for col in ("last_active", "lease_count", "used"):
+                arr = getattr(self, col)
+                fresh = np.zeros(self._cap, arr.dtype)
+                fresh[:old] = arr
+                setattr(self, col, fresh)
+            self.names.extend([None] * old)
+            self._free.extend(range(self._cap - 1, old - 1, -1))
+        slot = self._free.pop()
+        self.last_active[slot] = last_active
+        self.lease_count[slot] = lease_count
+        self.used[slot] = True
+        self.names[slot] = name
+        return slot
+
+    def drop(self, slot: int) -> None:
+        self.used[slot] = False
+        self.names[slot] = None
+        self._free.append(slot)
+
+    def touch(self, slot: int, tick: int) -> None:
+        self.last_active[slot] = tick
+
+    def idle_slots(self, tick: int, idle_ticks: int) -> np.ndarray:
+        """Rows whose tenants have not scheduled for ``idle_ticks``."""
+        mask = self.used & (tick - self.last_active >= idle_ticks)
+        return np.flatnonzero(mask)
+
+    def leases_active(self) -> int:
+        return int(self.lease_count[self.used].sum())
 
 
 @dataclasses.dataclass
@@ -83,9 +171,19 @@ class Engine:
         streams are offered freed capacity in — ``"fifo"`` (arrival
         order, head-blocking; the legacy discipline), ``"deadline"``
         (strictest-deadline-first), ``"priority"`` (frequency/priority-
-        weighted), or ``"hybrid"`` (urgent deadlines preempt, utility
-        otherwise).  Every strategy breaks ties by arrival sequence, so
-        equal-utility waiters admit in stable FIFO order.
+        weighted), ``"hybrid"`` (urgent deadlines preempt, utility
+        otherwise), or ``"stall_aware"`` (deadline order while the
+        fabric is healthy, lightest-first once its stall pressure
+        crosses ``STALL_PRESSURE``).  Every strategy breaks ties by
+        arrival sequence, so equal-utility waiters admit in stable FIFO
+        order.
+      control_plane: ``"vector"`` (default) runs admission, expiry, and
+        idle eviction over packed structure-of-arrays state — one numpy
+        lexsort per drain, boolean-mask expiry, an indexed duplicate
+        check — and is bit-identical to ``"scalar"``, the original
+        per-tenant Python path kept as the differential reference
+        (``benchmarks/bench_engine_scale.py`` measures the two against
+        each other; ``tests/test_serving_slo.py`` pins the identity).
       idle_evict_ticks: a tenant with no scheduled step for this many
         engine ticks is *idle*; exhausted admissions reclaim idle
         tenants' leases (teardown INIT scrubs ride the fabric) before
@@ -135,6 +233,7 @@ class Engine:
     sched_policy: str = "arrival"
     admission: str = "queue"
     admission_strategy: str = "fifo"
+    control_plane: str = "vector"
     tenant_queue_depth: int = 8
     idle_evict_ticks: int = 4
     deadline_ticks: int = 0
@@ -146,6 +245,11 @@ class Engine:
         if self.admission not in _ADMISSION:
             raise ValueError(f"unknown admission mode {self.admission!r}; "
                              f"choose from {tuple(_ADMISSION)}")
+        if self.control_plane not in CONTROL_PLANES:
+            raise ValueError(
+                f"unknown control plane {self.control_plane!r}; "
+                f"choose from {CONTROL_PLANES}")
+        self._vec = self.control_plane == "vector"
         # Resolve the drain-order strategy up front so a typo fails at
         # construction, not at the first overloaded tick.
         self._admission_fn = get_admission(self.admission_strategy)
@@ -170,6 +274,18 @@ class Engine:
         self.tenant_queue = AdmissionQueue(
             depth=self.tenant_queue_depth,
             overflow=_ADMISSION[self.admission])
+        # Vectorized control-plane state: the packed SoA mirror of the
+        # tenant queue (rebuilt lazily when the backing list is mutated
+        # from outside the engine), the O(1) queued-name index, and the
+        # SoA table of active tenants.  All engine-internal mutations go
+        # through _q_push/_q_compact, which keep the mirrors exact.
+        self._q_dirty = False
+        self._q_guard = False
+        self._cols = TicketColumns()
+        self._queued_names: set[str] = set()
+        self._table = _TenantTable()
+        self.tenant_queue.items = _ObservedList(
+            self.tenant_queue.items, self._queue_mutated_externally)
         self._tenants: dict[str, _Tenant] = {}
         self._tenant_stalls: dict[str, int] = {}   # per-tenant stall cycles
         self._reclaimed: set[str] = set()  # idle-evicted, owner not yet told
@@ -239,6 +355,60 @@ class Engine:
         self._leaf_cache[batch] = out
         return out
 
+    # -- queue mirrors (vectorized control plane) ---------------------------
+    def _queue_mutated_externally(self) -> None:
+        if not self._q_guard:
+            self._q_dirty = True
+
+    def _q_refresh(self) -> None:
+        """Resynchronize the packed columns and the queued-name index
+        from the queue's backing list after an external mutation."""
+        if not self._q_dirty:
+            return
+        self._cols.rebuild(self.tenant_queue.items)
+        self._queued_names = {tk.name for _at, tk
+                              in self.tenant_queue.items}
+        self._q_dirty = False
+
+    def _q_push(self, at: int, tk: AdmissionTicket) -> None:
+        """Queue one waiter, keeping the SoA mirrors exact."""
+        self._q_guard = True
+        try:
+            self.tenant_queue.push(at, tk)
+        finally:
+            self._q_guard = False
+        if self._vec and not self._q_dirty:
+            self._cols.append(at, tk)
+            self._queued_names.add(tk.name)
+
+    def _q_compact(self, keep: np.ndarray, removed_names) -> None:
+        """Drop the queue rows where ``keep`` is False (one mask pass
+        over the columns, one rebuild of the backing list)."""
+        items = self.tenant_queue.items
+        self._q_guard = True
+        try:
+            items[:] = [it for it, k in zip(items, keep) if k]
+        finally:
+            self._q_guard = False
+        if self._vec and not self._q_dirty:
+            self._cols.compact(keep)
+            self._queued_names.difference_update(removed_names)
+
+    def _queued(self, name: str) -> bool:
+        """Is ``name`` already waiting for admission?  The vector plane
+        answers from the name index; the scalar reference scans the
+        queue (the O(queue)-per-open cost the index replaces)."""
+        if self._vec:
+            self._q_refresh()
+            return name in self._queued_names
+        return any(tk.name == name for _at, tk in self.tenant_queue.items)
+
+    def _context(self) -> AdmissionContext:
+        telemetry = self.fabric.telemetry if self.fabric is not None \
+            else None
+        return AdmissionContext(self._tick, self._klass_admits,
+                                fabric=telemetry)
+
     # -- tenancy ------------------------------------------------------------
     def _evict_idle_tenant(self) -> bool:
         """Reclaim the most-idle tenant's leases (eviction machinery:
@@ -246,8 +416,17 @@ class Engine:
         fabric).  Returns False when no tenant qualifies as idle."""
         if not self.idle_evict_ticks:
             return False
-        idle = [t for t in self._tenants.values()
-                if self._tick - t.last_active >= self.idle_evict_ticks]
+        if self._vec:
+            # One mask over the SoA table; only the idle candidates are
+            # touched per-element (for the exact scalar tie-break).
+            slots = self._table.idle_slots(self._tick,
+                                           self.idle_evict_ticks)
+            if not len(slots):
+                return False
+            idle = [self._tenants[self._table.names[s]] for s in slots]
+        else:
+            idle = [t for t in self._tenants.values()
+                    if self._tick - t.last_active >= self.idle_evict_ticks]
         if not idle:
             return False
         victim = min(idle, key=lambda t: (t.last_active, t.name))
@@ -298,7 +477,7 @@ class Engine:
             raise RuntimeError("track_transfers=False engine has no pool")
         if name in self._tenants:
             raise ValueError(f"tenant {name!r} already active")
-        if any(tk.name == name for _at, tk in self.tenant_queue.items):
+        if self._queued(name):
             raise ValueError(f"tenant {name!r} already queued for admission")
         self._reclaimed.discard(name)      # the name is being reused afresh
         tk = AdmissionTicket(
@@ -316,7 +495,7 @@ class Engine:
                     or self.tenant_queue.full()):
                 self._finish(tk, self._tick, "shed")
                 return None
-            self.tenant_queue.push(self._tick, tk)
+            self._q_push(self._tick, tk)
             return None
         self._register_tenant(name, leases)
         # Immediate admissions are not waiter events: the caller holds
@@ -325,8 +504,9 @@ class Engine:
         return leases
 
     def _register_tenant(self, name: str, leases: list) -> None:
+        slot = self._table.add(name, self._tick, len(leases))
         self._tenants[name] = _Tenant(name=name, leases=leases,
-                                      last_active=self._tick)
+                                      last_active=self._tick, slot=slot)
         self._tenant_stalls[name] = 0
         self.peak_tenants = max(self.peak_tenants, len(self._tenants))
 
@@ -372,6 +552,32 @@ class Engine:
         if notify:
             self._notify_waiter(tk.name, event)
 
+    def _drain_order(self, items, ctx: AdmissionContext) -> list | np.ndarray:
+        """The strategy's admission order over the queued waiters.  The
+        vector plane uses the strategy's attached batched form (one
+        numpy lexsort over the packed columns) when it has one; scalar
+        engines — and strategies registered without a vector form —
+        compute it ticket by ticket.  Either way the permutation is
+        validated before any capacity is offered."""
+        vec = getattr(self._admission_fn, "vector", None)
+        if self._vec and vec is not None:
+            self._q_refresh()
+            order = np.asarray(vec(self._cols, ctx))
+            if (len(order) != len(items)
+                    or not np.array_equal(np.sort(order),
+                                          np.arange(len(items)))):
+                raise ValueError(
+                    f"admission strategy {self.admission_strategy!r} "
+                    f"returned {order!r}, not a permutation of "
+                    f"range({len(items)})")
+            return order
+        order = list(self._admission_fn(items, ctx))
+        if sorted(order) != list(range(len(items))):
+            raise ValueError(
+                f"admission strategy {self.admission_strategy!r} returned "
+                f"{order!r}, not a permutation of range({len(items)})")
+        return order
+
     def _admit_waiting(self) -> None:
         """Offer freed capacity to the waiting streams in strategy order.
 
@@ -381,39 +587,100 @@ class Engine:
         order no matter how the queue list got shuffled).  A waiter that
         does not fit is skipped and keeps its place — unless the strategy
         is ``head_blocking`` (``fifo``), where it ends the drain to
-        preserve strict arrival order."""
+        preserve strict arrival order.
+
+        The vector plane short-circuits the fit test: a lease can only
+        succeed with at least ``len(leaf_specs)`` free banks, so waiters
+        needing more than the live free count are skipped without a
+        ``pool.lease`` exception round-trip, and the drain ends as soon
+        as no remaining waiter could possibly fit — identical outcomes,
+        O(admitted) pool calls instead of O(queue)."""
         items = self.tenant_queue.items
         if not items:
             return
-        ctx = AdmissionContext(self._tick, self._klass_admits)
-        order = list(self._admission_fn(items, ctx))
-        if sorted(order) != list(range(len(items))):
-            raise ValueError(
-                f"admission strategy {self.admission_strategy!r} returned "
-                f"{order!r}, not a permutation of range({len(items)})")
+        ctx = self._context()
+        order = self._drain_order(items, ctx)
+        head_blocking = getattr(self._admission_fn, "head_blocking", False)
         taken = set()
-        for i in order:
-            at, tk = items[i]
-            try:
-                leases = self.pool.lease(tk.name, self._leaf_specs(tk.batch))
-            except RuntimeError:
-                if getattr(self._admission_fn, "head_blocking", False):
-                    break
-                continue
-            taken.add(i)
-            self._register_tenant(tk.name, leases)
-            self._finish(tk, at, "admitted")
+        if self._vec:
+            # Per-waiter bank demand from the packed batch column: probe
+            # the leaf specs once per distinct batch size, not per row.
+            self._q_refresh()
+            uniq, inv = np.unique(self._cols.batch, return_inverse=True)
+            counts = np.array([len(self._leaf_specs(int(b)))
+                               for b in uniq], np.int64)
+            needed = counts[inv]
+            min_needed = int(needed.min())
+            free = self.pool.free_banks()
+            for i in order:
+                i = int(i)
+                if free < min_needed and not head_blocking:
+                    break              # nothing left can possibly fit
+                at, tk = items[i]
+                if needed[i] > free:
+                    # pool.lease would raise: success needs one free
+                    # bank per leaf.  Same outcome, no exception.
+                    if head_blocking:
+                        break
+                    continue
+                try:
+                    leases = self.pool.lease(tk.name,
+                                             self._leaf_specs(tk.batch))
+                except RuntimeError:
+                    if head_blocking:
+                        break
+                    continue
+                free -= len(leases)
+                taken.add(i)
+                self._register_tenant(tk.name, leases)
+                self._finish(tk, at, "admitted")
+        else:
+            for i in order:
+                at, tk = items[i]
+                try:
+                    leases = self.pool.lease(tk.name,
+                                             self._leaf_specs(tk.batch))
+                except RuntimeError:
+                    if head_blocking:
+                        break
+                    continue
+                taken.add(i)
+                self._register_tenant(tk.name, leases)
+                self._finish(tk, at, "admitted")
         if taken:
-            items[:] = [it for i, it in enumerate(items) if i not in taken]
+            keep = np.ones(len(items), bool)
+            keep[list(taken)] = False
+            self._q_compact(keep, {items[i][1].name for i in taken})
 
     def _expire_waiters(self) -> None:
         """Age the tenant queue: shed streams that waited longer than
         ``deadline_ticks`` (their client has given up; holding a place
         would only block younger arrivals behind a corpse) and ticketed
         streams whose own absolute ``deadline`` has passed — each with
-        its one terminal ``"expired"`` event."""
+        its one terminal ``"expired"`` event.  The vector plane finds
+        the expired set with one boolean mask over the packed columns
+        and only touches those rows per-element."""
         items = self.tenant_queue.items
         if not items:
+            return
+        if self._vec:
+            self._q_refresh()
+            cols = self._cols
+            aged = np.zeros(len(items), bool)
+            if self.deadline_ticks:
+                aged = self._tick - cols.at >= self.deadline_ticks
+            late = (cols.deadline >= 0) & (self._tick > cols.deadline)
+            gone = aged | late
+            if not gone.any():
+                return
+            for i in np.flatnonzero(gone):
+                at, tk = items[int(i)]
+                self._finish(tk, at, "expired")
+            self._q_compact(~gone, {items[int(i)][1].name
+                                    for i in np.flatnonzero(gone)})
+            # An expired head may have been the only thing blocking a
+            # smaller waiter that already fits the pool.
+            self._admit_waiting()
             return
         kept = []
         for at, tk in items:
@@ -426,8 +693,6 @@ class Engine:
                 kept.append((at, tk))
         if len(kept) < len(items):
             items[:] = kept
-            # An expired head may have been the only thing blocking a
-            # smaller waiter that already fits the pool.
             self._admit_waiting()
 
     def tenants(self) -> list[str]:
@@ -448,6 +713,7 @@ class Engine:
             raise ValueError(f"tenant {name!r} is not active "
                              "(never opened, or already closed)")
         ten = self._tenants.pop(name)
+        self._table.drop(ten.slot)
         self._tenant_stalls.pop(name, None)
         reqs = teardown_requests(ten.leases)
         self.pool.release(name)
@@ -481,6 +747,7 @@ class Engine:
             return None
         # Leases already on dst_stack were kept in place by the pool.
         ten.leases = self.pool.leases(name)
+        self._table.lease_count[ten.slot] = len(ten.leases)
         reqs = [TransferRequest(
             src=o.home, dst=f.home,
             nbytes=max(o.leaf.lease_bytes, o.leaf.step_bytes, 1),
@@ -513,6 +780,7 @@ class Engine:
                                   max_extra_slots=self.max_extra_slots)
             ten.pos += 1
             ten.last_active = self._tick
+            self._table.touch(ten.slot, self._tick)
         if not reqs:
             return None
         report = self._schedule_batch(reqs)
@@ -625,6 +893,7 @@ class Engine:
         ``repacks`` / ``migrations`` / ``cross_stack`` — scheduled
         cross-stack circuits, nonzero only on a stacked engine), and
         admission health (``admission`` / ``admission_strategy`` /
+        ``control_plane`` — ``"vector"`` or ``"scalar"`` —
         ``sched_policy`` — the fabric's live policy pick —
         ``queued_tenants`` / ``shed_tenants`` / ``tenant_queue_expired``
         / ``idle_evictions`` / ``deadline_misses`` — expired, shed, or
@@ -653,6 +922,7 @@ class Engine:
             "cross_stack": getattr(agg, "n_cross_stack", 0),
             "admission": self.admission,
             "admission_strategy": self.admission_strategy,
+            "control_plane": self.control_plane,
             "sched_policy": self.fabric.effective_policy,
             "queued_tenants": len(self.tenant_queue.items),
             "shed_tenants": self.tenant_queue.n_shed,

@@ -28,9 +28,12 @@ Three building blocks:
   lifetime lapses), observes every terminal admission event through the
   engine's ``waiter_callback``, and returns the stats record
   ``benchmarks/bench_serving_slo.py`` writes into ``BENCH_serving.json``.
-  Each record carries the per-tick conservation ledger
-  (``arrivals == admitted + shed + expired + waiting`` at every tick)
-  that ``tests/test_serving_slo.py`` asserts.
+  ``retry_budget > 0`` closes the loop: shed arrivals re-enter after a
+  seeded exponential backoff (bounded attempts, refreshed deadlines),
+  with the retry/backoff counts in the record.  Each record carries the
+  per-tick conservation ledger (``arrivals == admitted + shed +
+  expired + waiting + retrying`` at every tick) that
+  ``tests/test_serving_slo.py`` asserts.
 
 The default engine under test is model-free: :class:`CacheStub` exposes
 only ``init_caches`` (a KV-ring + state-leaf pair per stream), so the
@@ -186,6 +189,20 @@ class LoadGen:
         self._next_tick = 0
         w = np.array([c.weight for c in mix.classes], float)
         self._class_p = w / w.sum()
+        # Per-class lookup tables for the batched draws: one fancy-index
+        # per annotation instead of one rng call per arrival.
+        self._dl_has = np.array([c.deadline_slack is not None
+                                 for c in mix.classes])
+        self._dl_lo = np.array([c.deadline_slack[0] if c.deadline_slack
+                                else 0 for c in mix.classes], np.int64)
+        self._dl_span = np.array(
+            [c.deadline_slack[1] - c.deadline_slack[0] + 1
+             if c.deadline_slack else 1 for c in mix.classes], np.int64)
+        self._life_lo = np.array([c.lifetime[0] for c in mix.classes],
+                                 np.int64)
+        self._life_span = np.array(
+            [c.lifetime[1] - c.lifetime[0] + 1 for c in mix.classes],
+            np.int64)
 
     def rate_at(self, tick: int) -> float:
         """Instantaneous mean arrival rate at ``tick`` (diurnal ramp
@@ -216,27 +233,37 @@ class LoadGen:
     def arrivals(self, tick: int) -> list[Arrival]:
         """The arrivals landing at ``tick`` (possibly empty).  Must be
         called with strictly increasing ticks — the draw stream is the
-        determinism contract."""
+        determinism contract.
+
+        The tick's annotations are drawn as three batched RNG calls
+        (class indices, deadline uniforms, lifetime uniforms) plus
+        per-class table lookups — not one rng round-trip per arrival —
+        so a burst of hundreds of arrivals costs the same number of
+        generator calls as a quiet tick.  A fixed ``(mix, seed)`` pair
+        still replays the identical trace."""
         if tick < self._next_tick:
             raise ValueError(f"arrivals() must be called in tick order "
                              f"(got {tick} after {self._next_tick - 1})")
         self._next_tick = tick + 1
-        rng = self._rng
-        out = []
-        for _ in range(self._count(tick)):
-            c = self.mix.classes[int(rng.choice(len(self.mix.classes),
-                                                p=self._class_p))]
-            deadline = None
-            if c.deadline_slack is not None:
-                lo, hi = c.deadline_slack
-                deadline = tick + int(rng.integers(lo, hi + 1))
-            lo, hi = c.lifetime
-            out.append(Arrival(
-                name=f"{self.mix.name}-{self._seq}", tick=tick,
-                klass=c.klass, priority=c.priority, deadline=deadline,
-                lifetime=int(rng.integers(lo, hi + 1))))
-            self._seq += 1
-        return out
+        n = self._count(tick)
+        if not n:
+            return []
+        rng, mix = self._rng, self.mix
+        kidx = rng.choice(len(mix.classes), size=n, p=self._class_p)
+        # lo + floor(u * span) is uniform over [lo, hi] inclusive.
+        deadlines = tick + self._dl_lo[kidx] + (
+            rng.random(n) * self._dl_span[kidx]).astype(np.int64)
+        lifetimes = self._life_lo[kidx] + (
+            rng.random(n) * self._life_span[kidx]).astype(np.int64)
+        has_dl = self._dl_has[kidx]
+        seq0 = self._seq
+        self._seq += n
+        return [Arrival(
+            name=f"{mix.name}-{seq0 + j}", tick=tick,
+            klass=mix.classes[k].klass, priority=mix.classes[k].priority,
+            deadline=int(deadlines[j]) if has_dl[j] else None,
+            lifetime=int(lifetimes[j]))
+            for j, k in enumerate(kidx)]
 
 
 class CacheStub:
@@ -276,41 +303,65 @@ def _quantile(samples: list[int], q: float) -> float:
 
 
 def drive(engine: Engine, mix: ArrivalMix | str, ticks: int,
-          seed: int = 0, trace: bool = False) -> dict:
+          seed: int = 0, trace: bool = False, retry_budget: int = 0,
+          backoff_base: int = 1, backoff_cap: int = 16) -> dict:
     """Drive ``engine`` with ``mix`` for ``ticks`` engine ticks.
 
-    Open loop: every generated arrival is offered to ``open_tenant``
-    with its ticket annotations (deadline/priority/klass) regardless of
-    how loaded the engine is; admitted tenants run for their drawn
-    lifetime (their cache traffic scheduled by the engine's per-tick
-    batch) and are then closed, freeing capacity for queued waiters.
-    The engine's ``waiter_callback`` is borrowed for the run (the prior
-    callback is restored on exit) to observe the terminal admission
-    events.
+    Open loop by default: every generated arrival is offered to
+    ``open_tenant`` with its ticket annotations (deadline/priority/
+    klass) regardless of how loaded the engine is; admitted tenants run
+    for their drawn lifetime (their cache traffic scheduled by the
+    engine's per-tick batch) and are then closed, freeing capacity for
+    queued waiters.  The engine's ``waiter_callback`` is borrowed for
+    the run (the prior callback is restored on exit) to observe the
+    terminal admission events.
+
+    ``retry_budget > 0`` closes the loop: a *shed* arrival re-enters
+    after a seeded exponential backoff — attempt ``k`` waits a uniform
+    ``1..min(backoff_cap, backoff_base * 2**k)`` ticks, drawn from a
+    dedicated RNG stream so enabling retries never perturbs the arrival
+    trace — up to ``retry_budget`` re-attempts before the shed is
+    final.  A retried ticket's admission deadline is refreshed by the
+    arrival's original slack; queue expiries never retry (the client's
+    deadline has passed — there is nothing left to serve).
+
+    The per-tick bookkeeping is O(events), not O(live tenants): admitted
+    streams land in a due-tick completion bucket (closed when their
+    lifetime lapses) instead of a per-tenant countdown scan, and
+    terminal outcomes are counters — the harness itself stays off the
+    profile at the tenant counts the vectorized control plane serves.
 
     Returns the stats record: totals (``arrivals`` / ``admitted`` /
     ``shed`` / ``expired`` / ``waiting`` / ``completed``), rates
     (``shed_rate`` / ``expiry_rate``), admission-latency percentiles in
-    ticks (``p50_wait`` / ``p99_wait``), the SLO ledger
-    (``deadline_arrivals`` / ``deadline_misses`` / ``miss_rate``), and
-    fabric-side concurrency (``circuits_per_window`` = average circuits
-    in flight per TDM window, ``max_inflight``, ``stall_cycles``,
-    ``requests`` / ``scheduled``).  With ``trace=True`` the record also
-    carries ``per_tick`` — the conservation ledger
-    ``(tick, arrivals, admitted, shed, expired, waiting)`` the property
-    suite asserts ``arrivals == admitted + shed + expired + waiting``
-    over.
+    ticks (``p50_wait`` / ``p99_wait``, measured from the *original*
+    arrival tick, so a retried admit reports the client-experienced
+    wait), the SLO ledger (``deadline_arrivals`` / ``deadline_misses``
+    / ``miss_rate``), the closed-loop ledger (``retry_budget`` /
+    ``retries`` — backoff re-entries scheduled — / ``retry_admitted``
+    — streams admitted only after retrying — / ``backoff_ticks`` —
+    total ticks spent in backoff — / ``retrying`` — still in backoff at
+    run end), and fabric-side concurrency (``circuits_per_window`` =
+    average circuits in flight per TDM window, ``max_inflight``,
+    ``stall_cycles``, ``requests`` / ``scheduled``).  With
+    ``trace=True`` the record also carries ``per_tick`` — the
+    conservation ledger ``(tick, arrivals, admitted, shed, expired,
+    waiting, retrying)`` the property suite asserts ``arrivals ==
+    admitted + shed + expired + waiting + retrying`` over.
     """
     if isinstance(mix, str):
         mix = get_mix(mix)
     gen = LoadGen(mix, seed)
-    by_name: dict[str, Arrival] = {}
-    admitted: dict[str, int] = {}      # name -> tick admitted
-    remaining: dict[str, int] = {}     # name -> service ticks left
-    shed: set[str] = set()
-    expired: set[str] = set()
+    retry_rng = np.random.default_rng(
+        (int(seed), zlib.crc32(mix.name.encode()), 0xB0FF))
+    pending: dict[str, Arrival] = {}   # queued or in backoff
+    attempts: dict[str, int] = {}      # retries used so far
+    in_backoff: set[str] = set()
+    due: dict[int, list[str]] = {}     # close tick -> admitted names
+    retry_at: dict[int, list[str]] = {}
+    n_arrivals = n_admitted = n_shed = n_expired = completed = 0
+    n_dead = n_retries = n_retry_admitted = backoff_ticks = 0
     waits: list[int] = []
-    completed = 0
     events: list[tuple[str, str]] = []
     prior_cb = engine.waiter_callback
 
@@ -319,75 +370,104 @@ def drive(engine: Engine, mix: ArrivalMix | str, ticks: int,
         if prior_cb is not None:
             prior_cb(name, ev)
 
+    def admit(name: str, t: int) -> None:
+        nonlocal n_admitted, n_retry_admitted
+        a = pending.pop(name, None)
+        if a is None:
+            return
+        n_admitted += 1
+        if attempts.pop(name, 0):
+            n_retry_admitted += 1
+        waits.append(t - a.tick)
+        due.setdefault(t + a.lifetime, []).append(name)
+
+    def fold(t: int) -> None:
+        nonlocal n_shed, n_expired, n_retries, backoff_ticks
+        for name, ev in events:
+            if ev == "admitted":
+                admit(name, t)
+            elif ev == "shed":
+                used = attempts.get(name, 0)
+                if used < retry_budget:
+                    window = min(backoff_cap, backoff_base * 2 ** used)
+                    delay = 1 + int(retry_rng.integers(0, max(1, window)))
+                    attempts[name] = used + 1
+                    n_retries += 1
+                    backoff_ticks += delay
+                    retry_at.setdefault(t + delay, []).append(name)
+                    in_backoff.add(name)
+                else:
+                    n_shed += 1
+                    pending.pop(name, None)
+                    attempts.pop(name, None)
+            elif ev == "expired":
+                n_expired += 1
+                pending.pop(name, None)
+                attempts.pop(name, None)
+        events.clear()
+
     engine.waiter_callback = recorder
     per_tick = []
     try:
         for t in range(ticks):
+            # Backed-off sheds re-enter first (deadline refreshed by the
+            # arrival's original slack), then the tick's fresh arrivals.
+            for name in retry_at.pop(t, ()):
+                in_backoff.discard(name)
+                a = pending[name]
+                deadline = (None if a.deadline is None
+                            else t + (a.deadline - a.tick))
+                if engine.open_tenant(name, a.batch, deadline=deadline,
+                                      priority=a.priority,
+                                      klass=a.klass) is not None:
+                    admit(name, t)
             for a in gen.arrivals(t):
-                by_name[a.name] = a
-                leases = engine.open_tenant(
-                    a.name, a.batch, deadline=a.deadline,
-                    priority=a.priority, klass=a.klass)
-                if leases is not None:           # admitted on the spot
-                    admitted[a.name] = t
-                    remaining[a.name] = a.lifetime
-                    waits.append(0)
-            engine.schedule_tick()               # ages + drains the queue
-            # Fold the tick's terminal events into the ledger.
-            for name, ev in events:
-                if ev == "admitted" and name not in admitted:
-                    a = by_name[name]
-                    admitted[name] = t
-                    remaining[name] = a.lifetime
-                    waits.append(t - a.tick)
-                elif ev == "shed":
-                    shed.add(name)
-                elif ev == "expired":
-                    expired.add(name)
-            events.clear()
-            # Retire tenants whose service lifetime has lapsed (tenants
-            # admitted this tick start counting down next tick).
-            for name in list(remaining):
-                if admitted.get(name) != t:      # admitted before this tick
-                    remaining[name] -= 1
-            for name in [n for n, left in remaining.items() if left <= 0]:
-                del remaining[name]
-                engine.close_tenant(name)        # may admit waiters ...
+                n_arrivals += 1
+                n_dead += a.deadline is not None
+                pending[a.name] = a
+                if engine.open_tenant(
+                        a.name, a.batch, deadline=a.deadline,
+                        priority=a.priority, klass=a.klass) is not None:
+                    admit(a.name, t)         # admitted on the spot
+            engine.schedule_tick()           # ages + drains the queue
+            fold(t)
+            # Retire tenants whose service lifetime lapsed this tick
+            # (admitted at t with lifetime L -> closed at t + L).
+            for name in due.pop(t, ()):
+                engine.close_tenant(name)    # may admit waiters ...
                 completed += 1
-            for name, ev in events:              # ... observed here
-                if ev == "admitted" and name not in admitted:
-                    a = by_name[name]
-                    admitted[name] = t
-                    remaining[name] = a.lifetime
-                    waits.append(t - a.tick)
-            events.clear()
+            fold(t)                          # ... observed here
             if trace:
                 per_tick.append({
-                    "tick": t, "arrivals": len(by_name),
-                    "admitted": len(admitted), "shed": len(shed),
-                    "expired": len(expired),
-                    "waiting": len(engine.tenant_queue.items)})
+                    "tick": t, "arrivals": n_arrivals,
+                    "admitted": n_admitted, "shed": n_shed,
+                    "expired": n_expired,
+                    "waiting": len(engine.tenant_queue.items),
+                    "retrying": len(in_backoff)})
     finally:
         engine.waiter_callback = prior_cb
     tel = engine.transfer_telemetry()
     rep = engine.last_report
-    n_arr = len(by_name)
-    n_dead = sum(1 for a in by_name.values() if a.deadline is not None)
     misses = tel.get("deadline_misses", 0) if tel else 0
     out = {
         "mix": mix.name, "strategy": engine.admission_strategy,
         "seed": seed, "ticks": ticks,
-        "arrivals": n_arr, "admitted": len(admitted), "shed": len(shed),
-        "expired": len(expired),
+        "arrivals": n_arrivals, "admitted": n_admitted, "shed": n_shed,
+        "expired": n_expired,
         "waiting": len(engine.tenant_queue.items),
         "completed": completed,
-        "shed_rate": len(shed) / n_arr if n_arr else 0.0,
-        "expiry_rate": len(expired) / n_arr if n_arr else 0.0,
+        "shed_rate": n_shed / n_arrivals if n_arrivals else 0.0,
+        "expiry_rate": n_expired / n_arrivals if n_arrivals else 0.0,
         "p50_wait": _quantile(waits, 0.5),
         "p99_wait": _quantile(waits, 0.99),
         "deadline_arrivals": n_dead,
         "deadline_misses": misses,
         "miss_rate": misses / n_dead if n_dead else 0.0,
+        "retry_budget": retry_budget,
+        "retries": n_retries,
+        "retry_admitted": n_retry_admitted,
+        "backoff_ticks": backoff_ticks,
+        "retrying": len(in_backoff),
         "circuits_per_window": 0.0 if rep is None else rep.avg_inflight,
         "max_inflight": 0 if rep is None else rep.max_inflight,
         "stall_cycles": 0 if rep is None else rep.stall_cycles,

@@ -184,10 +184,12 @@ class BankPool:
                 and (allowed is None or b in allowed)]
 
     # -- candidate orders per policy ---------------------------------------
-    def _spread_order(self, seq: int, i: int) -> list[int]:
+    def _spread_order(self, seq: int, i: int):
+        # Lazy: callers take the first free candidate, so materializing
+        # the full rotation per leaf is O(pool) work for nothing.
         n = len(self._pool)
         start = (seq * 13 + i * 37 + 11) % n
-        return [self._pool[(start + k) % n] for k in range(n)]
+        return (self._pool[(start + k) % n] for k in range(n))
 
     def _partition_candidate(self, tenant: str,
                              allowed: set[int] | None = None) -> int | None:
@@ -256,6 +258,14 @@ class BankPool:
                 raise ValueError(f"unknown stack indices {sorted(bad)} "
                                  f"(pool has {len(self._meshes)} stacks)")
             allowed = {b for b in self._pool if self.stack_of(b) in want}
+        # Exhaustion short-circuit: success needs one free bank per leaf
+        # (necessary under every policy — the all-or-nothing rollback
+        # below would fire anyway), so an infeasible lease fails in O(1)
+        # instead of scanning the pool per leaf first.
+        if allowed is None and self.free_banks() < len(leaves):
+            raise RuntimeError(f"bank pool exhausted leasing for "
+                               f"{tenant!r} ({len(self._owner)}/"
+                               f"{len(self._pool)} banks leased)")
         out = []
         try:
             for i, leaf in enumerate(leaves):

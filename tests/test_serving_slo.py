@@ -1,14 +1,19 @@
 """Property suite for the SLO serving harness and admission strategies.
 
-Pins the contracts ``benchmarks/bench_serving_slo.py`` measures:
-load-generator determinism under a fixed seed, the per-tick conservation
-invariant ``arrivals == admitted + shed + expired + waiting``, the
+Pins the contracts ``benchmarks/bench_serving_slo.py`` and
+``benchmarks/bench_engine_scale.py`` measure: load-generator determinism
+under a fixed seed, the per-tick conservation invariant
+``arrivals == admitted + shed + expired + waiting (+ retrying)``, the
 strictest-deadline-first dominance over FIFO on deadline-miss rate, and
 ``Engine.migrate_tenant`` mid-burst preserving tenant state and
-telemetry.  Plus the two admission-layer regressions this PR fixes:
-stable FIFO tie-breaking under permuted queue order, and the
-exactly-once terminal ``waiter_callback`` event (``admitted`` xor
-``expired`` xor ``shed``) even after a partial idle-lease reclaim.
+telemetry.  Plus the admission-layer regressions: stable FIFO
+tie-breaking under permuted queue order, the exactly-once terminal
+``waiter_callback`` event (``admitted`` xor ``expired`` xor ``shed``)
+even after a partial idle-lease reclaim, and — for the vectorized
+control plane — the differential harness asserting every registered
+strategy's batched order, and the whole vector engine's observable
+behavior, is byte-identical to the scalar reference across mixes,
+seeds, and permuted queue states.
 """
 import collections
 
@@ -18,16 +23,17 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.topology import make_topology
-from repro.serving.admission import (HYBRID_SLACK, AdmissionContext,
-                                     AdmissionTicket, get_admission,
+from repro.serving.admission import (HYBRID_SLACK, STALL_PRESSURE,
+                                     AdmissionContext, AdmissionTicket,
+                                     TicketColumns, get_admission,
                                      register_admission,
                                      registered_admissions,
                                      unregister_admission)
-from repro.serving.engine import Engine
+from repro.serving.engine import CONTROL_PLANES, Engine
 from repro.serving.loadgen import (MIXES, CacheStub, LoadGen, drive,
                                    get_mix, make_slo_engine)
 
-STRATEGIES = ("fifo", "deadline", "priority", "hybrid")
+STRATEGIES = ("fifo", "deadline", "priority", "hybrid", "stall_aware")
 
 
 def _trace(mix, seed, ticks):
@@ -208,6 +214,172 @@ def test_equal_utility_waiters_admit_in_fifo_order(seed):
         assert admitted == [f"w{k}" for k in range(4)], strategy
 
 
+# -- differential: vectorized control plane == scalar reference --------------
+
+def _random_waiters(rng, n):
+    """A permuted queue of n tickets with random annotations (seqs
+    unique, list order scrambled — any strategy must ignore it)."""
+    waiters = [(int(rng.integers(0, 64)), AdmissionTicket(
+        name=f"d{i}", batch=int(rng.integers(1, 9)),
+        klass=f"k{int(rng.integers(0, 5))}",
+        priority=float(rng.choice([0.25, 1.0, 2.0, 4.0])),
+        deadline=(None if rng.random() < 0.3
+                  else int(rng.integers(0, 200))),
+        seq=i)) for i in range(n)]
+    return [waiters[int(i)] for i in rng.permutation(n)]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_vector_order_matches_scalar_for_every_strategy(seed):
+    rng = np.random.default_rng(seed)
+    waiters = _random_waiters(rng, int(rng.integers(1, 90)))
+    cols = TicketColumns()
+    cols.rebuild(waiters)
+    admits = {f"k{i}": int(rng.integers(0, 20)) for i in range(5)}
+    tick = int(rng.integers(0, 200))
+    for fab in ({}, {"stall_cycles": 10 * int(STALL_PRESSURE) + 999,
+                     "scheduled": 10}):
+        for name in registered_admissions():
+            fn = get_admission(name)
+            if fn.vector is None:
+                continue
+            ref = list(fn(waiters, AdmissionContext(tick, admits,
+                                                    fabric=dict(fab))))
+            vec = [int(x) for x in fn.vector(
+                cols, AdmissionContext(tick, admits, fabric=dict(fab)))]
+            assert vec == ref, (name, fab)
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_vector_engine_behavior_identical_to_scalar(strategy):
+    for mix in ("deadline_heavy", "bursty"):
+        for seed in (0, 9):
+            runs = {}
+            for plane in CONTROL_PLANES:
+                eng = make_slo_engine(strategy, control_plane=plane)
+                runs[plane] = (drive(eng, mix, ticks=40, seed=seed,
+                                     trace=True),
+                               eng.transfer_telemetry())
+            vec_stats, vec_tel = runs["vector"]
+            sca_stats, sca_tel = runs["scalar"]
+            assert vec_stats == sca_stats, (strategy, mix, seed)
+            vec_tel.pop("control_plane"), sca_tel.pop("control_plane")
+            assert vec_tel == sca_tel, (strategy, mix, seed)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_permuted_queue_drain_identical_across_planes(seed):
+    for strategy in STRATEGIES:
+        orders = {}
+        for plane in CONTROL_PLANES:
+            eng = make_slo_engine(strategy, tenant_queue_depth=16,
+                                  deadline_ticks=0, control_plane=plane)
+            active = _fill_pool(eng)
+            rng = np.random.default_rng(seed)   # same draws per plane
+            for k in range(10):
+                assert eng.open_tenant(
+                    f"w{k}", batch=1,
+                    deadline=(int(rng.integers(1, 60))
+                              if rng.random() < 0.7 else None),
+                    priority=float(rng.choice([0.5, 1.0, 2.0])),
+                    klass=f"k{int(rng.integers(0, 3))}") is None
+            perm = rng.permutation(len(eng.tenant_queue.items))
+            eng.tenant_queue.items[:] = [eng.tenant_queue.items[i]
+                                         for i in perm]
+            admitted = []
+            eng.waiter_callback = (lambda n, ev, a=admitted:
+                                   a.append(n) if ev == "admitted" else None)
+            for name in active:
+                eng.close_tenant(name)
+            orders[plane] = admitted
+        assert orders["vector"] == orders["scalar"], strategy
+
+
+def test_unknown_control_plane_rejected_at_construction():
+    with pytest.raises(ValueError, match="control plane"):
+        make_slo_engine("fifo", control_plane="simd")
+
+
+def test_custom_scalar_strategy_runs_on_vector_plane():
+    # A registered strategy without a vector form must still drive a
+    # vector-plane engine (scalar fallback inside _drain_order).
+    @register_admission("lifo_vecless")
+    def lifo(waiters, ctx):
+        return sorted(range(len(waiters)),
+                      key=lambda i: -waiters[i][1].seq)
+    try:
+        eng = make_slo_engine("lifo_vecless", control_plane="vector")
+        stats = drive(eng, "bursty", ticks=24, seed=1)
+        assert stats["admitted"] > 0
+    finally:
+        unregister_admission("lifo_vecless")
+
+
+# -- stall_aware: telemetry-coupled admission --------------------------------
+
+def test_stall_aware_goes_lightest_first_only_under_stall():
+    fn = get_admission("stall_aware")
+    waiters = [(0, AdmissionTicket("heavy", 8, deadline=5, seq=0)),
+               (0, AdmissionTicket("light", 1, deadline=50, seq=1))]
+    cols = TicketColumns()
+    cols.rebuild(waiters)
+    healthy = {"stall_cycles": 0, "scheduled": 10}
+    stalled = {"stall_cycles": 100, "scheduled": 10}
+    assert list(fn(waiters, AdmissionContext(0, {}, fabric=healthy))) \
+        == [0, 1]                      # deadline order while healthy
+    assert list(fn(waiters, AdmissionContext(0, {}, fabric=stalled))) \
+        == [1, 0]                      # lightest-first once stalling
+    assert [int(x) for x in fn.vector(
+        cols, AdmissionContext(0, {}, fabric=stalled))] == [1, 0]
+
+
+def test_admission_context_resolves_fabric_telemetry_lazily():
+    calls = []
+
+    def telemetry():
+        calls.append(1)
+        return {"stall_cycles": 4, "scheduled": 2}
+
+    ctx = AdmissionContext(0, {}, fabric=telemetry)
+    assert not calls, "telemetry must not be pulled before first access"
+    assert ctx.stall_pressure() == 2.0
+    assert ctx.stall_pressure() == 2.0
+    assert calls == [1], "telemetry snapshot must resolve exactly once"
+    assert AdmissionContext(0, {}).stall_pressure() == 0.0
+
+
+# -- closed-loop clients: retry with seeded backoff --------------------------
+
+def test_closed_loop_retries_conserve_and_reduce_final_sheds():
+    base = drive(make_slo_engine("deadline"), "deadline_heavy",
+                 ticks=80, seed=5)
+    loop = drive(make_slo_engine("deadline"), "deadline_heavy",
+                 ticks=80, seed=5, trace=True, retry_budget=3)
+    assert loop["arrivals"] == base["arrivals"], \
+        "enabling retries must not perturb the arrival trace"
+    assert loop["retry_budget"] == 3
+    assert loop["retries"] > 0 and loop["retry_admitted"] > 0
+    assert loop["backoff_ticks"] >= loop["retries"]
+    assert loop["shed"] < base["shed"]
+    for row in loop["per_tick"]:
+        assert row["arrivals"] == (row["admitted"] + row["shed"]
+                                   + row["expired"] + row["waiting"]
+                                   + row["retrying"]), row
+    again = drive(make_slo_engine("deadline"), "deadline_heavy",
+                  ticks=80, seed=5, trace=True, retry_budget=3)
+    assert again == loop, "closed-loop drive must be seed-deterministic"
+
+
+def test_open_loop_drive_reports_zero_retry_ledger():
+    stats = drive(make_slo_engine("fifo"), "poisson", ticks=30, seed=2,
+                  trace=True)
+    assert stats["retries"] == stats["retry_admitted"] == 0
+    assert stats["backoff_ticks"] == stats["retrying"] == 0
+    assert all(row["retrying"] == 0 for row in stats["per_tick"])
+
+
 # -- S2: exactly one terminal event ------------------------------------------
 
 class _WideStub:
@@ -359,11 +531,27 @@ def test_migrate_tenant_mid_burst_preserves_state_and_telemetry():
 @pytest.mark.soak
 @pytest.mark.parametrize("mix", sorted(MIXES))
 def test_soak_long_runs_conserve_and_stay_bounded(mix):
+    # 8x the PR-7 tick budget: the vectorized control plane and the
+    # O(events) drive loop made the longer horizon affordable.
     eng = make_slo_engine("hybrid")
-    stats = drive(eng, mix, ticks=1500, seed=11, trace=True)
+    stats = drive(eng, mix, ticks=12000, seed=11, trace=True)
     for row in stats["per_tick"]:
         assert row["arrivals"] == (row["admitted"] + row["shed"]
-                                   + row["expired"] + row["waiting"]), row
-    assert stats["arrivals"] > 1000
+                                   + row["expired"] + row["waiting"]
+                                   + row["retrying"]), row
+    assert stats["arrivals"] > 10000
     assert len(eng.reports) <= eng.keep_reports
     assert len(eng.tenant_queue.wait_samples) <= eng.tenant_queue.keep_waits
+
+
+@pytest.mark.soak
+def test_soak_closed_loop_retries_conserve_at_length():
+    eng = make_slo_engine("stall_aware")
+    stats = drive(eng, "deadline_heavy", ticks=8000, seed=13, trace=True,
+                  retry_budget=4)
+    for row in stats["per_tick"]:
+        assert row["arrivals"] == (row["admitted"] + row["shed"]
+                                   + row["expired"] + row["waiting"]
+                                   + row["retrying"]), row
+    assert stats["retries"] > 0
+    assert stats["arrivals"] > 10000
